@@ -1,0 +1,45 @@
+"""The paper's engine as a training-telemetry monitor: detect a silent loss
+anomaly with matrix-profile discord discovery (threshold alarms miss it
+because the trace also drifts and oscillates).
+
+    PYTHONPATH=src python examples/anomaly_monitor.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.monitor import TelemetryMonitor
+
+
+def main():
+    rng = np.random.default_rng(0)
+    steps = 600
+    # realistic post-warmup loss telemetry: mild decay + LR-schedule
+    # oscillation + noise (monitors attach after the steep warmup phase)
+    t = np.arange(steps)
+    loss = (2.2 * 0.9995 ** t + 0.05 * np.sin(t / 7.0)
+            + 0.02 * rng.normal(size=steps))
+    # silent data corruption: a small shape/level anomaly
+    loss[400:424] += 0.12 * np.sin(t[400:424] * 2.1)
+
+    mon = TelemetryMonitor(window=24, min_history=128, zscore_alarm=3.0)
+    mon.extend(loss)
+    hits = mon.scan(top_k=3)
+    print(f"scanned {steps} steps of loss telemetry")
+    for h in hits:
+        print(f"  DISCORD at step {h.position} (z={h.zscore:.1f}, "
+              f"dist={h.score:.3f})")
+    assert hits and min(abs(h.position - 400) for h in hits) < 30, hits
+    print("OK — corruption window (planted at step 400) flagged.")
+
+    mot = mon.motif()
+    print(f"most-repeated telemetry pattern at steps {mot} "
+          f"(the LR oscillation period)")
+
+
+if __name__ == "__main__":
+    main()

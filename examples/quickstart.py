@@ -1,0 +1,61 @@
+"""Quickstart: exact matrix profile on a synthetic ECG-like series.
+
+Finds the planted motif pair and the planted discord using both the
+vectorized JAX engine and the NATSA Pallas kernel (interpret mode on CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.matrix_profile import matrix_profile, top_discords, top_motif
+from repro.data import pipeline
+from repro.kernels import ops
+
+
+def main():
+    n, m = 6000, 120
+    # smooth aperiodic background (low-pass random walk)
+    rng = np.random.default_rng(5)
+    walk = np.cumsum(rng.normal(size=n + 40))
+    ts = np.convolve(walk, np.ones(41) / 41, mode="valid")[:n].astype(np.float32)
+    # motif: an exactly repeated chirp burst at 800 and 4200
+    t = np.linspace(0, 1, m)
+    pattern = (np.sin(2 * np.pi * (2 * t + 6 * t * t)) * 3
+               + 0.05 * np.random.default_rng(3).normal(size=m)).astype(np.float32)
+    ts[800:800 + m] = pattern
+    ts[4200:4200 + m] = pattern
+    # discord: a shape anomaly (signal replaced by noise for one window)
+    ts[2600:2600 + m] = ts[2600] + 0.5 * np.random.default_rng(9).normal(
+        size=m).astype(np.float32)
+
+    print(f"series n={n}, window m={m}")
+
+    profile, index = matrix_profile(ts, m)
+    i, j = top_motif(profile, index)
+    print(f"[engine] top motif pair: ({int(i)}, {int(j)})  "
+          f"(planted at 800 / 4200)")
+    disc = top_discords(profile, index, 3, exclusion=m)
+    print(f"[engine] top-3 discords: {[int(d) for d in disc]}  "
+          f"(noise window planted at ~2600)")
+
+    kp, ki = ops.natsa_matrix_profile(ts, m, it=256, dt=16)
+    err = np.abs(np.asarray(kp) - np.asarray(profile))
+    err = err[np.isfinite(err)]
+    print(f"[pallas kernel, interpret] max |Δ| vs engine: {err.max():.2e}")
+
+    a, b = top_motif(kp, ki)
+    print(f"[pallas kernel] top motif pair: ({int(a)}, {int(b)})")
+    pair = sorted((int(i), int(j)))
+    assert abs(pair[0] - 800) < 40 and abs(pair[1] - 4200) < 40, pair
+    assert any(abs(int(d) - 2600) < m for d in disc), [int(d) for d in disc]
+    print("OK — motif and discord recovered.")
+
+
+if __name__ == "__main__":
+    main()

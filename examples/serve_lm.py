@@ -1,0 +1,23 @@
+"""Batched serving demo: prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-7b
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    args = ap.parse_args()
+    from repro.launch import serve
+    serve.main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "12", "--gen", "12"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end training driver: a small dense LM trained for a few hundred
+steps on CPU with checkpoint/restart and the NATSA telemetry monitor
+attached. (The 1-core CPU container sizes this at ~17M params; the same
+driver runs the full assigned configs on a real mesh — see launch/train.py.)
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 150]
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.configs import llama3_8b
+    from repro.launch import train
+
+    base = llama3_8b.config()
+    small = dataclasses.replace(
+        base, n_layers=6, d_model=384, n_heads=6, n_kv_heads=3, head_dim=64,
+        d_ff=1152, vocab_size=16384, dtype=jnp.float32, q_chunk=128,
+        remat=False, name="llama3-mini")
+    configs.REGISTRY["llama3-mini"] = type(
+        "M", (), {"config": staticmethod(lambda: small),
+                  "smoke": staticmethod(lambda: small)})
+
+    loss = train.main([
+        "--arch", "llama3-mini", "--smoke",
+        "--steps", str(args.steps), "--batch", "4", "--seq", "96",
+        "--lr", "3e-3", "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50", "--log-every", "20",
+    ])
+    assert loss < 6.5, f"loss did not improve enough: {loss}"  # corpus entropy floor ~6.0
+    print(f"final loss {loss:.3f} (from ~9.7 at init) — learned the "
+          f"synthetic corpus; checkpoints in {args.ckpt_dir}")
+    # restart demo: resume from the written checkpoint for a few steps
+    loss2 = train.main([
+        "--arch", "llama3-mini", "--smoke",
+        "--steps", str(args.steps + 10), "--batch", "4", "--seq", "96",
+        "--lr", "3e-3", "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50", "--log-every", "5",
+    ])
+    print(f"restart-from-checkpoint OK (resumed and reached {loss2:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — NATSA-on-TPU: near-data-processing-inspired JAX framework.
+
+Layers: core (matrix-profile engine), kernels (Pallas), models (assigned
+architecture zoo), launch (mesh/dryrun/train/serve), plus substrate
+(data/optim/checkpoint/utils).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,114 @@
+"""Atomic npz pytree checkpoints with keep-k retention and restart.
+
+Orbax-free by design (offline container); the layout is the standard
+production shape: step-numbered directories, atomic rename commit, a
+LATEST pointer written last, corrupt/partial checkpoints ignored on
+restore. Works for params / optimizer state / scheduler state alike
+(anything jax.tree-flattenable with array leaves).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3,
+         metadata: dict | None = None) -> str:
+    """Atomically write checkpoint `step`; prune to the newest `keep`."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        arrays = _flatten_with_paths(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "metadata": metadata or {},
+                       "keys": sorted(arrays)}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(directory, "LATEST.tmp"),
+               os.path.join(directory, "LATEST"))
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = all_steps(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d{10})", name)
+        if m and os.path.exists(os.path.join(directory, name, "meta.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    """Prefer the LATEST pointer; fall back to scanning (pointer may be
+    stale if a node died mid-commit — scanning skips partial dirs)."""
+    steps = all_steps(directory)
+    ptr = os.path.join(directory, "LATEST")
+    if os.path.exists(ptr):
+        try:
+            with open(ptr) as f:
+                s = int(f.read().strip())
+            if s in steps:
+                return s
+        except (ValueError, OSError):
+            pass
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, tree_like, *, step: int | None = None):
+    """Restore into the structure of `tree_like`. Returns (tree, step,
+    metadata); raises FileNotFoundError if no usable checkpoint exists."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    z = np.load(os.path.join(path, "arrays.npz"))
+    arrays = {k: z[k] for k in z.files}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(x, "key", getattr(x, "idx", x)))
+                       for x in p)
+        a = arrays[key]
+        if hasattr(leaf, "dtype"):
+            a = a.astype(leaf.dtype)
+        leaves.append(a)
+    return (jax.tree_util.tree_unflatten(treedef, leaves), step,
+            meta.get("metadata", {}))

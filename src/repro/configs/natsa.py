@@ -1,0 +1,25 @@
+"""Paper workloads: NATSA/ICCD'20 evaluates matrix profile on series of
+2^16..2^19 samples with windows in the hundreds. These drive benchmarks/
+and examples/; reduced sizes keep the CPU container tractable."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NatsaWorkload:
+    name: str
+    n: int
+    window: int
+
+
+PAPER_WORKLOADS = (
+    NatsaWorkload("seismology-64k", 65536, 256),
+    NatsaWorkload("epilepsy-128k", 131072, 128),
+    NatsaWorkload("ecg-256k", 262144, 512),
+    NatsaWorkload("power-512k", 524288, 1024),
+)
+
+BENCH_WORKLOADS = (
+    NatsaWorkload("bench-4k", 4096, 64),
+    NatsaWorkload("bench-8k", 8192, 128),
+    NatsaWorkload("bench-16k", 16384, 128),
+)

@@ -1,0 +1,6 @@
+"""Core NATSA engine: matrix profile, partitioning, anytime scheduling."""
+
+from repro.core.matrix_profile import (  # noqa: F401
+    ProfileState, matrix_profile, top_discords, top_motif,
+)
+from repro.core.zstats import ZStats, compute_stats, corr_to_dist  # noqa: F401

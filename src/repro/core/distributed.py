@@ -1,0 +1,77 @@
+"""Multi-device matrix profile via shard_map — NATSA PUs ≙ mesh devices.
+
+Each worker (device along the `workers` mesh axis) executes one equal-work
+diagonal chunk per round; the global profile is merged with an argmax-carrying
+all-reduce (`pmax` on correlation + index recovery), which is exactly NATSA's
+cheap "merge local profiles" step — O(l) traffic per worker per merge,
+independent of the O(l^2/P) compute per chunk.
+
+Chunks are equal-WORK, not equal-diagonal-count (long diagonals live at small
+k), so workers loop a common static band count and mask bands past their own
+chunk end — the masked bands are the load-imbalance the paper's partitioner
+removes, and `tests/test_partition.py` property-tests that the masked
+fraction stays small.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.matrix_profile import (
+    DEFAULT_RESEED, NEG, ProfileState, band_rowmax, centered_windows,
+)
+from repro.core.zstats import ZStats
+
+
+def pmax_profile(state: ProfileState, axis: str) -> ProfileState:
+    """All-reduce a ProfileState across `axis` keeping argmax indices."""
+    gmax = jax.lax.pmax(state.corr, axis)
+    # recover the index of the winner; ties -> highest index (deterministic)
+    cand = jnp.where(state.corr >= gmax, state.index, -1)
+    gidx = jax.lax.pmax(cand, axis)
+    return ProfileState(corr=gmax, index=gidx)
+
+
+def worker_chunk(stats: ZStats, k0: jax.Array, k1: jax.Array,
+                 n_bands: int, band: int,
+                 reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+    """Row-max over band-aligned diagonals [k0, k1), at most n_bands bands."""
+    l = stats.n_subsequences
+    wc = centered_windows(stats) if reseed_every is not None else None
+
+    def body(state: ProfileState, b):
+        start = k0 + b * band
+        corr, idx = band_rowmax(stats, start, band,
+                                reseed_every=reseed_every, windows_c=wc)
+        corr = jnp.where(start < k1, corr, NEG)
+        return state.merge(ProfileState(corr, idx)), None
+
+    init = ProfileState.empty(l)
+    state, _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return state
+
+
+def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
+    """SPMD function for one anytime round.
+
+    Signature: (stats, running_profile, k0s (P,), k1s (P,)) -> merged profile.
+    Idle workers pass k0 == k1 (empty chunk). Stats are replicated — they are
+    O(n); the implicit distance matrix is O(n^2). Shipping the small streams
+    to every worker instead of partitioning the matrix is the NDP move.
+    """
+
+    def per_worker(stats: ZStats, running: ProfileState, k0_local, k1_local):
+        local = worker_chunk(stats, k0_local[0], k1_local[0], n_bands, band)
+        return pmax_profile(running.merge(local), axis)
+
+    shmapped = jax.shard_map(
+        per_worker, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(shmapped)

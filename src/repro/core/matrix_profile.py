@@ -1,0 +1,284 @@
+"""Vectorized diagonal-band matrix-profile engine (pure JAX).
+
+This is the paper-faithful algorithm, re-thought for vector hardware:
+
+NATSA gives each processing unit a *set of diagonals* of the (implicit)
+distance matrix and streams the O(1)-update covariance recurrence along each
+diagonal. A scalar chain wastes a TPU's 8x128 VPU, so we re-associate the
+recurrence into a *cumulative sum along the diagonal* and process a whole
+BAND of `band` adjacent diagonals at once:
+
+    cov_k(i) = cov0[k] + sum_{t<=i} delta_k(t)
+    delta_k(t) = df[t]*dg[t+k] + df[t+k]*dg[t]        (delta_k(0) = 0)
+
+Row-profile updates (P[i] over j>i) fall out as a max over the band axis.
+Column updates (P[j] over j<i) are obtained by running the same row-min pass
+on the REVERSED series — dot(rev u, rev v) == dot(u, v) makes the reversed
+distance matrix a re-indexed transpose, so the reversed row mins are exactly
+the forward column mins. This keeps the inner loop scatter-free (TPUs have no
+cheap scatter-min), at the cost of streaming the stats twice; both passes
+stay memory-bound-optimal.
+
+The band loop doubles as the ANYTIME unit of work: each (k0, k1) diagonal
+chunk updates a running profile, and after any chunk the merged profile is a
+valid interruptible answer (monotonically improving — property-tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.zstats import ZStats, compute_stats, corr_to_dist
+
+NEG = -2.0  # corr lives in [-1, 1]; NEG marks "not yet computed"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ProfileState:
+    """Running anytime profile in correlation space (max corr == min dist)."""
+
+    corr: jax.Array   # (l,) f32 running max correlation
+    index: jax.Array  # (l,) i32 argmax position j (or -1)
+
+    @classmethod
+    def empty(cls, l: int, fill: float = NEG) -> "ProfileState":
+        return cls(corr=jnp.full((l,), fill, jnp.float32),
+                   index=jnp.full((l,), -1, jnp.int32))
+
+    def merge(self, other: "ProfileState") -> "ProfileState":
+        take = other.corr > self.corr
+        return ProfileState(corr=jnp.where(take, other.corr, self.corr),
+                            index=jnp.where(take, other.index, self.index))
+
+    def to_distance(self, window: int) -> jax.Array:
+        d = corr_to_dist(jnp.clip(self.corr, -1.0, 1.0), window)
+        return jnp.where(self.corr <= NEG + 1e-6, jnp.inf, d)
+
+
+def default_exclusion(window: int) -> int:
+    return max(1, -(-int(window) // 4))
+
+
+def centered_windows(stats: ZStats) -> jax.Array:
+    """(l, m) matrix of centered subsequences — used only for reseeding."""
+    m = stats.window
+    l = stats.n_subsequences
+    idx = jnp.arange(l)[:, None] + jnp.arange(m)[None, :]
+    return stats.ts[idx] - stats.mu[:, None]
+
+
+def band_rowmax(stats: ZStats, k0, band: int, *,
+                reseed_every: int | None = None,
+                windows_c: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Row-wise max correlation over the diagonal band [k0, k0+band).
+
+    Returns (corr (l,), index (l,)). `k0` may be traced (dynamic), `band` is
+    static. Diagonals ≥ l contribute nothing (masked).
+
+    `reseed_every=R` bounds f32 drift of the cumulative-sum recurrence: the
+    covariance is recomputed EXACTLY (direct centered dot via `windows_c`)
+    every R rows and the running sum corrected per segment — the TPU analogue
+    of NATSA PUs re-seeding their diagonal registers per work unit. SCAMP
+    solves the same drift with fp64, which the TPU VPU does not have.
+    """
+    l = stats.n_subsequences
+    ks = k0 + jnp.arange(band)                     # (D,)
+    i = jnp.arange(l)                              # (l,)
+    j = i[None, :] + ks[:, None]                   # (D, l)
+    jc = jnp.minimum(j, l - 1)                     # clamp for gathers
+    valid = j < l
+
+    dfj = jnp.take(stats.df, jc)
+    dgj = jnp.take(stats.dg, jc)
+    invnj = jnp.take(stats.invn, jc)
+    cov0b = jnp.take(stats.cov0, jnp.minimum(ks, l - 1))
+
+    delta = stats.df[None, :] * dgj + dfj * stats.dg[None, :]
+    delta = jnp.where(valid & (i[None, :] >= 1), delta, 0.0)
+    cov = cov0b[:, None] + jnp.cumsum(delta, axis=1)
+
+    if reseed_every is not None:
+        if windows_c is None:
+            windows_c = centered_windows(stats)
+        R = int(reseed_every)
+        n_seg = -(-l // R)
+        rows = jnp.minimum(jnp.arange(n_seg) * R, l - 1)          # (S,)
+        # exact cov at segment-start rows: <Wc[r], Wc[r+k]>
+        jr = jnp.minimum(rows[None, :] + ks[:, None], l - 1)      # (D, S)
+        w_r = windows_c[rows]                                     # (S, m)
+        w_j = windows_c[jr]                                       # (D, S, m)
+        seeds = jnp.einsum("sm,dsm->ds", w_r, w_j)                # (D, S)
+        drift = seeds - jnp.take(cov, rows, axis=1)               # (D, S)
+        seg = jnp.minimum(i // R, n_seg - 1)                      # (l,)
+        cov = cov + jnp.take(drift, seg, axis=1)
+
+    corr = cov * stats.invn[None, :] * invnj
+    corr = jnp.where(valid, corr, NEG)
+
+    best = jnp.argmax(corr, axis=0)                # (l,) band index d
+    corr_best = jnp.take_along_axis(corr, best[None, :], axis=0)[0]
+    idx_best = (i + k0 + best).astype(jnp.int32)
+    idx_best = jnp.where(corr_best > NEG, idx_best, -1)
+    return corr_best.astype(jnp.float32), idx_best
+
+
+DEFAULT_RESEED = 512
+
+
+def chunk_rowmax(stats: ZStats, k0, k1_static: int, band: int,
+                 reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+    """Row-max over diagonals [k0, k1) — k1-k0 must be <= k1_static bands*band.
+
+    Iterates `band`-wide sub-bands with lax.scan so the working set stays
+    (band, l) regardless of chunk size.
+    """
+    l = stats.n_subsequences
+    n_bands = -(-k1_static // band)
+    wc = centered_windows(stats) if reseed_every is not None else None
+
+    def body(state: ProfileState, b):
+        start = k0 + b * band
+        corr, idx = band_rowmax(stats, start, band,
+                                reseed_every=reseed_every, windows_c=wc)
+        return state.merge(ProfileState(corr, idx)), None
+
+    init = ProfileState.empty(l)
+    state, _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return state
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def profile_from_stats(stats: ZStats, stats_rev: ZStats, exclusion: int,
+                       band: int = 64,
+                       reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+    """Jitted exact-profile core over prebuilt forward/reversed streams."""
+    l = stats.n_subsequences
+    span = l - exclusion
+    fwd = chunk_rowmax(stats, jnp.int32(exclusion), span, band, reseed_every)
+    rev = chunk_rowmax(stats_rev, jnp.int32(exclusion), span, band, reseed_every)
+    # reversed row i' corresponds to forward row l-1-i'; its index likewise.
+    rev_corr = rev.corr[::-1]
+    rev_idx = jnp.where(rev.index[::-1] >= 0, l - 1 - rev.index[::-1], -1)
+    return fwd.merge(ProfileState(rev_corr, rev_idx.astype(jnp.int32)))
+
+
+def matrix_profile(ts, window: int, exclusion: int | None = None,
+                   band: int = 64, reseed_every: int | None = DEFAULT_RESEED,
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Full exact matrix profile. Returns (distance_profile (l,), index (l,)).
+
+    Stream precompute happens host-side in f64 (see zstats.compute_stats_host
+    — f32 cancellation is catastrophic on offset data); the O(l^2) diagonal
+    engine runs on device in f32. Forward pass covers j > i, reversed j < i.
+    """
+    import numpy as np
+
+    from repro.core.zstats import compute_stats_host
+
+    m = int(window)
+    excl = default_exclusion(m) if exclusion is None else int(exclusion)
+    ts_np = np.asarray(ts)
+    stats = compute_stats_host(ts_np, m)
+    stats_rev = compute_stats_host(ts_np[::-1], m)
+    merged = profile_from_stats(stats, stats_rev, excl, band, reseed_every)
+    return merged.to_distance(m), merged.index
+
+
+def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
+    """Non-normalized squared-Euclidean row-min over diagonals [k0, k0+band).
+
+    Same NATSA diagonal-streaming structure, different recurrence:
+        D2(i+1, j+1) = D2(i, j) + (T[i+m]-T[j+m])^2 - (T[i]-T[j])^2
+    Level shifts are NOT normalized away — this is the telemetry-monitor
+    distance (z-norm MP is blind to amplitude anomalies on flat traces).
+    Returns (neg_d2 (l,), idx (l,)): negated so merge() max-semantics work.
+    """
+    m = int(window)
+    n = ts.shape[0]
+    l = n - m + 1
+    ks = k0 + jnp.arange(band)                          # (D,)
+    i = jnp.arange(l)
+    j = i[None, :] + ks[:, None]                        # (D, l)
+    valid = j < l
+
+    # D2(0, k) for the band: ssq windows + sliding dot
+    csq = jnp.concatenate([jnp.zeros((1,), ts.dtype), jnp.cumsum(ts * ts)])
+    ssq = csq[m:] - csq[:-m]                            # (l,)
+    qt0 = sliding_dot_local = None
+    from repro.core.zstats import sliding_dot
+    qt0 = sliding_dot(ts[:m], ts)                       # (l,)
+    kc = jnp.minimum(ks, l - 1)
+    d20 = ssq[0] + jnp.take(ssq, kc) - 2 * jnp.take(qt0, kc)   # (D,)
+
+    def g(a):                                           # safe gather of ts
+        return jnp.take(ts, jnp.minimum(a, n - 1))
+
+    tim = g(i[None, :] + m - 1)                         # T[i+m-1]
+    tjm = g(j + m - 1)                                  # T[j+m-1]
+    tip = g(jnp.maximum(i[None, :] - 1, 0))             # T[i-1]
+    tjp = g(jnp.maximum(j - 1, 0))                      # T[j-1]
+    delta = (tim - tjm) ** 2 - (tip - tjp) ** 2
+    delta = jnp.where(valid & (i[None, :] >= 1), delta, 0.0)
+    d2 = d20[:, None] + jnp.cumsum(delta, axis=1)
+    neg = jnp.where(valid, -jnp.maximum(d2, 0.0), -jnp.inf)
+
+    best = jnp.argmax(neg, axis=0)
+    neg_best = jnp.take_along_axis(neg, best[None, :], axis=0)[0]
+    idx = jnp.where(jnp.isfinite(neg_best),
+                    (i + k0 + best).astype(jnp.int32), -1)
+    return neg_best.astype(jnp.float32), idx
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def matrix_profile_nonnorm(ts: jax.Array, window: int,
+                           exclusion: int | None = None, band: int = 64):
+    """Exact non-normalized matrix profile -> (euclid distance (l,), idx)."""
+    m = int(window)
+    excl = default_exclusion(m) if exclusion is None else int(exclusion)
+    ts = jnp.asarray(ts, jnp.float32)
+    l = ts.shape[0] - m + 1
+    span = l - excl
+    n_bands = -(-span // band)
+
+    def one_dir(series):
+        def body(state, b):
+            neg, idx = band_rowmin_nonnorm(series, m, excl + b * band, band)
+            return state.merge(ProfileState(neg, idx)), None
+        st, _ = jax.lax.scan(body, ProfileState.empty(l, -jnp.inf),
+                             jnp.arange(n_bands))
+        return st
+
+    fwd = one_dir(ts)
+    rev = one_dir(ts[::-1])
+    rev_corr = rev.corr[::-1]
+    rev_idx = jnp.where(rev.index[::-1] >= 0, l - 1 - rev.index[::-1], -1)
+    merged = fwd.merge(ProfileState(rev_corr, rev_idx.astype(jnp.int32)))
+    dist = jnp.sqrt(jnp.maximum(-merged.corr, 0.0))
+    dist = jnp.where(jnp.isfinite(merged.corr), dist, jnp.inf)
+    return dist, merged.index
+
+
+def top_discords(profile: jax.Array, index: jax.Array, k: int,
+                 exclusion: int) -> jax.Array:
+    """Indices of the k largest profile entries, greedily non-overlapping."""
+    p = jnp.where(jnp.isfinite(profile), profile, -jnp.inf)
+    picks = []
+    for _ in range(k):
+        i = jnp.argmax(p)
+        picks.append(i)
+        lo = jnp.maximum(i - exclusion, 0)
+        span = 2 * exclusion + 1
+        mask = (jnp.arange(p.shape[0]) >= lo) & (jnp.arange(p.shape[0]) < lo + span)
+        p = jnp.where(mask, -jnp.inf, p)
+    return jnp.stack(picks)
+
+
+def top_motif(profile: jax.Array, index: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(i, j) of the best-matching pair (global min of the profile)."""
+    i = jnp.argmin(profile)
+    return i, index[i]

@@ -1,0 +1,93 @@
+"""Training-telemetry discord monitor — the paper's engine as a first-class
+framework feature.
+
+Matrix-profile discord discovery over training telemetry traces (loss,
+grad-norm, step-time) flags anomalies that threshold alarms miss: a discord
+is a *subsequence unlike every other subsequence*, so slow drifts and
+periodic patterns don't false-positive, while loss spikes, silent data
+corruption, and straggler onset (step-time shape changes) do.
+
+Used by `launch/train.py` (interval-driven) and `examples/anomaly_monitor.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.matrix_profile import (matrix_profile,
+                                       matrix_profile_nonnorm,
+                                       top_discords)
+
+
+@dataclasses.dataclass
+class Discord:
+    position: int
+    score: float          # profile value (z-norm distance to nearest neighbor)
+    zscore: float         # score vs profile distribution
+
+
+@dataclasses.dataclass
+class TelemetryMonitor:
+    """Sliding matrix-profile monitor over a scalar telemetry stream.
+
+    Uses the NON-normalized profile by default: telemetry anomalies are
+    usually amplitude/level changes, which z-normalization factors out
+    (z-norm mode remains available for pure shape anomalies)."""
+
+    window: int = 32
+    min_history: int = 256
+    max_history: int = 8192
+    zscore_alarm: float = 4.0
+    normalize: bool = False
+    _trace: list = dataclasses.field(default_factory=list)
+
+    def push(self, value: float) -> None:
+        self._trace.append(float(value))
+        if len(self._trace) > self.max_history:
+            self._trace = self._trace[-self.max_history:]
+
+    def extend(self, values) -> None:
+        for v in values:
+            self.push(v)
+
+    @property
+    def ready(self) -> bool:
+        return len(self._trace) >= max(self.min_history, 2 * self.window)
+
+    def scan(self, top_k: int = 3) -> list[Discord]:
+        """Full-profile scan of current history; returns alarmed discords."""
+        if not self.ready:
+            return []
+        ts = jnp.asarray(np.asarray(self._trace, np.float32))
+        if self.normalize:
+            profile, index = matrix_profile(ts, self.window)
+        else:
+            profile, index = matrix_profile_nonnorm(ts, self.window)
+        p = np.asarray(profile)
+        finite = p[np.isfinite(p)]
+        if finite.size < 8:
+            return []
+        mean, std = float(finite.mean()), float(finite.std() + 1e-12)
+        excl = max(1, self.window // 4)
+        picks = np.asarray(top_discords(jnp.asarray(p), index, top_k, excl))
+        out = []
+        for pos in picks:
+            score = float(p[pos])
+            if not np.isfinite(score):
+                continue
+            z = (score - mean) / std
+            if z >= self.zscore_alarm:
+                out.append(Discord(position=int(pos), score=score, zscore=z))
+        return out
+
+    def motif(self) -> tuple[int, int] | None:
+        """Most repeated pattern (for e.g. periodic-straggler diagnosis)."""
+        if not self.ready:
+            return None
+        ts = jnp.asarray(np.asarray(self._trace, np.float32))
+        profile, index = matrix_profile(ts, self.window)
+        i = int(jnp.argmin(jnp.where(jnp.isfinite(profile), profile, jnp.inf)))
+        return i, int(index[i])

@@ -1,0 +1,138 @@
+"""NATSA's balanced anytime workload partitioning, host-side.
+
+The iteration space is the upper triangle of an l x l matrix restricted to
+diagonals k in [excl, l): diagonal k holds (l - k) cells. Splitting diagonals
+*evenly by count* (the naive scheme the paper argues against) gives the first
+worker ~2x the cells of the last. NATSA's scheme splits by *cumulative cell
+count* so every processing unit streams the same number of updates.
+
+Two layers, both deterministic and host-side (pure numpy — partitioning is
+control plane, not data plane):
+
+  balanced_ranges(l, excl, parts)    — contiguous diag ranges w/ equal work
+  interleaved_chunks(l, excl, P, C)  — over-decomposition into C equal-work
+        chunks + a stride-interleaved round order that preserves the ANYTIME
+        property: after r rounds every region of the diagonal space has been
+        visited ~uniformly, so the partial profile converges like SCRIMP's
+        random-order sampling but reproducibly.
+
+Chunk boundaries are aligned to `band` so the vectorized band engine never
+straddles a chunk edge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def diag_work(l: int, k: np.ndarray) -> np.ndarray:
+    """Cells on diagonal k (row profile only; the reversed pass doubles it)."""
+    return l - k
+
+
+def balanced_ranges(l: int, excl: int, parts: int, band: int = 1) -> list[tuple[int, int]]:
+    """Split diagonals [excl, l) into `parts` contiguous ranges of ~equal work.
+
+    Boundaries are multiples of `band` (offset from excl). Returns a list of
+    (k_start, k_end) half-open ranges covering the space exactly.
+    """
+    if parts <= 0:
+        raise ValueError("parts must be positive")
+    ks = np.arange(excl, l)
+    if ks.size == 0:
+        return [(excl, excl)] * parts
+    w = diag_work(l, ks).astype(np.float64)
+    cum = np.cumsum(w)
+    total = cum[-1]
+    targets = total * (np.arange(1, parts) / parts)
+    cuts = np.searchsorted(cum, targets, side="left") + 1  # index into ks
+    # align cuts to band multiples (relative to excl)
+    cuts = np.clip(((cuts + band // 2) // band) * band, 0, ks.size)
+    bounds = [0, *sorted(set(int(c) for c in cuts)), ks.size]
+    # if alignment collapsed cuts, re-pad with empty ranges at the end
+    ranges = [(excl + bounds[i], excl + bounds[i + 1]) for i in range(len(bounds) - 1)]
+    while len(ranges) < parts:
+        ranges.append((l, l))
+    return ranges[:parts]
+
+
+def range_work(l: int, r: tuple[int, int]) -> int:
+    k0, k1 = r
+    k0, k1 = max(k0, 0), min(k1, l)
+    if k1 <= k0:
+        return 0
+    ks = np.arange(k0, k1)
+    return int(diag_work(l, ks).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class AnytimePlan:
+    """Deterministic chunked execution plan for P workers.
+
+    rounds[r][p] = chunk id processed by worker p in round r (or -1 = idle).
+    chunks[c] = (k_start, k_end).
+    """
+
+    l: int
+    exclusion: int
+    n_workers: int
+    chunks: tuple[tuple[int, int], ...]
+    rounds: tuple[tuple[int, ...], ...]
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def chunk_work(self) -> np.ndarray:
+        return np.array([range_work(self.l, c) for c in self.chunks])
+
+
+def interleaved_chunks(l: int, excl: int, n_workers: int,
+                       chunks_per_worker: int = 8, band: int = 64) -> AnytimePlan:
+    """Over-decompose into C = n_workers * chunks_per_worker equal-work chunks
+    and order them so round r covers chunks {r, r+R, r+2R, ...} (R = #rounds):
+    every round touches the full diagonal span, preserving anytime convergence.
+    """
+    C = n_workers * chunks_per_worker
+    chunks = balanced_ranges(l, excl, C, band=band)
+    R = chunks_per_worker
+    rounds = []
+    for r in range(R):
+        ids = list(range(r, C, R))[:n_workers]
+        while len(ids) < n_workers:
+            ids.append(-1)
+        rounds.append(tuple(ids))
+    return AnytimePlan(l=l, exclusion=excl, n_workers=n_workers,
+                       chunks=tuple(chunks), rounds=tuple(rounds))
+
+
+def replan_remaining(plan: AnytimePlan, done: np.ndarray,
+                     n_workers: int) -> AnytimePlan:
+    """ELASTIC RESCALE / FAILURE RECOVERY: rebuild a round schedule over the
+    not-yet-done chunks for a (possibly different) worker count. Chunk
+    boundaries are kept (their partial profiles are already merged), only the
+    assignment changes, so no work is lost and no cell is recomputed.
+    """
+    remaining = [c for c in range(len(plan.chunks)) if not done[c]]
+    if n_workers <= 0:
+        raise ValueError("n_workers must be positive")
+    R = max(1, -(-len(remaining) // n_workers))
+    rounds = []
+    for r in range(R):
+        ids = remaining[r::R][:n_workers]
+        while len(ids) < n_workers:
+            ids.append(-1)
+        rounds.append(tuple(ids))
+    return AnytimePlan(l=plan.l, exclusion=plan.exclusion, n_workers=n_workers,
+                       chunks=plan.chunks, rounds=tuple(rounds))
+
+
+def balance_badness(l: int, ranges: list[tuple[int, int]]) -> float:
+    """max/mean work ratio — 1.0 is perfect balance (straggler metric)."""
+    w = np.array([range_work(l, r) for r in ranges], dtype=np.float64)
+    w = w[w > 0]
+    if w.size == 0:
+        return 1.0
+    return float(w.max() / w.mean())

@@ -1,0 +1,42 @@
+"""Brute-force matrix-profile oracle (test-only, O(l^2 m)).
+
+Computes the full z-normalized Euclidean distance matrix directly from
+windowed subsequences, applies the exclusion zone, and reduces. No recurrence
+tricks — this is the ground truth every optimized implementation must match.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.zstats import corr_to_dist
+
+
+def distance_matrix(ts, window: int):
+    """Full (l, l) z-normalized Euclidean distance matrix."""
+    ts = jnp.asarray(ts, jnp.float64) if ts.dtype == jnp.float64 else jnp.asarray(ts)
+    m = int(window)
+    l = ts.shape[0] - m + 1
+    idx = jnp.arange(l)[:, None] + jnp.arange(m)[None, :]
+    w = ts[idx]                                     # (l, m)
+    mu = w.mean(axis=1, keepdims=True)
+    wc = w - mu
+    norm = jnp.sqrt((wc * wc).sum(axis=1))
+    # corr(i, j) = <wc_i, wc_j> / (norm_i norm_j); flat windows -> corr 0
+    dots = wc @ wc.T
+    denom = norm[:, None] * norm[None, :]
+    corr = jnp.where(denom > 0, dots / jnp.maximum(denom, 1e-30), 0.0)
+    corr = jnp.clip(corr, -1.0, 1.0)
+    return corr_to_dist(corr, m)
+
+
+def matrix_profile_bruteforce(ts, window: int, exclusion: int | None = None):
+    """(profile, index) with trivial exclusion-zone handling."""
+    m = int(window)
+    excl = max(1, m // 4) if exclusion is None else int(exclusion)
+    d = distance_matrix(ts, m)
+    l = d.shape[0]
+    i = jnp.arange(l)
+    banned = jnp.abs(i[:, None] - i[None, :]) < excl
+    d = jnp.where(banned, jnp.inf, d)
+    return d.min(axis=1), d.argmin(axis=1)

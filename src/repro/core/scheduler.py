@@ -1,0 +1,205 @@
+"""Anytime distributed scheduler: rounds, progress, checkpoint, elasticity.
+
+Drives `distributed.make_round_fn` over an `AnytimePlan`:
+
+  - after every round the merged profile is a VALID interruptible answer
+    (SCRIMP's anytime property, preserved by interleaved chunk order);
+  - progress is a per-chunk done-bitmap; (profile, bitmap) checkpoints make
+    node failure cost at most one round;
+  - `resume()` replans remaining chunks for ANY worker count (elastic
+    scale-up/down and failed-worker exclusion use the same path).
+
+The control plane is host-side numpy; the data plane is jitted SPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition
+from repro.core.matrix_profile import ProfileState
+from repro.core.partition import AnytimePlan
+from repro.core.zstats import ZStats, compute_stats_host
+from repro.core.distributed import make_round_fn
+
+
+@dataclasses.dataclass
+class SchedulerState:
+    plan: AnytimePlan
+    done: np.ndarray            # (C,) bool
+    profile: ProfileState       # merged, lives on device(s)
+    rounds_completed: int
+
+    @property
+    def fraction_done(self) -> float:
+        w = self.plan.chunk_work().astype(np.float64)
+        t = w.sum()
+        return float((w * self.done).sum() / t) if t else 1.0
+
+
+class AnytimeScheduler:
+    """Round-based anytime matrix profile over a device mesh axis."""
+
+    def __init__(self, ts, window: int, mesh, *, axis: str = "workers",
+                 band: int = 64, chunks_per_worker: int = 8,
+                 exclusion: int | None = None):
+        self.window = int(window)
+        self.mesh = mesh
+        self.axis = axis
+        self.band = band
+        self.exclusion = (partition.np.maximum(1, window // 4)
+                          if exclusion is None else exclusion)
+        self.exclusion = int(self.exclusion)
+        ts = np.asarray(ts, np.float32)
+        self.stats = compute_stats_host(ts, self.window)
+        self.stats_rev = compute_stats_host(ts[::-1], self.window)
+        self.l = self.stats.n_subsequences
+        n_workers = mesh.shape[axis]
+        self.plan = partition.interleaved_chunks(
+            self.l, self.exclusion, n_workers,
+            chunks_per_worker=chunks_per_worker, band=band)
+        # static band count = widest chunk in bands
+        widths = [max(0, k1 - k0) for k0, k1 in self.plan.chunks]
+        self.n_bands = max(1, -(-max(widths) // band)) if widths else 1
+        self._round_fn = make_round_fn(mesh, self.n_bands, band, axis)
+        self.state = SchedulerState(
+            plan=self.plan,
+            done=np.zeros(len(self.plan.chunks), bool),
+            profile=ProfileState.empty(self.l),
+            rounds_completed=0,
+        )
+
+    # -- execution ---------------------------------------------------------
+
+    def _round_bounds(self, chunk_ids: tuple[int, ...]) -> tuple[np.ndarray, np.ndarray]:
+        k0s, k1s = [], []
+        for c in chunk_ids:
+            if c < 0 or self.state.done[c]:
+                k0s.append(self.l)
+                k1s.append(self.l)      # empty
+            else:
+                k0, k1 = self.plan.chunks[c]
+                k0s.append(k0)
+                k1s.append(k1)
+        # elastic shrink: a plan for fewer workers than the mesh has leaves
+        # the surplus devices idle (empty chunks)
+        mesh_workers = self.mesh.shape[self.axis]
+        while len(k0s) < mesh_workers:
+            k0s.append(self.l)
+            k1s.append(self.l)
+        return (np.asarray(k0s, np.int32), np.asarray(k1s, np.int32))
+
+    def step_round(self, *, fail_workers: set[int] | None = None) -> SchedulerState:
+        """Execute the next round. `fail_workers` simulates NDP-unit/node
+        failure: those workers' chunks are NOT marked done (their compute is
+        discarded by re-merging from the previous checkpointed profile) and
+        will be replanned."""
+        plan = self.state.plan
+        r = self.state.rounds_completed
+        if r >= plan.n_rounds:
+            return self.state
+        ids = plan.rounds[r]
+        k0s, k1s = self._round_bounds(ids)
+        prev_profile = self.state.profile
+        merged = self._round_fn(self.stats, prev_profile,
+                                jnp.asarray(k0s), jnp.asarray(k1s))
+        fail_workers = fail_workers or set()
+        if fail_workers:
+            # a failed worker's contribution cannot be trusted: rerun the round
+            # excluding it (SPMD semantics: we mask its chunk to empty).
+            k0s2, k1s2 = k0s.copy(), k1s.copy()
+            for w in fail_workers:
+                k0s2[w] = self.l
+                k1s2[w] = self.l
+            merged = self._round_fn(self.stats, prev_profile,
+                                    jnp.asarray(k0s2), jnp.asarray(k1s2))
+        done = self.state.done.copy()
+        for w, c in enumerate(ids):
+            if c >= 0 and w not in fail_workers:
+                done[c] = True
+        self.state = SchedulerState(plan=plan, done=done, profile=merged,
+                                    rounds_completed=r + 1)
+        return self.state
+
+    def run(self, max_rounds: int | None = None) -> SchedulerState:
+        n = self.state.plan.n_rounds if max_rounds is None else max_rounds
+        for _ in range(n):
+            self.step_round()
+        return self.state
+
+    def finish_reverse(self) -> ProfileState:
+        """Complete the column half (reversed-series pass) and merge.
+
+        The anytime loop runs the forward half; reversed diagonals are the
+        same chunk plan on reversed stats. For a final exact answer call this
+        after `run()` (benchmarks exercise partial/interrupted paths too).
+        """
+        plan = partition.interleaved_chunks(
+            self.l, self.exclusion, self.mesh.shape[self.axis],
+            chunks_per_worker=len(self.plan.rounds), band=self.band)
+        prof = ProfileState.empty(self.l)
+        for r in range(plan.n_rounds):
+            ids = plan.rounds[r]
+            k0s = np.asarray([plan.chunks[c][0] if c >= 0 else self.l for c in ids], np.int32)
+            k1s = np.asarray([plan.chunks[c][1] if c >= 0 else self.l for c in ids], np.int32)
+            prof = self._round_fn(self.stats_rev, prof,
+                                  jnp.asarray(k0s), jnp.asarray(k1s))
+        rev_corr = prof.corr[::-1]
+        rev_idx = jnp.where(prof.index[::-1] >= 0,
+                            self.l - 1 - prof.index[::-1], -1).astype(jnp.int32)
+        merged = self.state.profile.merge(ProfileState(rev_corr, rev_idx))
+        self.state = dataclasses.replace(self.state, profile=merged)
+        return merged
+
+    # -- fault tolerance / elasticity ---------------------------------------
+
+    def checkpoint(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = tempfile.NamedTemporaryFile(
+            dir=os.path.dirname(path) or ".", delete=False, suffix=".tmp")
+        np.savez(tmp,
+                 corr=np.asarray(self.state.profile.corr),
+                 index=np.asarray(self.state.profile.index),
+                 done=self.state.done,
+                 rounds_completed=self.state.rounds_completed,
+                 meta=json.dumps(dict(l=self.l, window=self.window,
+                                      exclusion=self.exclusion,
+                                      band=self.band,
+                                      chunks=list(self.plan.chunks))))
+        tmp.close()
+        os.replace(tmp.name, path)
+
+    def resume(self, path: str, *, n_workers: int | None = None) -> None:
+        """Restart from checkpoint, replanning remaining chunks for the
+        current (possibly different) worker count — elastic scaling."""
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(str(z["meta"]))
+        assert meta["l"] == self.l and meta["window"] == self.window
+        done = z["done"]
+        profile = ProfileState(jnp.asarray(z["corr"]), jnp.asarray(z["index"]))
+        workers = n_workers or self.mesh.shape[self.axis]
+        base = AnytimePlan(l=self.l, exclusion=self.exclusion,
+                           n_workers=workers,
+                           chunks=tuple(tuple(c) for c in meta["chunks"]),
+                           rounds=())
+        plan = partition.replan_remaining(base, done, workers)
+        widths = [max(0, k1 - k0) for k0, k1 in plan.chunks]
+        self.n_bands = max(1, -(-max(widths) // self.band)) if widths else 1
+        self._round_fn = make_round_fn(self.mesh, self.n_bands, self.band, self.axis)
+        self.plan = plan
+        self.state = SchedulerState(plan=plan, done=done, profile=profile,
+                                    rounds_completed=0)
+
+    # -- results -------------------------------------------------------------
+
+    def distance_profile(self) -> tuple[jax.Array, jax.Array]:
+        return (self.state.profile.to_distance(self.window),
+                self.state.profile.index)

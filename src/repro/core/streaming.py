@@ -1,0 +1,100 @@
+"""Incremental (streaming) exact matrix profile — STAMPI-style appends.
+
+The batch engine recomputes O(n^2) per scan; telemetry monitoring wants
+O(n·m) per appended point: each new subsequence contributes one new ROW of
+the implicit distance matrix, which both (a) sets the new subsequence's own
+profile entry and (b) can only LOWER existing entries (anytime-monotone,
+same merge semantics as the distributed scheduler).
+
+Host-side f64 stats (same rationale as zstats.compute_stats_host); the
+per-append row is one centered-windows matvec — vectorized, no recurrence
+drift. Supports both z-normalized and non-normalized distances so the
+telemetry monitor can stream either mode.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class StreamingProfile:
+    """Append-only exact matrix profile over a growing series."""
+
+    def __init__(self, window: int, exclusion: int | None = None,
+                 normalize: bool = True, max_points: int | None = None):
+        self.m = int(window)
+        self.excl = max(1, self.m // 4) if exclusion is None else int(exclusion)
+        self.normalize = normalize
+        self.max_points = max_points
+        self._ts: list[float] = []
+        self._profile = np.zeros((0,), np.float64)     # squared distance
+        self._index = np.zeros((0,), np.int64)
+
+    # -- internals -----------------------------------------------------------
+
+    def _windows(self) -> np.ndarray:
+        t = np.asarray(self._ts, np.float64)
+        l = t.shape[0] - self.m + 1
+        idx = np.arange(l)[:, None] + np.arange(self.m)[None, :]
+        return t[idx]
+
+    def _row_sqdist(self, j: int, w: np.ndarray) -> np.ndarray:
+        """Squared distances of subsequence j vs subsequences [0, j-excl]."""
+        hi = j - self.excl + 1
+        if hi <= 0:
+            return np.zeros((0,), np.float64)
+        a = w[:hi]
+        b = w[j]
+        if self.normalize:
+            ac = a - a.mean(axis=1, keepdims=True)
+            bc = b - b.mean()
+            na = np.linalg.norm(ac, axis=1)
+            nb = np.linalg.norm(bc)
+            denom = np.maximum(na * nb, 1e-300)
+            corr = np.where((na > 0) & (nb > 0), ac @ bc / denom, 0.0)
+            return 2.0 * self.m * (1.0 - np.clip(corr, -1.0, 1.0))
+        d = a - b[None, :]
+        return (d * d).sum(axis=1)
+
+    # -- public ---------------------------------------------------------------
+
+    def append(self, values) -> None:
+        values = np.atleast_1d(np.asarray(values, np.float64))
+        for v in values:
+            self._ts.append(float(v))
+            if self.max_points and len(self._ts) > self.max_points:
+                raise ValueError("max_points exceeded; start a new profile")
+            l = len(self._ts) - self.m + 1
+            if l <= 0:
+                continue
+            j = l - 1
+            w = self._windows()
+            row = self._row_sqdist(j, w)
+            # grow state
+            self._profile = np.append(self._profile, np.inf)
+            self._index = np.append(self._index, -1)
+            if row.size:
+                best = int(np.argmin(row))
+                self._profile[j] = row[best]
+                self._index[j] = best
+                upd = row < self._profile[:row.size]
+                self._profile[:row.size][upd] = row[upd]
+                self._index[:row.size][upd] = j
+
+    @property
+    def n_subsequences(self) -> int:
+        return self._profile.shape[0]
+
+    def distances(self) -> np.ndarray:
+        return np.sqrt(np.maximum(self._profile, 0.0))
+
+    def indices(self) -> np.ndarray:
+        return self._index.copy()
+
+    def top_discord(self) -> tuple[int, float]:
+        d = self.distances()
+        fin = np.isfinite(d)
+        if not fin.any():
+            return -1, float("nan")
+        i = int(np.argmax(np.where(fin, d, -np.inf)))
+        return i, float(d[i])

@@ -1,0 +1,173 @@
+"""Sliding-window z-normalization statistics for matrix-profile computation.
+
+These are the O(n) precomputed streams that NATSA keeps resident next to its
+processing units. Every implementation in this repo (brute-force oracle,
+vectorized JAX engine, Pallas kernel) consumes the same streams, so numerical
+discrepancies between implementations are attributable to the diagonal
+recurrence alone.
+
+Streams (SCAMP formulation, Zhu et al. ICDM'18):
+    mu[i]    = mean(T[i:i+m])
+    sig2[i]  = population variance of T[i:i+m]
+    invn[i]  = 1 / ||T[i:i+m] - mu[i]||           (inverse centered norm)
+    df[0]=dg[0]=0
+    df[i]    = (T[i+m-1] - T[i-1]) / 2
+    dg[i]    = (T[i+m-1] - mu[i]) + (T[i-1] - mu[i-1])
+    cov0[k]  = <T[0:m]-mu[0], T[k:k+m]-mu[k]>     (first row of covariances)
+
+The centered-update identity used everywhere downstream:
+    cov(i, j) = cov(i-1, j-1) + df[i]*dg[j] + df[j]*dg[i]
+    corr(i,j) = cov(i, j) * invn[i] * invn[j]
+    dist(i,j) = sqrt(2 m (1 - corr(i, j)))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ZStats:
+    """Precomputed streams for a series of length n with window m."""
+
+    ts: jax.Array      # (n,)   the raw series (kernel needs it for row restarts)
+    mu: jax.Array      # (l,)
+    invn: jax.Array    # (l,)
+    df: jax.Array      # (l,)
+    dg: jax.Array      # (l,)
+    cov0: jax.Array    # (l,)   cov of subsequence 0 against every k
+    window: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_subsequences(self) -> int:
+        return self.mu.shape[0]
+
+
+def moving_mean_var(ts: jax.Array, m: int) -> tuple[jax.Array, jax.Array]:
+    """Sliding mean and population variance over windows of length m.
+
+    Uses cumulative sums; variance clamped at 0 against cancellation.
+    """
+    n = ts.shape[0]
+    csum = jnp.concatenate([jnp.zeros((1,), ts.dtype), jnp.cumsum(ts)])
+    csq = jnp.concatenate([jnp.zeros((1,), ts.dtype), jnp.cumsum(ts * ts)])
+    s = csum[m:] - csum[:-m]          # (l,)
+    sq = csq[m:] - csq[:-m]
+    mu = s / m
+    var = jnp.maximum(sq / m - mu * mu, 0.0)
+    del n
+    return mu, var
+
+
+def sliding_dot(query: jax.Array, ts: jax.Array) -> jax.Array:
+    """dot(query, ts[k:k+m]) for every k — correlation via direct windows.
+
+    O(n·m) but fully vectorized; only used once per engine invocation (first
+    row of covariances), so it never dominates.
+    """
+    m = query.shape[0]
+    l = ts.shape[0] - m + 1
+    # (l, m) windows via gather on a strided index grid.
+    idx = jnp.arange(l)[:, None] + jnp.arange(m)[None, :]
+    windows = ts[idx]
+    return windows @ query
+
+
+def compute_stats(ts: jax.Array, window: int) -> ZStats:
+    """Build all NATSA input streams for `ts` (1-D) and window length."""
+    ts = jnp.asarray(ts)
+    if ts.ndim != 1:
+        raise ValueError(f"time series must be 1-D, got shape {ts.shape}")
+    m = int(window)
+    n = ts.shape[0]
+    if n < 2 * m:
+        raise ValueError(f"series too short: n={n} < 2*window={2 * m}")
+    mu, var = moving_mean_var(ts, m)
+    # Guard flat windows (sig=0): invn -> 0 gives corr 0 which maps to
+    # dist sqrt(2m); flat-vs-flat pairs are conventionally treated as
+    # non-matching rather than NaN.
+    norm = jnp.sqrt(var * m)
+    invn = jnp.where(norm > 0, 1.0 / jnp.maximum(norm, 1e-30), 0.0)
+
+    l = n - m + 1
+    tail = ts[m:]            # T[i+m-1] for i in [1, l)
+    head = ts[: l - 1]       # T[i-1]   for i in [1, l)
+    df = jnp.concatenate([jnp.zeros((1,), ts.dtype), (tail[: l - 1] - head) / 2.0])
+    dg = jnp.concatenate(
+        [jnp.zeros((1,), ts.dtype), (tail[: l - 1] - mu[1:]) + (head - mu[:-1])]
+    )
+    qt0 = sliding_dot(ts[:m], ts)                 # raw dot of window0 vs all
+    cov0 = qt0 - m * mu[0] * mu                   # centered
+    return ZStats(ts=ts, mu=mu, invn=invn, df=df, dg=dg, cov0=cov0, window=m)
+
+
+def cov_row(stats: ZStats, row: int) -> jax.Array:
+    """cov(row, row+k) for all k in [0, l-row) — direct evaluation.
+
+    Used by the engine to restart the diagonal recurrence at an arbitrary row
+    block (the TPU analogue of NATSA PUs seeding their private diagonal
+    registers), and by tests as an independent check of the recurrence.
+    """
+    m = stats.window
+    ts = stats.ts
+    q = jax.lax.dynamic_slice(ts, (row,), (m,))
+    qt = sliding_dot(q, ts[row:])
+    l = stats.n_subsequences
+    mus = jax.lax.dynamic_slice(stats.mu, (row,), (l,))[: l - row] if False else stats.mu[row:]
+    return qt - m * stats.mu[row] * mus
+
+
+def corr_to_dist(corr: jax.Array, window: int) -> jax.Array:
+    """Pearson correlation -> z-normalized Euclidean distance."""
+    return jnp.sqrt(jnp.maximum(2.0 * window * (1.0 - corr), 0.0))
+
+
+def dist_to_corr(dist: jax.Array, window: int) -> jax.Array:
+    return 1.0 - dist * dist / (2.0 * window)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def compute_stats_jit(ts: jax.Array, window: int) -> ZStats:
+    return compute_stats(ts, window)
+
+
+def compute_stats_host(ts, window: int, out_dtype=None) -> ZStats:
+    """Build the NATSA streams in float64 on the HOST, emit f32 streams.
+
+    The in-graph `compute_stats` suffers catastrophic cancellation in f32
+    (E[x^2]-E[x]^2 and qt0 - m*mu0*muk) whenever the series has a large
+    offset/level — e.g. random walks. z-normalized distance only depends on
+    per-window deviations, so the O(n) precompute is done once in f64 numpy
+    (stream preparation = data ingestion; TPUs never see f64) and the device
+    recurrence consumes well-conditioned f32 streams.
+    """
+    import numpy as np
+
+    t = np.asarray(ts, np.float64)
+    if t.ndim != 1:
+        raise ValueError(f"time series must be 1-D, got shape {t.shape}")
+    m = int(window)
+    n = t.shape[0]
+    if n < 2 * m:
+        raise ValueError(f"series too short: n={n} < 2*window={2 * m}")
+    t = t - t.mean()                      # shift-invariant; improves f32 casts
+    l = n - m + 1
+    csum = np.concatenate([[0.0], np.cumsum(t)])
+    mu = (csum[m:] - csum[:-m]) / m
+    idx = np.arange(l)[:, None] + np.arange(m)[None, :]
+    w = t[idx] - mu[:, None]              # exact two-pass centering
+    norm = np.sqrt((w * w).sum(axis=1))
+    invn = np.where(norm > 0, 1.0 / np.maximum(norm, 1e-300), 0.0)
+    tail, head = t[m:], t[: l - 1]
+    df = np.concatenate([[0.0], (tail[: l - 1] - head) / 2.0])
+    dg = np.concatenate([[0.0], (tail[: l - 1] - mu[1:]) + (head - mu[:-1])])
+    cov0 = w @ w[0]
+    dt = jnp.float32 if out_dtype is None else out_dtype
+    f = lambda x: jnp.asarray(np.asarray(x, np.float32), dt)
+    return ZStats(ts=f(t), mu=f(mu), invn=f(invn), df=f(df), dg=f(dg),
+                  cov0=f(cov0), window=m)

@@ -1,0 +1,134 @@
+"""NATSA diagonal-streaming matrix-profile kernel (Pallas TPU).
+
+TPU adaptation of NATSA's in-HBM-logic processing unit:
+
+  * the O(n) streams (df/dg/invn) are staged HBM→VMEM once per call and every
+    per-cell update happens at VREG distance — the data-movement structure the
+    paper builds silicon for;
+  * NATSA's scalar covariance pipeline is re-associated into a lane-parallel
+    CUMULATIVE SUM along the diagonal (a serial chain would idle the 8x128
+    VPU);
+  * a VMEM scratch carries the covariance of every diagonal across row tiles,
+    so each stream element is touched exactly once per diagonal band — the
+    kernel analogue of NATSA PUs' private diagonal registers;
+  * the kernel emits ROW-max correlation (+ argmax index) only; column
+    updates come from a second pass over the reversed series (see ops.py) —
+    TPUs have no cheap scatter-min, reversal keeps the kernel scatter-free.
+
+Grid: (n_row_tiles, n_diag_tiles), diag innermost so the output row block is
+revisited consecutively (read-modify-max accumulation), while the covariance
+scratch row for each diag tile persists across the outer row loop.
+
+Layout note: tiles are (DT, IT) with diagonals on sublanes and rows on lanes;
+IT is a multiple of 128. Validated with interpret=True on CPU; compiled path
+targets TPU Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0  # correlations live in [-1, 1]
+
+
+def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
+            out_corr, out_idx, carry, *, it: int, dt: int, excl: int, l: int):
+    i_idx = pl.program_id(0)
+    d_idx = pl.program_id(1)
+    i0 = i_idx * it
+    k0 = excl + d_idx * dt
+
+    # seed the diagonal registers at the first row tile
+    @pl.when(i_idx == 0)
+    def _seed():
+        carry[d_idx, :] = cov0[:]
+
+    dfi = df_row[0, :]                      # (IT,)
+    dgi = dg_row[0, :]
+    invni = invn_row[0, :]
+
+    # gather the j-side strips for each diagonal in the tile: row dd reads
+    # [i0+k0+dd, i0+k0+dd+IT) — overlapping windows, hence dynamic loads.
+    def strip(ref, dd):
+        return ref[pl.ds(i0 + k0 + dd, it)]
+
+    dfj = jnp.stack([strip(df_full, dd) for dd in range(dt)])      # (DT, IT)
+    dgj = jnp.stack([strip(dg_full, dd) for dd in range(dt)])
+    invnj = jnp.stack([strip(invn_full, dd) for dd in range(dt)])
+
+    delta = dfi[None, :] * dgj + dfj * dgi[None, :]                # (DT, IT)
+    cov = carry[d_idx, :][:, None] + jnp.cumsum(delta, axis=1)
+    carry[d_idx, :] = cov[:, -1]
+
+    corr = cov * invni[None, :] * invnj
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (dt, it), 1)          # row offset
+    dd = jax.lax.broadcasted_iota(jnp.int32, (dt, it), 0)          # diag offset
+    jpos = i0 + ii + k0 + dd                                       # j index
+    ipos = i0 + ii
+    valid = (jpos < l) & (ipos < l)
+    corr = jnp.where(valid, corr, NEG)
+
+    best_d = jnp.argmax(corr, axis=0)                              # (IT,)
+    tile_best = jnp.max(corr, axis=0)
+    tile_idx = (i0 + jnp.arange(it) + k0 + best_d).astype(jnp.int32)
+    tile_idx = jnp.where(tile_best > NEG, tile_idx, -1)
+
+    @pl.when(d_idx == 0)
+    def _init():
+        out_corr[0, :] = tile_best
+        out_idx[0, :] = tile_idx
+
+    @pl.when(d_idx != 0)
+    def _acc():
+        prev = out_corr[0, :]
+        take = tile_best > prev
+        out_corr[0, :] = jnp.where(take, tile_best, prev)
+        out_idx[0, :] = jnp.where(take, tile_idx, out_idx[0, :])
+
+
+@functools.partial(jax.jit, static_argnames=("it", "dt", "excl", "l", "interpret"))
+def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,
+                   interpret: bool = True):
+    """Row-max correlation profile over all diagonals k in [excl, l).
+
+    Inputs are the padded streams:
+      df/dg/invn : (LP,) f32, LP >= n_row_tiles*IT + n_diag_tiles*DT + excl
+      cov0       : (n_diag_tiles*DT,) f32 — cov(0, excl+d), padded
+    Returns (corr (n_row_tiles*IT,), idx (n_row_tiles*IT,)).
+    """
+    lp = df.shape[0]
+    n_rows = -(-l // it)
+    n_diags = cov0.shape[0] // dt
+    assert cov0.shape[0] % dt == 0
+    assert lp >= n_rows * it + excl + n_diags * dt, (lp, n_rows, it, excl)
+
+    rows = n_rows * it
+    df_row = df[:rows].reshape(n_rows, it)
+    dg_row = dg[:rows].reshape(n_rows, it)
+    invn_row = invn[:rows].reshape(n_rows, it)
+
+    grid = (n_rows, n_diags)
+    row_spec = pl.BlockSpec((1, it), lambda i, d: (i, 0))
+    full_spec = pl.BlockSpec((lp,), lambda i, d: (0,))
+    cov0_spec = pl.BlockSpec((dt,), lambda i, d: (d,))
+    out_specs = [pl.BlockSpec((1, it), lambda i, d: (i, 0))] * 2
+
+    kernel = functools.partial(_kernel, it=it, dt=dt, excl=excl, l=l)
+    corr, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec,
+                  full_spec, full_spec, full_spec, cov0_spec],
+        out_specs=out_specs,
+        out_shape=[jax.ShapeDtypeStruct((n_rows, it), jnp.float32),
+                   jax.ShapeDtypeStruct((n_rows, it), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((n_diags, dt), jnp.float32)],
+        interpret=interpret,
+    )(df_row, dg_row, invn_row, df, dg, invn, cov0)
+    return corr.reshape(-1), idx.reshape(-1)

@@ -1,0 +1,138 @@
+"""Jitted public wrapper for the NATSA matrix-profile kernel.
+
+Pipeline (mirrors the paper's Fig. 1 dataflow):
+  1. host-side f64 stream precompute (zstats.compute_stats_host) — data
+     ingestion; TPUs have no f64 and NATSA likewise precomputes streams once;
+  2. pad streams so every in-kernel dynamic load is in-bounds;
+  3. forward pallas_call  -> row-max profile (upper triangle);
+  4. reversed pallas_call -> column half via the reversal identity;
+  5. merge in correlation space, convert to z-normalized distance.
+
+`interpret=True` (default) runs the kernel body on CPU for validation; on a
+real TPU pass interpret=False.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.zstats import ZStats, compute_stats_host, corr_to_dist
+from repro.kernels import natsa_mp
+
+NEG = natsa_mp.NEG
+
+
+def _pad_streams(stats: ZStats, it: int, dt: int, excl: int):
+    """Pad streams; returns (df, dg, invn, cov0p, n_rows, n_diags, l)."""
+    l = stats.n_subsequences
+    n_rows = -(-l // it)
+    n_diag_total = max(l - excl, 1)
+    n_diags = -(-n_diag_total // dt)
+    lp = n_rows * it + excl + n_diags * dt
+    pad = lp - l
+
+    def p(x):
+        return jnp.pad(x, (0, pad))
+
+    cov0p = jnp.pad(stats.cov0[excl:], (0, n_diags * dt - n_diag_total))
+    return (p(stats.df), p(stats.dg), p(stats.invn), cov0p,
+            n_rows, n_diags, l)
+
+
+def rowmax_from_stats(stats: ZStats, *, excl: int, it: int = 256, dt: int = 8,
+                      interpret: bool = True):
+    """Row-max correlation profile (corr (l,), idx (l,)) via the kernel."""
+    df, dg, invn, cov0p, n_rows, n_diags, l = _pad_streams(stats, it, dt, excl)
+    corr, idx = natsa_mp.rowmax_profile(
+        df, dg, invn, cov0p, it=it, dt=dt, excl=excl, l=l, interpret=interpret)
+    return corr[:l], idx[:l]
+
+
+def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
+                         it: int = 256, dt: int = 8, interpret: bool = True):
+    """Full matrix profile via the Pallas kernel. -> (distance (l,), idx (l,)).
+
+    Matches core.matrix_profile / the brute-force oracle (tests enforce it).
+    """
+    m = int(window)
+    excl = max(1, -(-m // 4)) if exclusion is None else int(exclusion)
+    ts_np = np.asarray(ts)
+    stats = compute_stats_host(ts_np, m)
+    stats_rev = compute_stats_host(ts_np[::-1], m)
+    l = stats.n_subsequences
+
+    corr_f, idx_f = rowmax_from_stats(stats, excl=excl, it=it, dt=dt,
+                                      interpret=interpret)
+    corr_r, idx_r = rowmax_from_stats(stats_rev, excl=excl, it=it, dt=dt,
+                                      interpret=interpret)
+    corr_r = corr_r[::-1]
+    idx_r = jnp.where(idx_r[::-1] >= 0, l - 1 - idx_r[::-1], -1)
+
+    take = corr_r > corr_f
+    corr = jnp.where(take, corr_r, corr_f)
+    idx = jnp.where(take, idx_r, idx_f).astype(jnp.int32)
+    dist = jnp.where(corr <= NEG + 1e-6, jnp.inf,
+                     corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
+    return dist, idx
+
+
+VMEM_BYTES = 128 * 2**20 // 8   # ~16 MiB/core, keep ~50% headroom
+
+
+def kernel_vmem_bytes(l: int, it: int, dt: int) -> int:
+    """VMEM working set of one rowmax_profile call (full streams resident)."""
+    lp = l + it + dt + 64
+    full = 3 * lp * 4                      # df/dg/invn
+    rows = 3 * it * 4                      # row blocks
+    outs = 2 * it * (4 + 4)                # corr+idx blocks (rw)
+    tile = 4 * dt * it * 4                 # dfj/dgj/invnj/delta working tile
+    carry = (-(-(l) // dt)) * dt * 4       # cov scratch
+    return full + rows + outs + tile + carry
+
+
+def hbm_bytes_per_cell(l: int, excl: int, it: int = 256, dt: int = 8) -> float:
+    """Roofline model of HBM traffic per distance-matrix cell.
+
+    Two regimes (§Roofline-NATSA):
+      * VMEM-resident (l small enough): every stream element crosses
+        HBM->VMEM ONCE per pass — bytes/cell ~ O(1/l) -> effectively free.
+        This is the TPU realization of NATSA's near-data principle.
+      * streamed (l beyond VMEM): the engine row-blocks the space; the
+        j-side strips are re-fetched once per (row-tile, diag-tile), so
+        bytes/cell ~ 12*(it+dt)/(it*dt) — driven down by larger tiles.
+    Used by benchmarks and EXPERIMENTS.md §Roofline-NATSA.
+    """
+    n_rows = -(-l // it)
+    n_diags = -(-(l - excl) // dt)
+    cells = float(sum(l - k for k in range(excl, l)))
+    f32 = 4
+    if kernel_vmem_bytes(l, it, dt) <= VMEM_BYTES:
+        total = 2 * (3 * (l + it + dt) * f32            # streams, once
+                     + n_diags * dt * f32               # seeds
+                     + n_rows * it * (f32 + 4) * 2)     # outputs rw
+        return total / max(cells * 2, 1.0)
+    i_side = n_rows * it * 3 * f32                      # once per row tile
+    j_side = n_rows * n_diags * (it + dt) * 3 * f32     # per (row, diag) tile
+    outs = n_rows * n_diags * it * (f32 + 4) * 2        # rw of corr+idx
+    seeds = n_diags * dt * f32
+    total = 2 * (i_side + j_side + outs + seeds)        # fwd + reversed
+    return total / max(cells * 2, 1.0)
+
+
+FLOPS_PER_CELL = 7.0   # 2 mul + 1 add (delta) + cumsum add + corr mul2 + max
+
+
+def kernel_roofline(l: int, excl: int, it: int, dt: int) -> dict:
+    """Compute- and memory-term seconds for the full profile at (l, it, dt),
+    single chip (197 TFLOP/s, 819 GB/s) — the paper-technique §Perf cell."""
+    cells = 2.0 * sum(l - k for k in range(excl, l))    # fwd + reversed
+    bpc = hbm_bytes_per_cell(l, excl, it, dt)
+    return {
+        "cells": cells,
+        "bytes_per_cell": bpc,
+        "t_compute_s": cells * FLOPS_PER_CELL / 197e12,
+        "t_memory_s": cells * bpc / 819e9,
+        "vmem_bytes": kernel_vmem_bytes(l, it, dt),
+        "resident": kernel_vmem_bytes(l, it, dt) <= VMEM_BYTES,
+    }

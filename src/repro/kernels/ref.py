@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the NATSA Pallas kernel.
+
+Computes exactly what `natsa_mp.rowmax_profile` computes — row-wise max
+correlation (+ argmax index) over diagonals [excl, l) from the same padded
+streams — with no recurrence: covariance realized via an explicit cumsum per
+diagonal in one shot. Used by tests/test_kernel_natsa.py for allclose sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -2.0
+
+
+def rowmax_profile_ref(df, dg, invn, cov0, *, excl: int, l: int):
+    """(corr (l,), idx (l,)) over diagonals k in [excl, excl + len(cov0))."""
+    n_diags = cov0.shape[0]
+    ks = excl + jnp.arange(n_diags)                  # (D,)
+    i = jnp.arange(l)
+    j = i[None, :] + ks[:, None]                     # (D, l)
+    jc = jnp.minimum(j, df.shape[0] - 1)
+    dfj = jnp.take(df, jc)
+    dgj = jnp.take(dg, jc)
+    invnj = jnp.take(invn, jc)
+    delta = df[None, :l] * dgj + dfj * dg[None, :l]
+    delta = delta.at[:, 0].set(0.0)
+    cov = cov0[:, None] + jnp.cumsum(delta, axis=1)
+    corr = cov * invn[None, :l] * invnj
+    corr = jnp.where(j < l, corr, NEG)
+    best = jnp.argmax(corr, axis=0)
+    corr_best = jnp.take_along_axis(corr, best[None, :], axis=0)[0]
+    idx = (i + excl + best).astype(jnp.int32)
+    idx = jnp.where(corr_best > NEG, idx, -1)
+    return corr_best, idx

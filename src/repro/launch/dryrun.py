@@ -1,0 +1,423 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the device count at first init, and the dry-run (and only the dry-run) needs
+512 placeholder CPU devices to build the production meshes.
+
+Per cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with:
+  memory_analysis (proves it fits), raw cost_analysis (scan counted once —
+  see roofline.py), per-layer reconstructed FLOPs/bytes/collectives, wire
+  bytes from the post-SPMD HLO, analytic MODEL_FLOPS, and the three roofline
+  terms. launch/report.py renders EXPERIMENTS.md tables from these files.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import SHAPES, LayerSpec, input_specs
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import RooflineTerms, collective_wire_bytes, parse_collectives
+from repro.models import steps, transformer
+from repro.models.common import tree_pspecs, tree_shapes
+from repro.optim import adamw
+from repro.utils import flops as flops_util
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+TRAIN_MICROBATCHES = 8
+
+
+def _mesh_tag(multi_pod):
+    return "multi" if multi_pod else "single"
+
+
+def _n_chips(mesh):
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n
+
+
+# ---------------------------------------------------------------------------
+# full-step lowering
+
+
+def microbatches_for(layout: str) -> int:
+    # weight-gathering layouts re-gather per microbatch — fewer microbatches
+    # is the right trade (activations grow but stay inside HBM; see §Perf).
+    return {"fsdp": 2, "zero3": 1}.get(layout, TRAIN_MICROBATCHES)
+
+
+def build_full_step(cfg, shape, mesh, layout="tp"):
+    ctx = sh.make_ctx(mesh, cfg, shape, layout=layout)
+    rules = ctx.rules
+    param_sh = sh.param_shardings(mesh, cfg, rules)
+    p_structs = sh.param_structs(cfg)
+    ispecs = input_specs(cfg, shape)
+    batch_sh = sh.batch_shardings(mesh, cfg, shape, rules, ispecs)
+
+    if shape.kind == "train":
+        opt_sh = sh.opt_state_shardings(mesh, cfg, rules, param_sh)
+        opt_structs = sh.opt_state_structs(cfg)
+        step = steps.make_train_step(cfg, ctx, adamw.AdamWConfig(),
+                                     microbatches=microbatches_for(layout))
+        jitted = jax.jit(step,
+                         in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        args = (p_structs, opt_structs, ispecs)
+    elif shape.kind == "prefill":
+        cache_sh = sh.cache_shardings(mesh, cfg, shape.global_batch,
+                                      shape.seq_len, rules)
+        step = steps.make_prefill_step(cfg, ctx)
+        jitted = jax.jit(step,
+                         in_shardings=(param_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+        args = (p_structs, ispecs)
+    else:
+        cache_sh = sh.cache_shardings(mesh, cfg, shape.global_batch,
+                                      shape.seq_len, rules)
+        cache_structs = sh.cache_structs(cfg, shape.global_batch, shape.seq_len)
+        step = steps.make_decode_step(cfg, ctx)
+        jitted = jax.jit(step,
+                         in_shardings=(param_sh, cache_sh, batch_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+        args = (p_structs, cache_structs, ispecs)
+    return jitted, args, ctx
+
+
+# ---------------------------------------------------------------------------
+# per-layer lowering (scan bodies are counted once by XLA cost analysis, so
+# the roofline reconstructs totals from per-layer sub-programs)
+
+
+def _layer_structs(cfg, shape, mode, b, s):
+    d = cfg.d_model
+    x = jax.ShapeDtypeStruct((b, s if mode != "decode" else 1, d), cfg.dtype)
+    if cfg.mrope_sections:
+        pos = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    else:
+        pos = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return x, pos
+
+
+def lower_layer_cost(cfg, ls: LayerSpec, mesh, ctx, shape, mode, name):
+    """Compile one layer (fwd, or fwd+bwd for train) and return its costs."""
+    rules = ctx.rules
+    b, s = shape.global_batch, shape.seq_len
+    if mode == "train":
+        b = b // getattr(ctx, "_mb", TRAIN_MICROBATCHES)
+    lp_sh = sh._sanitized_shardings(
+        mesh, transformer.layer_param_spec(cfg, ls), rules)
+    lp_structs = tree_shapes(transformer.layer_param_spec(cfg, ls))
+    x_struct, pos_struct = _layer_structs(cfg, shape, mode, b, s)
+    x_sh = sh.named(mesh, P(rules["batch"], None, None))
+    enc_struct = None
+    if ls.cross:
+        enc_struct = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                          cfg.dtype)
+
+    if mode == "train":
+        def layer(lp, x, pos, enc):
+            y, aux, _ = transformer.apply_layer(
+                cfg, ls, lp, x, mode="train", ctx=ctx, positions=pos,
+                enc_out=enc)
+            return y, aux
+
+        if cfg.remat:   # match the executed program: bwd re-runs the fwd
+            layer = jax.checkpoint(
+                layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def fn(lp, x, pos, enc):
+            y, aux = layer(lp, x, pos, enc)
+            # keep the cotangent seed in model dtype — an f32 upcast here
+            # would double every backward collective in the probe
+            return y.sum().astype(jnp.float32) + aux
+
+        jitted = jax.jit(jax.grad(fn, argnums=(0, 1)),
+                         in_shardings=(lp_sh, x_sh, None, None))
+        args = (lp_structs, x_struct, pos_struct, enc_struct)
+    elif mode == "prefill":
+        def fn(lp, x, pos, enc):
+            y, _, cache = transformer.apply_layer(
+                cfg, ls, lp, x, mode="prefill", ctx=ctx, positions=pos,
+                enc_out=enc)
+            return y, cache
+
+        jitted = jax.jit(fn, in_shardings=(lp_sh, x_sh, None, None))
+        args = (lp_structs, x_struct, pos_struct, enc_struct)
+    else:
+        cspec = transformer.layer_cache_spec(cfg, ls, b, s)
+        c_sh = sh._sanitized_shardings(mesh, cspec, rules)
+        c_structs = tree_shapes(cspec)
+
+        def fn(lp, x, cache, cl):
+            y, _, newc = transformer.apply_layer(
+                cfg, ls, lp, x, mode="decode", ctx=ctx,
+                positions=jnp.full((x.shape[0], 1), cl, jnp.int32),
+                cache=cache, cache_len=cl)
+            return y, newc
+
+        jitted = jax.jit(fn, in_shardings=(lp_sh, x_sh, c_sh, None),
+                         donate_argnums=(2,))
+        args = (lp_structs, x_struct, c_structs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    wire = collective_wire_bytes(txt, default_group=mesh.shape["model"])
+    return {"name": name, "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire_bytes": wire}
+
+
+def head_cost(cfg, shape, mesh, ctx, mode):
+    """Embedding-out + final norm + CE (train: +bwd) sub-program cost."""
+    rules = ctx.rules
+    b, s = shape.global_batch, shape.seq_len
+    if mode == "train":
+        b = b // getattr(ctx, "_mb", TRAIN_MICROBATCHES)
+    if mode == "decode":
+        s = 1
+    d, v = cfg.d_model, cfg.padded_vocab
+    from repro.models.common import make_norm, sanitize_pspec
+    norm_spec, norm_fn = make_norm(cfg.norm_type, d)
+    emb_sh = sh.named(mesh, sanitize_pspec(
+        (v, d), P(rules.get("vocab"), rules.get("embed")), mesh))
+    x_sh = sh.named(mesh, P(rules["batch"], None, None))
+    ln_structs = tree_shapes({"w": norm_spec} if not isinstance(norm_spec, dict)
+                             else norm_spec)
+    ln_sh = jax.tree.map(lambda _: sh.named(mesh, P(None)), ln_structs)
+
+    emb_struct = jax.ShapeDtypeStruct((v, d), cfg.dtype)
+    x_struct = jax.ShapeDtypeStruct((b, s, d), cfg.dtype)
+    lab_struct = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+    def fwd(emb, ln, x, labels):
+        w = ln if not isinstance(norm_spec, dict) else ln
+        if isinstance(norm_spec, dict):
+            xn = norm_fn(x, ln)
+        else:
+            xn = norm_fn(x, ln["w"])
+        logits = xn @ emb.T.astype(cfg.dtype)
+        return steps.cross_entropy(logits, labels, ctx)
+
+    if mode == "train":
+        jitted = jax.jit(jax.grad(fwd, argnums=(0, 2)),
+                         in_shardings=(emb_sh, ln_sh, x_sh, None))
+    else:
+        jitted = jax.jit(fwd, in_shardings=(emb_sh, ln_sh, x_sh, None))
+    compiled = jitted.lower(emb_struct, ln_structs, x_struct, lab_struct).compile()
+    ca = compiled.cost_analysis()
+    wire = collective_wire_bytes(compiled.as_text(),
+                                 default_group=mesh.shape["model"])
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire_bytes": wire}
+
+
+# ---------------------------------------------------------------------------
+# cell driver
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             *, layout: str = "tp", force: bool = False,
+             skip_layers: bool = False) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{_mesh_tag(multi_pod)}"
+    if layout != "tp":
+        tag += f"__{layout}"
+    path = os.path.join(outdir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            prev = json.load(f)
+        if prev.get("ok") or prev.get("skipped"):
+            return prev           # resume: only redo failed cells
+
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": _mesh_tag(multi_pod), "layout": layout}
+    if shape_name in cfg.skip_shapes:
+        rec["skipped"] = True
+        rec["reason"] = ("full quadratic attention cannot run 500k-token "
+                         "decode" if shape_name == "long_500k"
+                         else "shape inapplicable")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = _n_chips(mesh)
+    try:
+        t0 = time.time()
+        jitted, args, ctx = build_full_step(cfg, shape, mesh, layout)
+        object.__setattr__(ctx, "_mb", microbatches_for(layout))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gb": ma.argument_size_in_bytes / 2**30,
+            "output_gb": ma.output_size_in_bytes / 2**30,
+            "temp_gb": ma.temp_size_in_bytes / 2**30,
+            "code_gb": ma.generated_code_size_in_bytes / 2**30,
+            "alias_gb": ma.alias_size_in_bytes / 2**30,
+        }
+        ca = compiled.cost_analysis()
+        rec["cost_raw"] = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes": float(ca.get("bytes accessed", 0.0))}
+        txt = compiled.as_text()
+        colls = parse_collectives(txt, default_group=mesh.shape["model"])
+        kinds: dict = {}
+        for c in colls:
+            kinds[c.kind] = kinds.get(c.kind, 0) + 1
+        rec["collectives_raw"] = {
+            "counts": kinds,
+            "wire_bytes_static": sum(c.wire_bytes for c in colls)}
+        rec["timings"] = {"lower_s": t_lower, "compile_s": t_compile}
+        del txt, compiled, lowered
+
+        # ---- per-layer reconstruction
+        mode = shape.kind
+        prefix, period, n_periods = cfg.layer_groups()
+        per_layer = []
+        if not skip_layers:
+            for i, ls in enumerate(prefix):
+                c = lower_layer_cost(cfg, ls, mesh, ctx, shape, mode,
+                                     f"prefix{i}:{ls.mixer}/{ls.ffn}")
+                c["repeat"] = 1
+                per_layer.append(c)
+            for j, ls in enumerate(period):
+                c = lower_layer_cost(cfg, ls, mesh, ctx, shape, mode,
+                                     f"period{j}:{ls.mixer}/{ls.ffn}")
+                c["repeat"] = n_periods
+                per_layer.append(c)
+            if cfg.is_encdec and mode != "decode":
+                enc_ls = LayerSpec("attn_bidir", "gelu", cfg.d_ff)
+                # encoder runs at encoder_seq, batch unchanged
+                import dataclasses as dc
+                enc_shape = dc.replace(shape, seq_len=cfg.encoder_seq,
+                                       kind="prefill" if mode != "train" else "train")
+                c = lower_layer_cost(cfg, enc_ls, mesh, ctx, enc_shape,
+                                     mode, "enc:attn_bidir/gelu")
+                c["repeat"] = cfg.encoder_layers
+                per_layer.append(c)
+            hd = head_cost(cfg, shape, mesh, ctx, mode)
+        else:
+            hd = {"flops": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+        rec["per_layer"] = per_layer
+        rec["head"] = hd
+
+        mbm = getattr(ctx, "_mb", TRAIN_MICROBATCHES) if mode == "train" else 1
+        recon = {
+            "flops_per_chip": (sum(c["flops"] * c["repeat"] for c in per_layer)
+                               + hd["flops"]) * mbm,
+            "bytes_per_chip": (sum(c["bytes"] * c["repeat"] for c in per_layer)
+                               + hd["bytes"]) * mbm,
+            "wire_bytes_per_chip": (sum(c["wire_bytes"] * c["repeat"]
+                                        for c in per_layer)
+                                    + hd["wire_bytes"]) * mbm,
+        }
+        rec["reconstructed"] = recon
+
+        mf = flops_util.model_flops(cfg, shape)
+        rec["model_flops"] = mf
+        terms = RooflineTerms(
+            flops_per_chip=recon["flops_per_chip"],
+            bytes_per_chip=recon["bytes_per_chip"],
+            wire_bytes_per_chip=recon["wire_bytes_per_chip"],
+            model_flops_total=mf["total"],
+            n_chips=n_chips)
+        rec["roofline"] = terms.to_dict()
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--layout", default="tp")
+    ap.add_argument("--skip-layers", action="store_true",
+                    help="full-step compile only (faster; no roofline recon)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    outdir = args.out or os.path.abspath(ARTIFACTS)
+
+    archs = [args.arch] if args.arch else configs.list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if args.all:
+        archs = configs.list_archs()
+        shapes = list(SHAPES)
+    meshes = [False, True]
+    if args.multi_pod:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+
+    t00 = time.time()
+    n_ok = n_skip = n_fail = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                t0 = time.time()
+                # multi-pod pass proves the pod axis shards; per-layer
+                # roofline reconstruction is reported on single-pod only
+                rec = run_cell(arch, shape, mp, outdir, layout=args.layout,
+                               force=args.force,
+                               skip_layers=args.skip_layers or mp)
+                status = ("SKIP" if rec.get("skipped")
+                          else "ok" if rec.get("ok") else "FAIL")
+                if rec.get("skipped"):
+                    n_skip += 1
+                elif rec.get("ok"):
+                    n_ok += 1
+                else:
+                    n_fail += 1
+                print(f"[{time.time()-t00:7.1f}s] {arch:22s} {shape:12s} "
+                      f"{_mesh_tag(mp):6s} {status:4s} ({time.time()-t0:5.1f}s)"
+                      + (f"  {rec.get('error','')[:90]}" if status == "FAIL" else ""),
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,27 @@
+"""Production mesh builders (function, not module constant — importing this
+module must never touch jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_worker_mesh(n: int | None = None, axis: str = "workers"):
+    """1-D mesh over available devices for the matrix-profile engine."""
+    devs = jax.devices()
+    n = len(devs) if n is None else n
+    return jax.make_mesh((n,), (axis,),
+                         axis_types=(jax.sharding.AxisType.Auto,),
+                         devices=devs[:n])
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

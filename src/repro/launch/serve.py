@@ -1,0 +1,77 @@
+"""Serving driver: batched prefill + decode with a fixed-capacity KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+      --batch 4 --prompt-len 16 --gen 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import steps as steps_lib
+from repro.models import transformer
+from repro.models.common import init_params
+
+
+def serve_batch(cfg, params, prompts, gen: int, *, ctx=None, frames=None):
+    """prompts: (B, P) int32. Returns (B, gen) generated ids (greedy)."""
+    b, p = prompts.shape
+    capacity = p + gen
+    cache = transformer.init_cache(cfg, params, b, capacity, frames=frames,
+                                   ctx=ctx)
+    decode = jax.jit(steps_lib.make_decode_step(cfg, ctx))
+    # teacher-forced prefill via the decode path keeps one compiled program
+    # (prompt lengths vary per request in serving; capacity is fixed)
+    out = []
+    tok = prompts[:, :1]
+    for t in range(capacity - 1):
+        logits, cache = decode(params, cache,
+                               {"tokens": tok, "cache_len": jnp.int32(t)})
+        nxt = steps_lib.greedy_next(logits)
+        tok = prompts[:, t + 1:t + 2] if t + 1 < p else nxt
+        if t + 1 >= p:
+            out.append(nxt)
+        if len(out) >= gen:
+            break
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
+    params = init_params(jax.random.key(args.seed), transformer.model_spec(cfg))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       size=(args.batch, args.prompt_len)),
+                          jnp.int32)
+    frames = None
+    if cfg.is_encdec:
+        frames = jnp.asarray(rng.normal(
+            size=(args.batch, cfg.encoder_seq, cfg.d_model)) * 0.02, cfg.dtype)
+
+    t0 = time.time()
+    out = serve_batch(cfg, params, prompts, args.gen, frames=frames)
+    dt = time.time() - t0
+    toks = args.batch * (args.prompt_len + args.gen)
+    print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. prefill+compile)")
+    print("[serve] sample ids:", np.asarray(out[0])[:16])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Sharding glue: logical-axis rules per (mesh, config, shape) + step
+shardings for train/prefill/decode. This is the single place where the
+parallelism layout is decided — hillclimbs swap rule tables here."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import dp_axes
+from repro.models import transformer
+from repro.models.common import TP_RULES, ParamSpec, tree_pspecs, tree_shapes
+from repro.models.moe import ShardCtx
+
+
+def make_rules(mesh, cfg: ModelConfig, shape: ShapeSpec | None = None,
+               *, layout: str = "tp") -> dict[str, Any]:
+    """Logical-axis -> mesh-axis mapping.
+
+    layout="tp"  : baseline — model axis carries heads/mlp/vocab, batch on dp.
+    layout="fsdp": adds weight sharding over the data axis (ZeRO-3).
+    Long-context decode (batch < dp size) flips to sequence parallelism:
+    batch replicated, kv cache sharded on seq over "data"."""
+    dp = dp_axes(mesh)
+    rules = dict(TP_RULES)
+    if layout == "fsdp":
+        # ZeRO-3 over the model axis: every weight sharded on its EMBED dim,
+        # activations replicated on "model" -> GSPMD all-gathers the (small)
+        # weights per layer instead of all-reducing the (large) activations.
+        rules.update(embed="model", vocab="model", mlp=None, heads=None,
+                     experts="model")
+    elif layout == "mixer_dp":
+        # hillclimb (rwkv6): replicate mixer weights (heads axis), keep the
+        # FFN/channel-mix TP — the 40-head mixer resharding disappears
+        rules["heads"] = None
+    elif layout == "ep":
+        # expert parallelism: expert bank sharded over model, full-width
+        # per-expert GEMMs (TP's f/16 slivers are MXU-hostile for small
+        # per-expert d_ff); attention AND dense-FFN layers stay TP — the
+        # sanitizer's first-dim-wins rule gives expert weights the experts
+        # sharding (dropping mlp) while plain swiglu keeps mlp sharding.
+        rules["experts"] = "model"
+    elif layout == "zero3":
+        # pure data parallelism over BOTH mesh axes (256-way) with weights
+        # and optimizer state sharded 256-way on one dim (ZeRO-3). GSPMD
+        # emits per-layer weight all-gathers (cheap: weights ≪ activations
+        # at train_4k batch) instead of activation all-reduces. mb=1.
+        dpall = tuple(a for a in ("pod", "data", "model")
+                      if a in mesh.axis_names)
+        rules.update(embed=dpall, vocab=dpall, mlp=None, heads=None,
+                     experts=dpall)
+    rules["batch"] = dp
+    if layout == "zero3":
+        rules["batch"] = tuple(a for a in ("pod", "data", "model")
+                               if a in mesh.axis_names)
+    rules["seq"] = None
+    rules["kv_seq"] = None
+    if shape is not None:
+        dp_total = 1
+        for a in dp:
+            dp_total *= mesh.shape[a]
+        if shape.global_batch < dp_total:
+            # SP: replicate batch, shard the long KV/sequence dim over "data"
+            rules["batch"] = None
+            rules["kv_seq"] = "data"
+    return rules
+
+
+def make_ctx(mesh, cfg: ModelConfig, shape: ShapeSpec | None = None,
+             *, layout: str = "tp") -> ShardCtx:
+    base = "tp" if layout == "sp" else layout
+    rules = make_rules(mesh, cfg, shape, layout=base)
+    residual = None
+    if layout == "zero3":
+        residual = P(rules["batch"], None, None)
+    return ShardCtx(mesh=mesh, dp=dp_axes(mesh), tp="model", rules=rules,
+                    sp_residual=(layout == "sp"), residual_spec=residual)
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+from repro.models.common import sanitize_pspec, sanitized_pspecs  # noqa: E402
+
+
+def _sanitized_shardings(mesh, spec_tree, rules) -> Any:
+    return jax.tree.map(lambda ps: named(mesh, ps),
+                        sanitized_pspecs(spec_tree, rules, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(mesh, cfg: ModelConfig, rules) -> Any:
+    return _sanitized_shardings(mesh, transformer.model_spec(cfg), rules)
+
+
+def param_structs(cfg: ModelConfig) -> Any:
+    return tree_shapes(transformer.model_spec(cfg))
+
+
+def opt_state_shardings(mesh, cfg: ModelConfig, rules, param_sh) -> Any:
+    return {
+        "m": param_sh, "v": param_sh,
+        "step": named(mesh, P()),
+        "err": None,
+    }
+
+
+def opt_state_structs(cfg: ModelConfig) -> Any:
+    ps = param_structs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, ps), "v": jax.tree.map(f32, ps),
+            "step": jax.ShapeDtypeStruct((), jnp.int32), "err": None}
+
+
+def batch_shardings(mesh, cfg: ModelConfig, shape: ShapeSpec, rules,
+                    specs: dict) -> dict:
+    """Shardings for input_specs() outputs."""
+    bspec = rules["batch"]
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = named(mesh, P(bspec, None))
+        elif k == "positions":            # (3, B, S)
+            out[k] = named(mesh, P(None, bspec, None))
+        elif k == "frames":               # (B, S_enc, D)
+            out[k] = named(mesh, P(bspec, None, None))
+        elif k == "cache_len":
+            out[k] = named(mesh, P())
+        else:
+            raise KeyError(k)
+    return out
+
+
+def cache_shardings(mesh, cfg: ModelConfig, b: int, s: int, rules) -> Any:
+    return _sanitized_shardings(mesh, transformer.cache_spec(cfg, b, s), rules)
+
+
+def cache_structs(cfg: ModelConfig, b: int, s: int) -> Any:
+    return tree_shapes(transformer.cache_spec(cfg, b, s))

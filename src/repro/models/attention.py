@@ -1,0 +1,297 @@
+"""Attention variants: GQA (optional bias) and MLA (DeepSeek low-rank KV).
+
+Three execution modes share weights:
+  * full  — training / bidirectional encoder (chunked causal or dense)
+  * prefill — like full but also returns the KV cache
+  * decode  — one new token against a cache of length S_kv
+
+Memory discipline: causal attention over long sequences is computed in query
+chunks (lax.scan) so the live logits tensor is (B, H, QC, S) instead of
+(B, H, S, S) — this is what keeps train_4k inside v5e HBM (see DESIGN §4).
+
+GQA is computed with grouped einsums — KV heads are never materialized
+H-wide (no jnp.repeat).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ParamSpec, Tree, apply_mrope, apply_rope, dense, dense_spec,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+
+
+def gqa_spec(cfg) -> Tree:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_spec(d, h * hd, ("embed", "heads"), bias=cfg.qkv_bias),
+        "wk": dense_spec(d, kv * hd, ("embed", "heads"), bias=cfg.qkv_bias),
+        "wv": dense_spec(d, kv * hd, ("embed", "heads"), bias=cfg.qkv_bias),
+        "wo": dense_spec(h * hd, d, ("heads", "embed")),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _rope_qk(cfg, q, k, positions):
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _grouped_attn(q, k, v, mask):
+    """q: (B,Sq,H,Dh), k/v: (B,Sk,KV,Dh), mask: (B?,Sq,Sk) bool or None."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    logits = jnp.einsum("bqngd,bknd->bngqk",
+                        qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bngqk,bknd->bqngd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, hd)
+
+
+def gqa_full(cfg, p: Tree, x, positions, *, causal: bool, q_chunk: int = 512):
+    """Training / encoder attention. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(dense(x, p["wq"]), h, hd)
+    k = _split_heads(dense(x, p["wk"]), kv, hd)
+    v = _split_heads(dense(x, p["wv"]), kv, hd)
+    q, k = _rope_qk(cfg, q, k, positions)
+
+    kpos = positions[-1] if cfg.mrope_sections is not None else positions
+
+    if not causal:
+        o = _grouped_attn(q, k, v, None)
+    elif s <= q_chunk or s % q_chunk != 0:
+        mask = kpos[:, :, None] >= kpos[:, None, :]
+        o = _grouped_attn(q, k, v, mask)
+    else:
+        nc = s // q_chunk
+        qc = q.reshape(b, nc, q_chunk, h, hd)
+        qpos_c = kpos.reshape(b, nc, q_chunk)
+
+        def body(_, inp):
+            qi, qpos = inp
+            mask = qpos[:, :, None] >= kpos[:, None, :]
+            return None, _grouped_attn(qi, k, v, mask)
+
+        _, oc = jax.lax.scan(body, None,
+                             (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qpos_c, 1, 0)))
+        o = jnp.moveaxis(oc, 0, 1).reshape(b, s, h, hd)
+    return dense(o.reshape(b, s, h * hd), p["wo"])
+
+
+def gqa_prefill(cfg, p: Tree, x, positions, *, q_chunk: int = 512):
+    """Like gqa_full(causal) but also returns the cache {k, v}: (B,S,KV,Dh)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(dense(x, p["wq"]), h, hd)
+    k = _split_heads(dense(x, p["wk"]), kv, hd)
+    v = _split_heads(dense(x, p["wv"]), kv, hd)
+    q, k = _rope_qk(cfg, q, k, positions)
+    kpos = positions[-1] if cfg.mrope_sections is not None else positions
+    if s <= q_chunk or s % q_chunk != 0:
+        mask = kpos[:, :, None] >= kpos[:, None, :]
+        o = _grouped_attn(q, k, v, mask)
+    else:
+        nc = s // q_chunk
+        qc = jnp.moveaxis(q.reshape(b, nc, q_chunk, h, hd), 1, 0)
+        pc = jnp.moveaxis(kpos.reshape(b, nc, q_chunk), 1, 0)
+
+        def body(_, inp):
+            qi, qpos = inp
+            mask = qpos[:, :, None] >= kpos[:, None, :]
+            return None, _grouped_attn(qi, k, v, mask)
+
+        _, oc = jax.lax.scan(body, None, (qc, pc))
+        o = jnp.moveaxis(oc, 0, 1).reshape(b, s, h, hd)
+    out = dense(o.reshape(b, s, h * hd), p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(cfg, p: Tree, x, cache: Tree, cache_len, positions):
+    """One-step decode. x: (B, 1, D); cache k/v: (B, S, KV, Dh).
+
+    Returns (out (B,1,D), updated cache). The new token's K/V is written at
+    `cache_len % S` (ring buffer semantics; dry-run shapes use a full cache).
+    """
+    b, one, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = cache["k"].shape[1]
+    q = _split_heads(dense(x, p["wq"]), h, hd)
+    knew = _split_heads(dense(x, p["wk"]), kv, hd)
+    vnew = _split_heads(dense(x, p["wv"]), kv, hd)
+    q, knew = _rope_qk(cfg, q, knew, positions)
+
+    slot = cache_len % s
+    k = jax.lax.dynamic_update_slice(cache["k"], knew, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], vnew, (0, slot, 0, 0))
+
+    valid = jnp.arange(s)[None, :] < jnp.minimum(cache_len + 1, s)  # (1, S)
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, hd)
+    logits = jnp.einsum("bqngd,bknd->bngqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bngqk,bknd->bqngd", pr.astype(v.dtype), v)
+    out = dense(o.reshape(b, 1, h * hd), p["wo"])
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+
+
+def mla_spec(cfg) -> Tree:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    s: Tree = {
+        "wdkv": dense_spec(d, r, ("embed", "kv_lora")),
+        "wkr": dense_spec(d, dr, ("embed", "head_dim")),
+        "wuk": ParamSpec((r, h, dn), ("kv_lora", "heads", "head_dim")),
+        "wuv": ParamSpec((r, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": dense_spec(h * dv, d, ("heads", "embed")),
+    }
+    if cfg.q_lora_rank:
+        s["wdq"] = dense_spec(d, cfg.q_lora_rank, ("embed", "q_lora"))
+        s["wuq"] = ParamSpec((cfg.q_lora_rank, h, dn + dr),
+                             ("q_lora", "heads", "head_dim"))
+    else:
+        s["wq"] = ParamSpec((d, h, dn + dr), ("embed", "heads", "head_dim"))
+    return s
+
+
+def _mla_q(cfg, p, x):
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = jnp.einsum("bsd,dr->bsr", x, p["wdq"]["w"])
+        q = jnp.einsum("bsr,rhe->bshe", q, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    return q[..., :dn], q[..., dn:]                      # nope, rope parts
+
+
+def mla_full(cfg, p: Tree, x, positions, *, causal: bool = True,
+             q_chunk: int = 512, return_cache: bool = False):
+    """MLA attention, latent cache {ckv (B,S,r), kr (B,S,dr)}."""
+    b, s, d = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ckv = dense(x, p["wdkv"])                            # (B, S, r)
+    kr = dense(x, p["wkr"])[:, :, None, :]               # (B, S, 1, dr)
+    kr = apply_rope(kr, positions, cfg.rope_theta)
+    qn, qr = _mla_q(cfg, p, x)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+
+    # absorbed path: q_nope' = q_nope @ wuk  -> latent space
+    qa = jnp.einsum("bshe,rhe->bshr", qn, p["wuk"])      # (B, S, H, r)
+    scale = 1.0 / jnp.sqrt(dn + dr)
+
+    def attend(qa_i, qr_i, qpos):
+        lg = (jnp.einsum("bqhr,bkr->bhqk", qa_i.astype(jnp.float32),
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bqhe,bke->bhqk", qr_i.astype(jnp.float32),
+                           kr[:, :, 0].astype(jnp.float32))) * scale
+        if causal:
+            mask = qpos[:, :, None] >= positions[:, None, :]
+            lg = jnp.where(mask[:, None], lg, NEG_INF)
+        pr = jax.nn.softmax(lg, axis=-1)
+        ol = jnp.einsum("bhqk,bkr->bqhr", pr.astype(ckv.dtype), ckv)
+        return jnp.einsum("bqhr,rhe->bqhe", ol, p["wuv"])  # (B, q, H, dv)
+
+    if s <= q_chunk or s % q_chunk != 0 or not causal:
+        o = attend(qa, qr, positions)
+    else:
+        nc = s // q_chunk
+        qa_c = jnp.moveaxis(qa.reshape(b, nc, q_chunk, h, -1), 1, 0)
+        qr_c = jnp.moveaxis(qr.reshape(b, nc, q_chunk, h, -1), 1, 0)
+        pp = jnp.moveaxis(positions.reshape(b, nc, q_chunk), 1, 0)
+
+        def body(_, inp):
+            return None, attend(*inp)
+
+        _, oc = jax.lax.scan(body, None, (qa_c, qr_c, pp))
+        o = jnp.moveaxis(oc, 0, 1).reshape(b, s, h, dv)
+
+    out = dense(o.reshape(b, s, h * dv), p["wo"])
+    if return_cache:
+        return out, {"ckv": ckv, "kr": kr[:, :, 0]}
+    return out
+
+
+def mla_decode(cfg, p: Tree, x, cache: Tree, cache_len, positions):
+    """Absorbed-matmul MLA decode: cache stays in latent space (B,S,r)+(B,S,dr)."""
+    b, one, d = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s = cache["ckv"].shape[1]
+
+    ckv_new = dense(x, p["wdkv"])
+    kr_new = apply_rope(dense(x, p["wkr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+    slot = cache_len % s
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, slot, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new, (0, slot, 0))
+
+    qn, qr = _mla_q(cfg, p, x)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    qa = jnp.einsum("bshe,rhe->bshr", qn, p["wuk"])
+    scale = 1.0 / jnp.sqrt(dn + dr)
+    lg = (jnp.einsum("bqhr,bkr->bhqk", qa.astype(jnp.float32),
+                     ckv.astype(jnp.float32))
+          + jnp.einsum("bqhe,bke->bhqk", qr.astype(jnp.float32),
+                       kr.astype(jnp.float32))) * scale
+    valid = jnp.arange(s)[None, :] < jnp.minimum(cache_len + 1, s)
+    lg = jnp.where(valid[:, None, None, :], lg, NEG_INF)
+    pr = jax.nn.softmax(lg, axis=-1)
+    ol = jnp.einsum("bhqk,bkr->bqhr", pr.astype(ckv.dtype), ckv)
+    o = jnp.einsum("bqhr,rhe->bqhe", ol, p["wuv"])
+    out = dense(o.reshape(b, 1, h * dv), p["wo"])
+    return out, {"ckv": ckv, "kr": kr}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+
+
+def cross_spec(cfg) -> Tree:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": dense_spec(d, h * hd, ("embed", "heads"), bias=True),
+        "wk": dense_spec(d, h * hd, ("embed", "heads")),
+        "wv": dense_spec(d, h * hd, ("embed", "heads"), bias=True),
+        "wo": dense_spec(h * hd, d, ("heads", "embed")),
+    }
+
+
+def cross_full(cfg, p: Tree, x, enc_out):
+    """x: (B, Sq, D) attends over enc_out (B, Sk, D) (no mask, no rope)."""
+    b, sq, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _split_heads(dense(x, p["wq"]), h, hd)
+    k = _split_heads(dense(enc_out, p["wk"]), h, hd)
+    v = _split_heads(dense(enc_out, p["wv"]), h, hd)
+    o = _grouped_attn(q, k, v, None)
+    return dense(o.reshape(b, sq, h * hd), p["wo"])

@@ -1,0 +1,263 @@
+"""Model substrate: param specs with logical sharding axes, norms, RoPE.
+
+Params are nested dicts of arrays. Every leaf is declared via `ParamSpec`
+with LOGICAL axis names; a rule table maps logical axes to mesh axes (t5x
+style), so alternative layouts (e.g. FSDP for the hillclimb) are a rule-table
+swap, not a model rewrite.
+
+Logical axes used:
+  vocab, embed, mlp, heads, kv_heads, head_dim, kv_lora, q_lora, experts,
+  conv, state, layers (the scan dim), null
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# sharding rules
+
+
+# default TP rules: model axis carries heads / mlp / vocab; everything else
+# replicated. "data"/"pod" only shard the batch (activations), not params.
+TP_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "experts": None,
+    "embed": None,
+    # KV caches shard over "model" on kv_heads when divisible, else on
+    # head_dim (the sanitizer's first-wins/divisibility rules arbitrate) —
+    # a replicated 32k-token cache is 64 GB/chip at llama3/decode_32k.
+    "kv_heads": "model",
+    "head_dim": "model",
+    "kv_lora": "model",   # MLA latent: weights TP + cache sharded 16-way
+    "q_lora": None,
+    "conv": None,
+    "state": None,
+    "layers": None,
+    "null": None,
+}
+
+# FSDP variant (hillclimb): weights additionally sharded over the data axis
+# on their non-TP dim; XLA all-gathers them per use (ZeRO-3 style).
+FSDP_RULES = dict(TP_RULES, embed="data", experts="data")
+
+# expert-parallel variant: experts over model axis, per-expert mlp unsharded.
+EP_RULES = dict(TP_RULES, experts="model", mlp=None)
+
+
+def logical_to_pspec(axes: tuple[str, ...], rules: Mapping[str, Any]) -> P:
+    return P(*[rules.get(a, None) for a in axes])
+
+
+def sanitize_pspec(shape: tuple, pspec: P, mesh) -> P:
+    """Drop mesh axes from dims they do not divide and drop repeated axis
+    uses (first dim wins) — jax rejects uneven/duplicate arg shardings."""
+    out = []
+    used: set = set()
+    for dim, axes in zip(shape,
+                         tuple(pspec) + (None,) * (len(shape) - len(pspec))):
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        if any(a in used for a in ax_tuple):
+            out.append(None)
+            continue
+        size = 1
+        for a in ax_tuple:
+            size *= mesh.shape[a]
+        if dim % size == 0:
+            out.append(axes)
+            used.update(ax_tuple)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sanitized_pspecs(spec_tree, rules, mesh):
+    """tree of sanitized PartitionSpecs for a ParamSpec tree."""
+    pspecs = tree_pspecs(spec_tree, rules)
+    shapes = jax.tree.map(lambda s: s.shape, spec_tree,
+                          is_leaf=lambda x: isinstance(x, ParamSpec))
+    return jax.tree.map(
+        lambda shp, ps: sanitize_pspec(shp, ps, mesh), shapes, pspecs,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(d, int) for d in x))
+
+
+# ---------------------------------------------------------------------------
+# param specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]                 # logical axis per dim
+    init: str = "fan_in"                  # fan_in | zeros | ones | normal | const
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Tree = dict[str, Any]
+
+
+def tree_pspecs(spec: Tree, rules: Mapping[str, Any]) -> Tree:
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.axes, rules), spec,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_shapes(spec: Tree) -> Tree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _init_leaf(key, s: ParamSpec):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    if s.init == "const":
+        return jnp.full(s.shape, s.scale, s.dtype)
+    if s.init == "normal":
+        return (jax.random.normal(key, s.shape, jnp.float32) * s.scale).astype(s.dtype)
+    if s.init == "fan_in":
+        fan = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = s.scale / np.sqrt(max(fan, 1))
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+    raise ValueError(s.init)
+
+
+def init_params(key, spec: Tree) -> Tree:
+    leaves, treedef = jax.tree.flatten(
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(k, s) for k, s in zip(keys, leaves)])
+
+
+def count_params(spec: Tree) -> int:
+    leaves = jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def stack_spec(spec: Tree, n: int) -> Tree:
+    """Prepend a scanned `layers` dim to every leaf (scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes),
+                            init=s.init, scale=s.scale, dtype=s.dtype),
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# norms (weights kept f32; compute f32; cast back to input dtype)
+
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones", dtype=jnp.float32)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    # statistics in f32, scale-multiplies in model dtype: keeps the residual
+    # stream (and its cotangents — which GSPMD all-reduces under TP) in
+    # bf16. An all-f32 norm doubled every TP all-reduce (see §Perf log).
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+def layernorm_spec(d: int) -> Tree:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones", dtype=jnp.float32),
+            "bias": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32)}
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return ((x - mu.astype(x.dtype)) * inv * p["scale"].astype(x.dtype)
+            + p["bias"].astype(x.dtype))
+
+
+def make_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return rmsnorm_spec(d), rmsnorm
+    if kind == "layernorm":
+        return layernorm_spec(d), layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, Dh), positions: (..., S) int32. Split-half convention."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: tuple[int, ...], theta: float = 1e4):
+    """Qwen2-VL M-RoPE. positions3: (3, ..., S) for (t, h, w) coordinates;
+    frequency bands are split across the three coordinate streams by
+    `sections` (in half-dim units, e.g. (16, 24, 24) for head_dim 128)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    # band membership: which coordinate stream drives each frequency index
+    band = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    pos = jnp.stack([positions3[i] for i in range(3)])         # (3, ..., S)
+    ang_all = pos[..., None].astype(jnp.float32) * freqs       # (3, ..., S, half)
+    sel = jax.nn.one_hot(jnp.asarray(band, jnp.int32), 3,
+                         dtype=jnp.float32)                     # (half, 3)
+    ang = jnp.einsum("c...sh,hc->...sh", ang_all, sel)          # per-band select
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+
+
+def dense_spec(d_in: int, d_out: int, axes=("embed", "mlp"), *, bias=False,
+               scale=1.0) -> Tree:
+    s: Tree = {"w": ParamSpec((d_in, d_out), axes, scale=scale)}
+    if bias:
+        s["b"] = ParamSpec((d_out,), (axes[1],), init="zeros", dtype=jnp.float32)
+    return s
+
+
+def dense(x, p):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y

@@ -1,0 +1,159 @@
+"""Mamba-1 selective SSM block (for the Jamba hybrid).
+
+Train/prefill: chunked selective scan — within a chunk the recurrence
+h_t = Abar_t h_{t-1} + dBx_t is closed-form via cumulative log-decays
+(exponent differences <= 0, overflow-safe), the carry crosses chunks in a
+lax.scan. A full-sequence associative scan would materialize (B, L, d_in, N)
+f32 (~17 GB at jamba/train_4k) — chunking keeps the live set at
+(B, C, d_in, N).
+
+Decode: O(1) state step + a (kc-1)-deep conv ring buffer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, Tree
+
+
+def mamba_spec(cfg) -> Tree:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    kc = cfg.mamba_conv
+    dt_rank = -(-d // 16)
+    return {
+        "in_proj": ParamSpec((d, 2, di), ("embed", "null", "mlp")),
+        "conv_w": ParamSpec((kc, di), ("conv", "mlp"), init="normal", scale=0.2),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros", dtype=jnp.float32),
+        "x_proj": ParamSpec((di, dt_rank + 2 * n), ("mlp", "null")),
+        "dt_w": ParamSpec((dt_rank, di), ("null", "mlp")),
+        "dt_b": ParamSpec((di,), ("mlp",), init="const", scale=-4.6,
+                          dtype=jnp.float32),  # softplus^-1(~0.01)
+        "a_log": ParamSpec((di, n), ("mlp", "state"), init="const", scale=0.0,
+                           dtype=jnp.float32),
+        "dskip": ParamSpec((di,), ("mlp",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_params(cfg, p: Tree, u):
+    """u: (B, T, di) post-conv activations -> (dt, Bmat, Cmat) f32."""
+    d = cfg.d_model
+    n = cfg.mamba_d_state
+    dt_rank = -(-d // 16)
+    xdbc = u @ p["x_proj"]                                    # (B,T,rank+2N)
+    dt_low = xdbc[..., :dt_rank]
+    bmat = xdbc[..., dt_rank:dt_rank + n].astype(jnp.float32)
+    cmat = xdbc[..., dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_low @ p["dt_w"]).astype(jnp.float32)
+                         + p["dt_b"])                         # (B,T,di)
+    return dt, bmat, cmat
+
+
+def _chunk_ssm(dt, bmat, cmat, u, a, h0):
+    """One chunk. dt/u: (B,C,di); bmat/cmat: (B,C,N); a: (di,N) (< 0);
+    h0: (B,di,N). Returns (y (B,C,di), h_end)."""
+    la = jnp.cumsum(dt[..., None] * a, axis=1)                # (B,C,di,N) <=0
+    dbx = (dt * u.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+    # h_t = e^{la_t} h0 + sum_{s<=t} e^{la_t - la_s} dbx_s.
+    # carry term: exponents la_t <= 0, safe.
+    carry_term = jnp.exp(la) * h0[:, None]                    # (B,C,di,N)
+    # in-chunk term: log-depth associative scan over (abar, dbx) pairs —
+    # e^{-la_s} in the factorized cumulative form would overflow; the scan
+    # only ever multiplies decays in (0, 1].
+    abar = jnp.exp(dt[..., None] * a)                          # (B,C,di,N)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (abar, dbx), axis=1)
+    h_all = hs + carry_term
+    y = jnp.einsum("bcdn,bcn->bcd", h_all, cmat)
+    return y, h_all[:, -1]
+
+
+def mamba_full(cfg, p: Tree, x, *, chunk: int = 256, state=None,
+               conv_state=None, return_state: bool = False, ctx=None):
+    """x: (B, S, D) -> (B, S, D). Causal conv + selective scan."""
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    kc = cfg.mamba_conv
+
+    def anchor(t):
+        # zero3: GSPMD loses the batch sharding through the chunked scan's
+        # reshapes; pin it on the (B, S, di) activations (same lesson as
+        # the residual pin, see EXPERIMENTS §Perf iter 6)
+        spec = getattr(ctx, "residual_spec", None) if ctx is not None else None
+        if spec is None or t.ndim != 3:
+            return t
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(ctx.mesh, P(spec[0], None, None)))
+
+    xz = jnp.einsum("bsd,dci->bsci", x, p["in_proj"])
+    xin, z = anchor(xz[..., 0, :]), anchor(xz[..., 1, :])      # (B,S,di)
+
+    if conv_state is None:
+        conv_state = jnp.zeros((b, kc - 1, di), x.dtype)
+    xpad = jnp.concatenate([conv_state, xin], axis=1)          # (B,S+kc-1,di)
+    u = sum(xpad[:, i:i + s] * p["conv_w"][i].astype(x.dtype)
+            for i in range(kc))
+    u = anchor(jax.nn.silu(u + p["conv_b"].astype(x.dtype)))
+
+    dt, bmat, cmat = _ssm_params(cfg, p, u)
+    dt, bmat, cmat = anchor(dt), anchor(bmat), anchor(cmat)
+    a = -jnp.exp(p["a_log"])                                   # (di,N) < 0
+
+    if state is None:
+        state = jnp.zeros((b, di, n), jnp.float32)
+
+    nc = max(1, s // chunk)
+    if s % chunk != 0 or nc == 1:
+        y, state = _chunk_ssm(dt, bmat, cmat, u, a, state)
+    else:
+        def body(h, inp):
+            dtc, bc, cc, uc = inp
+            y, h = _chunk_ssm(dtc, bc, cc, uc, a, h)
+            return h, y
+
+        sp = lambda t: jnp.moveaxis(
+            t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+        state, yc = jax.lax.scan(body, state,
+                                 (sp(dt), sp(bmat), sp(cmat), sp(u)))
+        y = jnp.moveaxis(yc, 0, 1).reshape(b, s, di)
+
+    y = anchor(y) + u.astype(jnp.float32) * p["dskip"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    if return_state:
+        return out, state, xpad[:, -(kc - 1):] if kc > 1 else conv_state
+    return out
+
+
+def mamba_step(cfg, p: Tree, x, state, conv_state):
+    """Decode step. x: (B,1,D); state: (B,di,N); conv_state: (B,kc-1,di)."""
+    b, one, d = x.shape
+    di = cfg.mamba_expand * d
+    kc = cfg.mamba_conv
+
+    xz = jnp.einsum("bsd,dci->bsci", x, p["in_proj"])
+    xin, z = xz[..., 0, :], xz[..., 1, :]                      # (B,1,di)
+
+    xwin = jnp.concatenate([conv_state, xin], axis=1)          # (B,kc,di)
+    u = sum(xwin[:, i:i + 1] * p["conv_w"][i].astype(x.dtype) for i in range(kc))
+    u = jax.nn.silu(u + p["conv_b"].astype(x.dtype))           # (B,1,di)
+
+    dt, bmat, cmat = _ssm_params(cfg, p, u)
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[:, 0, :, None] * a)                      # (B,di,N)
+    dbx = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] * bmat[:, 0, None, :]
+    state = abar * state + dbx
+    y = jnp.einsum("bdn,bn->bd", state, cmat[:, 0])[:, None]
+    y = y + u.astype(jnp.float32) * p["dskip"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, state, xwin[:, 1:]

@@ -1,0 +1,203 @@
+"""RWKV6 ("Finch") block: data-dependent-decay linear attention.
+
+Train/prefill use a CHUNKED formulation (the TPU-native adaptation — a raw
+per-token scan would serialize the MXU): within a chunk of length C the
+recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+is expanded into an inter-chunk term (carry state S_0), an intra-chunk
+"attention" with relative-decay weights, and a state update — all exponents
+are differences of cumulative LOG decays with s <= t, hence <= 0: no
+overflow, no fp64 crutch (decays w in (0,1) make 1/A terms explode in the
+naive factorized form; we keep the (C, C, K) masked-exponent tensor instead).
+
+Decode is the O(1)-state step — this is why rwkv6 runs the `long_500k` cell
+that quadratic-attention archs must skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, Tree
+
+LORA_MIX = 32     # TIME_MIX_EXTRA_DIM
+LORA_DECAY = 64
+
+
+def time_mix_spec(cfg) -> Tree:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    k = cfg.rwkv_head_dim
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "mu5": ParamSpec((5, d), ("null", "embed"), init="zeros", dtype=jnp.float32),
+        "lora_a": ParamSpec((d, 5 * LORA_MIX), ("embed", "null")),
+        "lora_b": ParamSpec((5, LORA_MIX, d), ("null", "null", "embed")),
+        "w0": ParamSpec((d,), ("embed",), init="const", scale=-0.6, dtype=jnp.float32),
+        "wa": ParamSpec((d, LORA_DECAY), ("embed", "null")),
+        "wb": ParamSpec((LORA_DECAY, d), ("null", "embed")),
+        "u": ParamSpec((h, k), ("heads", "head_dim"), init="normal",
+                       scale=0.3, dtype=jnp.float32),
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+        "ln_scale": ParamSpec((d,), ("embed",), init="ones", dtype=jnp.float32),
+        "ln_bias": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+    }
+
+
+def channel_mix_spec(cfg) -> Tree:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        "wr": ParamSpec((d, d), ("embed", "mlp")),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def _ddlerp(p: Tree, x, sx):
+    """Data-dependent token-shift mixing -> (xw, xk, xv, xr, xg)."""
+    base = x + sx * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(base @ p["lora_a"])                       # (..., 5*LM)
+    lo = lo.reshape(*lo.shape[:-1], 5, LORA_MIX)
+    delta = jnp.einsum("...cl,cld->c...d", lo, p["lora_b"].astype(lo.dtype))
+    mixed = [x + sx * (p["mu5"][c].astype(x.dtype) + delta[c].astype(x.dtype))
+             for c in range(5)]
+    return mixed                                             # [w, k, v, r, g]
+
+
+def _head_groupnorm(p: Tree, o, h: int, k: int, eps: float = 64e-5):
+    """Per-head LayerNorm over the value dim (RWKV's GroupNorm(H))."""
+    b, t, d = o.shape
+    of = o.reshape(b, t, h, k).astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    of = (of - mu) * jax.lax.rsqrt(var + eps)
+    of = of.reshape(b, t, d) * p["ln_scale"] + p["ln_bias"]
+    return of
+
+
+def _chunk_wkv(r, k, v, logw, u, state):
+    """One chunk of the WKV recurrence.
+
+    r/k/v: (B, H, C, K) f32; logw: (B, H, C, K) (<= 0); u: (H, K);
+    state: (B, H, K, V) f32. Returns (o (B,H,C,V), new_state).
+    """
+    la = jnp.cumsum(logw, axis=2)                            # (B,H,C,K)
+    # inter-chunk: r_t decayed to chunk start times carry state
+    r_dec = r * jnp.exp(la - logw)                           # e^{La(t-1)}
+    o_inter = jnp.einsum("bhtk,bhkv->bhtv", r_dec, state)
+    # intra-chunk: masked pairwise decayed scores
+    expo = (la - logw)[:, :, :, None, :] - la[:, :, None, :, :]  # (B,H,t,s,K)
+    c = r.shape[2]
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])     # s < t
+    pw = jnp.exp(jnp.where(mask[None, None, :, :, None], expo, -jnp.inf))
+    scores = jnp.einsum("bhtk,bhsk,bhtsk->bhts", r, k, pw)
+    diag = jnp.einsum("bhtk,hk,bhtk->bht", r, u, k)
+    scores = scores + diag[..., None] * jnp.eye(c, dtype=scores.dtype)
+    o_intra = jnp.einsum("bhts,bhsv->bhtv", scores, v)
+    # state update: decay to chunk end
+    k_dec = k * jnp.exp(la[:, :, -1:, :] - la)               # e^{La(C)-La(t)}
+    new_state = (state * jnp.exp(la[:, :, -1, :])[..., None]
+                 + jnp.einsum("bhtk,bhtv->bhkv", k_dec, v))
+    return o_inter + o_intra, new_state
+
+
+def time_mix_full(cfg, p: Tree, x, *, chunk: int = 64,
+                  state=None, x_prev=None, return_state: bool = False):
+    """RWKV6 attention over a full sequence. x: (B, S, D)."""
+    b, s, d = x.shape
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    sx = xs - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+
+    r = (xr @ p["wr"]).reshape(b, s, h, hk).transpose(0, 2, 1, 3).astype(jnp.float32)
+    kk = (xk @ p["wk"]).reshape(b, s, h, hk).transpose(0, 2, 1, 3).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, s, h, hk).transpose(0, 2, 1, 3).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + jnp.tanh(xw.astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+                    @ p["wb"].astype(jnp.float32))           # (B,S,D) <= 0
+    logw = logw.reshape(b, s, h, hk).transpose(0, 2, 1, 3)
+
+    if state is None:
+        state = jnp.zeros((b, h, hk, hk), jnp.float32)
+
+    nc = s // chunk
+    if nc <= 1 or s % chunk != 0:
+        o, state = _chunk_wkv(r, kk, v, logw, p["u"], state)
+    else:
+        def body(st, inp):
+            rc, kc, vc, wc = inp
+            o, st = _chunk_wkv(rc, kc, vc, wc, p["u"], st)
+            return st, o
+
+        split = lambda a: jnp.moveaxis(
+            a.reshape(b, h, nc, chunk, hk), 2, 0)
+        state, oc = jax.lax.scan(body, state,
+                                 (split(r), split(kk), split(v), split(logw)))
+        o = jnp.moveaxis(oc, 0, 2).reshape(b, h, s, hk)
+
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    o = _head_groupnorm(p, o, h, hk).astype(x.dtype) * g
+    out = o @ p["wo"]
+    if return_state:
+        return out, state, x[:, -1:]
+    return out
+
+
+def time_mix_step(cfg, p: Tree, x, state, x_prev):
+    """O(1) decode step. x: (B, 1, D); state: (B, H, K, V) f32."""
+    b, one, d = x.shape
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    sx = x_prev - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    r = (xr @ p["wr"]).reshape(b, h, hk).astype(jnp.float32)
+    kk = (xk @ p["wk"]).reshape(b, h, hk).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, h, hk).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + jnp.tanh(xw.astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+                    @ p["wb"].astype(jnp.float32))
+    w = jnp.exp(logw.reshape(b, h, hk))
+
+    ru_kv = jnp.einsum("bhk,hk,bhk->bh", r, p["u"], kk)
+    o = jnp.einsum("bhk,bhkv->bhv", r, state) + ru_kv[..., None] * v
+    state = state * w[..., None] + jnp.einsum("bhk,bhv->bhkv", kk, v)
+
+    o = o.reshape(b, 1, d)
+    o = _head_groupnorm(p, o, h, hk).astype(x.dtype) * g
+    return o @ p["wo"], state, x
+
+
+def channel_mix_full(cfg, p: Tree, x, x_prev=None):
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    sx = xs - x
+    xr = x + sx * p["mu_r"].astype(x.dtype)
+    xk = x + sx * p["mu_k"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+
+
+def channel_mix_step(cfg, p: Tree, x, x_prev):
+    sx = x_prev - x
+    xr = x + sx * p["mu_r"].astype(x.dtype)
+    xk = x + sx * p["mu_k"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"]), x

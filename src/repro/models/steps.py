@@ -1,0 +1,163 @@
+"""Step functions: train (microbatched), prefill, decode.
+
+These are the units the launcher jits with in/out shardings and the dry-run
+lowers. Cross-entropy keeps logits VOCAB-SHARDED end to end (constraining
+them data×model) — materializing (B, S, V) replicated fp32 logits is the
+single biggest memory mistake at assigned shapes (16.8 GB/device at
+llama3/train_4k; see EXPERIMENTS.md §Perf spike log).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.moe import ShardCtx
+from repro.optim import adamw
+
+AUX_WEIGHT = 0.01
+
+
+def _constrain(x, ctx: ShardCtx | None, spec):
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))
+
+
+def logits_pspec(ctx: ShardCtx):
+    """Sharding for (B, S, V) logits derived from the rule table (batch axes
+    may consume the model axis under zero3 — vocab falls back to replicated
+    rather than double-mapping an axis)."""
+    rules = ctx.rules or {}
+    batch = rules.get("batch", ctx.dp)
+    vocab = rules.get("vocab", ctx.tp)
+    bt = batch if isinstance(batch, tuple) else (batch,)
+    vt = vocab if isinstance(vocab, tuple) else (vocab,)
+    if any(v in bt for v in vt if v):
+        vocab = None
+    return P(batch, None, vocab)
+
+
+def mask_padded_vocab(cfg, logits):
+    """-inf the padded logit columns (vocab padded to TP-friendly size)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    ids = jnp.arange(logits.shape[-1])
+    return jnp.where(ids < cfg.vocab_size, logits,
+                     jnp.asarray(-1e30, logits.dtype))
+
+
+def cross_entropy(logits, labels, ctx: ShardCtx | None):
+    """Mean CE over tokens; logits stay vocab-sharded (f32 reductions)."""
+    lg = logits.astype(jnp.float32)
+    if ctx is not None:
+        lg = _constrain(lg, ctx, logits_pspec(ctx))
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_loss_fn(cfg: ModelConfig, ctx: ShardCtx | None):
+    def loss_fn(params, batch):
+        logits, aux, _ = transformer.forward(
+            cfg, params, batch["tokens"], mode="train", ctx=ctx,
+            positions=batch.get("positions"), frames=batch.get("frames"))
+        logits = mask_padded_vocab(cfg, logits)
+        ce = cross_entropy(logits, batch["labels"], ctx)
+        return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx | None,
+                    opt: adamw.AdamWConfig, *, microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    `microbatches > 1` runs gradient accumulation via lax.scan — the
+    activation working set shrinks by the same factor (and this loop is the
+    attachment point for a GPipe schedule; see DESIGN.md §9)."""
+    loss_fn = make_loss_fn(cfg, ctx)
+
+    def split_mb(batch):
+        """(B, ...) -> (mb, B/mb, ...) with the batch sharding EXPLICITLY
+        pinned to the data axes — otherwise GSPMD may shard the scan dim
+        (observed: 4x under-sharded batch, 32 GB/device x-stacks)."""
+        batch_axes = ((ctx.rules or {}).get("batch", ctx.dp)
+                      if ctx is not None else None)
+
+        def sp(x):
+            if x.ndim >= 2 and x.shape[0] == 3 and cfg.mrope_sections:  # (3,B,S)
+                y = jnp.moveaxis(
+                    x.reshape(3, microbatches, -1, *x.shape[2:]), 1, 0)
+                return _constrain(y, ctx, P(None, None, batch_axes,
+                                            *([None] * (y.ndim - 3))))
+            y = x.reshape(microbatches, -1, *x.shape[1:])
+            return _constrain(y, ctx, P(None, batch_axes,
+                                        *([None] * (y.ndim - 2))))
+        return jax.tree.map(sp, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            mb = split_mb(batch)
+
+            def body(acc, one):
+                (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, one)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return acc, (l, met)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, mets) = jax.lax.scan(body, zero, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), mets)
+
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            opt, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx | None):
+    """(params, batch) -> (last-position logits, cache)."""
+
+    def prefill_step(params, batch):
+        logits, _, cache = transformer.forward(
+            cfg, params, batch["tokens"], mode="prefill", ctx=ctx,
+            positions=batch.get("positions"), frames=batch.get("frames"))
+        lg = mask_padded_vocab(cfg, logits[:, -1:])
+        lg = _constrain(lg, ctx, logits_pspec(ctx)) if ctx else lg
+        return lg, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx | None):
+    """(params, cache, batch{tokens (B,1), cache_len ()}) -> (logits, cache)."""
+
+    def decode_step(params, cache, batch):
+        logits, _, new_cache = transformer.forward(
+            cfg, params, batch["tokens"], mode="decode", ctx=ctx,
+            cache=cache, cache_len=batch["cache_len"])
+        lg = mask_padded_vocab(cfg, logits)
+        lg = _constrain(lg, ctx, logits_pspec(ctx)) if ctx else lg
+        return lg, new_cache
+
+    return decode_step
+
+
+def greedy_next(logits):
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]

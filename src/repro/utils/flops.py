@@ -1,0 +1,101 @@
+"""Analytic MODEL_FLOPS / param counts per (config, shape).
+
+MODEL_FLOPS is the **useful** compute: 6·N·D for training (N = active
+non-embedding params, D = tokens), 2·N·D for inference, plus the attention
+score/value terms and the logits matmul. Used for the roofline's
+MODEL_FLOPS / HLO_FLOPs ratio (remat & redundancy waste shows up there).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig, ShapeSpec
+from repro.models import transformer
+from repro.models.common import count_params
+
+
+def param_counts(cfg: ModelConfig) -> dict:
+    """total / embedding / active (per-token) parameter counts."""
+    spec = transformer.model_spec(cfg)
+    total = count_params(spec)
+    emb = cfg.vocab_size * cfg.d_model
+    if cfg.learned_pos:
+        emb += cfg.max_position * cfg.d_model
+
+    # active = replace each MoE layer's expert bank by top_k experts + shared
+    inactive = 0
+    for i in range(cfg.n_layers):
+        ls = cfg.layer_kind(i)
+        if ls.ffn == "moe":
+            per_expert = 3 * cfg.d_model * cfg.d_ff  # wi(2f)+wo
+            inactive += (cfg.n_experts - cfg.top_k) * per_expert
+    active = total - emb - inactive
+    return {"total": total, "embedding": emb, "active": active}
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.n_layers)
+               if cfg.layer_kind(i).mixer in ("attn", "mla"))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Returns dict with useful-FLOPs for the whole step (all chips)."""
+    pc = param_counts(cfg)
+    n_act = pc["active"]
+    d = cfg.d_model
+    v = cfg.vocab_size
+    b, s = shape.global_batch, shape.seq_len
+
+    # effective per-head score+value width: GQA touches K and V of Dh each
+    # (fwd = 4*S_avg*H*Dh); absorbed MLA touches the latent twice + rope keys
+    # (fwd = 2*S_avg*H*(2r+dr)).
+    eff = (cfg.head_dim if cfg.attn_type != "mla"
+           else (2 * cfg.kv_lora_rank + cfg.qk_rope_dim) / 2)
+
+    if shape.kind == "train":
+        tokens = b * s
+        mult = 6              # fwd 2 + bwd 4
+        attn = mult * _attn_layers(cfg) * tokens * (s / 2) * 2 * (
+            cfg.n_heads * eff)
+        if cfg.is_encdec:
+            tokens_enc = b * cfg.encoder_seq
+            attn += mult * cfg.encoder_layers * tokens_enc * cfg.encoder_seq \
+                * 2 * cfg.n_heads * cfg.head_dim
+        logits = mult * tokens * d * v
+        dense = mult * tokens * n_act
+        return {"dense": dense, "attn": attn, "logits": logits,
+                "total": dense + attn + logits, "tokens": tokens}
+    if shape.kind == "prefill":
+        tokens = b * s
+        mult = 2
+        attn = mult * _attn_layers(cfg) * tokens * (s / 2) * 2 * (
+            cfg.n_heads * eff)
+        logits = mult * b * d * v          # only last position matters
+        dense = mult * tokens * n_act
+        return {"dense": dense, "attn": attn, "logits": logits,
+                "total": dense + attn + logits, "tokens": tokens}
+    # decode: one token per sequence against an s-length context
+    tokens = b
+    mult = 2
+    attn = mult * _attn_layers(cfg) * tokens * s * 2 * (cfg.n_heads * eff)
+    logits = mult * tokens * d * v
+    dense = mult * tokens * n_act
+    return {"dense": dense, "attn": attn, "logits": logits,
+            "total": dense + attn + logits, "tokens": tokens}
+
+
+def hbm_bytes_floor(cfg: ModelConfig, shape: ShapeSpec, n_chips: int) -> float:
+    """Lower-bound HBM traffic per chip: weights once (sharded) + KV cache
+    once (decode) — the number the memory roofline term is compared against."""
+    pc = param_counts(cfg)
+    wbytes = 2 * pc["total"] / n_chips              # bf16
+    if shape.kind == "decode":
+        b, s = shape.global_batch, shape.seq_len
+        if cfg.attn_type == "mla":
+            kv = b * s * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2 * _attn_layers(cfg)
+        else:
+            kv = (b * s * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+                  * _attn_layers(cfg))
+        return wbytes + kv / n_chips
+    return wbytes

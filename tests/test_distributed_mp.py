@@ -1,0 +1,76 @@
+"""Multi-device matrix-profile tests — run in a subprocess with 8 forced
+host devices so the main pytest process keeps its single CPU device."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_SNIPPET = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, %r)
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.scheduler import AnytimeScheduler
+from repro.core.ref import matrix_profile_bruteforce
+
+mesh = jax.make_mesh((8,), ("workers",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(1)
+ts = np.cumsum(rng.normal(size=600)).astype(np.float32)
+m = 20
+p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), m, exclusion=5)
+out = {}
+
+sch = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
+prev = None
+mono = True
+for r in range(sch.plan.n_rounds):
+    st = sch.step_round()
+    d = np.asarray(st.profile.to_distance(m))
+    if prev is not None and not (d <= prev + 1e-5).all():
+        mono = False
+    prev = d
+sch.finish_reverse()
+p, _ = sch.distance_profile()
+out["monotone"] = mono
+out["err"] = float(np.abs(np.asarray(p) - np.asarray(p_ref)).max())
+
+# failure + elastic resume
+sch2 = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
+sch2.step_round(); sch2.step_round(fail_workers={3})
+sch2.checkpoint("/tmp/mp_test_ckpt.npz")
+sch3 = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
+sch3.resume("/tmp/mp_test_ckpt.npz", n_workers=5)   # elastic shrink
+sch3.run(); sch3.finish_reverse()
+p3, _ = sch3.distance_profile()
+out["err_resume"] = float(np.abs(np.asarray(p3) - np.asarray(p_ref)).max())
+out["frac_after_fail"] = sch2.state.fraction_done
+print(json.dumps(out))
+""" % (SRC,)
+
+
+@pytest.fixture(scope="module")
+def results():
+    proc = subprocess.run([sys.executable, "-c", _SNIPPET],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_multiworker_exact(results):
+    assert results["err"] < 2e-3
+
+
+def test_anytime_monotone_across_workers(results):
+    assert results["monotone"]
+
+
+def test_failure_and_elastic_resume_exact(results):
+    assert results["err_resume"] < 2e-3
+    assert 0.0 < results["frac_after_fail"] < 1.0

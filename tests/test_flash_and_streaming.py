@@ -1,0 +1,116 @@
+"""Flash-attention Pallas kernel sweeps + streaming matrix profile."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attn import flash_attention, ref_attention
+
+
+@pytest.mark.parametrize("b,h,s,d,bq,bk,causal", [
+    (2, 2, 128, 32, 64, 64, True),
+    (1, 4, 256, 16, 128, 64, True),
+    (2, 1, 128, 64, 32, 128, True),
+    (1, 2, 128, 32, 64, 64, False),
+    (1, 1, 64, 8, 64, 64, True),      # single block
+])
+def test_flash_matches_ref(b, h, s, d, bq, bk, causal):
+    k1, k2, k3 = jax.random.split(jax.random.key(b * 100 + s), 3)
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(k2, (b, h, s, d), jnp.float32)
+    v = jax.random.normal(k3, (b, h, s, d), jnp.float32)
+    out = flash_attention(q, k, v, bq=bq, bk=bk, causal=causal)
+    ref = ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(k1, (1, 2, 128, 32), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(k2, (1, 2, 128, 32), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(k3, (1, 2, 128, 32), jnp.float32).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, bq=64, bk=64)
+    ref = ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    assert out.dtype == jnp.bfloat16
+
+
+def test_flash_block_size_invariance():
+    k1, k2, k3 = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(k1, (1, 2, 128, 16), jnp.float32)
+    k = jax.random.normal(k2, (1, 2, 128, 16), jnp.float32)
+    v = jax.random.normal(k3, (1, 2, 128, 16), jnp.float32)
+    a = flash_attention(q, k, v, bq=32, bk=32)
+    b = flash_attention(q, k, v, bq=128, bk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# -- streaming profile ---------------------------------------------------------
+
+
+def _batch_profile(ts, m, excl, normalize):
+    import jax.numpy as jnp
+    from repro.core.matrix_profile import matrix_profile, matrix_profile_nonnorm
+    if normalize:
+        return np.asarray(matrix_profile(ts, m, excl)[0])
+    return np.asarray(matrix_profile_nonnorm(jnp.asarray(ts), m, excl)[0])
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+def test_streaming_matches_batch(normalize):
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(2)
+    ts = np.cumsum(rng.normal(size=260)).astype(np.float32)
+    m, excl = 16, 4
+    sp = StreamingProfile(m, excl, normalize=normalize)
+    sp.append(ts[:100])
+    sp.append(ts[100:])                      # mixed batch sizes
+    batch = _batch_profile(ts, m, excl, normalize)
+    np.testing.assert_allclose(sp.distances(), batch, rtol=3e-3, atol=3e-3)
+
+
+def test_streaming_monotone_and_incremental():
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(5)
+    sp = StreamingProfile(8, 2, normalize=False)
+    sp.append(rng.normal(size=60))
+    d1 = sp.distances().copy()
+    sp.append(rng.normal(size=20))
+    d2 = sp.distances()
+    assert (d2[: d1.size] <= d1 + 1e-12).all(), "appends may only improve"
+    assert d2.size > d1.size
+
+
+def test_streaming_discord_detection():
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(1)
+    base = (2.0 + 0.02 * rng.normal(size=300)).astype(np.float64)
+    base[200:216] += np.linspace(0, 1.0, 16)
+    sp = StreamingProfile(16, 4, normalize=False)
+    sp.append(base)
+    pos, score = sp.top_discord()
+    assert 185 <= pos <= 216, (pos, score)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_streaming_property_valid_pairs(seed):
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(seed)
+    ts = rng.normal(size=120)
+    sp = StreamingProfile(8, 2, normalize=False)
+    sp.append(ts)
+    d = sp.distances()
+    idx = sp.indices()
+    for i in range(len(d)):
+        if not np.isfinite(d[i]):
+            continue
+        j = int(idx[i])
+        assert abs(i - j) >= 2
+        true = np.linalg.norm(ts[i:i + 8] - ts[j:j + 8])
+        assert abs(true - d[i]) < 1e-6

@@ -1,0 +1,85 @@
+"""Property tests for NATSA's balanced anytime partitioning."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(100, 5000), st.integers(1, 32), st.integers(1, 16),
+       st.sampled_from([1, 8, 16, 64]))
+def test_ranges_cover_exactly(l, excl, parts, band):
+    excl = min(excl, l // 4 + 1)
+    ranges = partition.balanced_ranges(l, excl, parts, band=band)
+    cov = np.zeros(l, int)
+    for k0, k1 in ranges:
+        for k in range(max(k0, 0), min(k1, l)):
+            cov[k] += 1
+    assert (cov[excl:] == 1).all(), "every diagonal covered exactly once"
+    assert (cov[:excl] == 0).all(), "exclusion zone untouched"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2000, 20000), st.integers(2, 64))
+def test_work_balance(l, parts):
+    """NATSA's claim: equal WORK per unit (within one band granularity)."""
+    excl = 8
+    ranges = partition.balanced_ranges(l, excl, parts, band=1)
+    w = np.array([partition.range_work(l, r) for r in ranges], float)
+    total = w.sum()
+    if parts * 4 > (l - excl):
+        return  # degenerate: fewer diagonals than parts
+    assert w.max() <= total / parts + (l + 1), "no unit exceeds fair share + one diagonal"
+    # vs the naive equal-diagonal-count split the paper argues against
+    naive = np.array_split(np.arange(excl, l), parts)
+    nw = np.array([partition.diag_work(l, ks).sum() for ks in naive if ks.size])
+    assert w.max() <= nw.max() + (l + 1), "never worse than naive"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(500, 5000), st.integers(1, 8), st.integers(1, 6))
+def test_interleaved_plan_rounds(l, workers, cpw):
+    plan = partition.interleaved_chunks(l, 8, workers, chunks_per_worker=cpw, band=16)
+    seen = set()
+    for r in plan.rounds:
+        assert len(r) == workers
+        for c in r:
+            if c >= 0:
+                assert c not in seen, "chunk scheduled twice"
+                seen.add(c)
+    assert seen == {c for c in range(len(plan.chunks))
+                    if plan.chunks[c][1] > plan.chunks[c][0]} | (
+        seen & set(range(len(plan.chunks))))
+    # all non-empty chunks scheduled
+    nonempty = {c for c in range(len(plan.chunks))
+                if partition.range_work(l, plan.chunks[c]) > 0}
+    assert nonempty <= seen
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(500, 4000), st.integers(2, 8), st.integers(1, 8))
+def test_replan_covers_remaining(l, w_before, w_after):
+    plan = partition.interleaved_chunks(l, 4, w_before, chunks_per_worker=4)
+    done = np.zeros(len(plan.chunks), bool)
+    done[:: 2] = True  # arbitrary progress
+    new = partition.replan_remaining(plan, done, w_after)
+    scheduled = {c for r in new.rounds for c in r if c >= 0}
+    assert scheduled == {c for c in range(len(plan.chunks)) if not done[c]}
+    assert new.n_workers == w_after
+
+
+def test_anytime_round_spreads_coverage():
+    """Each round must touch the whole diagonal span (anytime uniformity)."""
+    l, excl = 10000, 16
+    plan = partition.interleaved_chunks(l, excl, 8, chunks_per_worker=8)
+    span = l - excl
+    for r in plan.rounds:
+        ks = [plan.chunks[c][0] for c in r if c >= 0]
+        assert max(ks) - min(ks) > span * 0.5, "round concentrated in one region"
+
+
+def test_balance_badness_metric():
+    assert partition.balance_badness(1000, [(8, 500), (500, 1000)]) > 1.0
+    ranges = partition.balanced_ranges(100000, 8, 16, band=1)
+    assert partition.balance_badness(100000, ranges) < 1.05
