@@ -82,8 +82,8 @@ sys.path.insert(0, "{src}")
 import jax, numpy as np
 from repro.core.scheduler import AnytimeScheduler
 from repro.data.pipeline import random_walk
-mesh = jax.make_mesh(({P},), ("workers",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_mesh
+mesh = compat_mesh(({P},), ("workers",))
 ts = random_walk(6000, seed=2)
 sch = AnytimeScheduler(ts, 64, mesh, chunks_per_worker=4, band=64)
 sch.run(1)  # warmup one round
@@ -145,6 +145,41 @@ def bench_anytime():
          f"area_under_error={auc:.4f}")
 
 
+def bench_ab_join():
+    """AB join (query corpus vs reference) — engine, kernel, brute force."""
+    from repro.core.matrix_profile import ab_join
+    from repro.core.ref import ab_join_bruteforce
+    for (na, nb, m) in ((2048, 1024, 64), (4096, 512, 128)):
+        ts_a = pipeline.random_walk(na, seed=11)
+        ts_b = pipeline.random_walk(nb, seed=12)
+        t_bf = _timeit(lambda a, b: ab_join_bruteforce(
+            jnp.asarray(a), jnp.asarray(b), m)[0], ts_a, ts_b, reps=2)
+        t_eng = _timeit(lambda a, b: ab_join(a, b, m)[0], ts_a, ts_b, reps=3)
+        t_krn = _timeit(lambda a, b: ops.natsa_ab_join(
+            a, b, m, it=256, dt=16)[0], ts_a, ts_b, reps=2)
+        emit(f"ab_bruteforce_a{na}_b{nb}", t_bf, "baseline")
+        emit(f"ab_engine_a{na}_b{nb}", t_eng,
+             f"speedup_vs_bf={t_bf/t_eng:.2f}x")
+        emit(f"ab_kernel_interp_a{na}_b{nb}", t_krn,
+             f"speedup_vs_bf={t_bf/t_krn:.2f}x(interpret-mode)")
+
+
+def bench_batch():
+    """Batched multi-series profiles: one vmapped dispatch vs a host loop."""
+    from repro.core.matrix_profile import batch_profile, matrix_profile
+    for (bs, n, m) in ((8, 1024, 32), (16, 512, 16)):
+        stack = np.stack([pipeline.random_walk(n, seed=100 + i)
+                          for i in range(bs)])
+        t_loop = _timeit(
+            lambda s: jax.block_until_ready(
+                [matrix_profile(row, m)[0] for row in s]),
+            stack, reps=2)
+        t_batch = _timeit(lambda s: batch_profile(s, m)[0], stack, reps=3)
+        emit(f"mp_loop_b{bs}_n{n}", t_loop, "baseline")
+        emit(f"mp_batch_b{bs}_n{n}", t_batch,
+             f"speedup_vs_loop={t_loop/t_batch:.2f}x")
+
+
 def bench_partition():
     l, excl = 500_000, 64
     for parts in (16, 256):
@@ -154,6 +189,17 @@ def bench_partition():
         b_nat = partition.balance_badness(l, nat)
         b_naive = partition.balance_badness(l, naive)
         emit(f"partition_badness_p{parts}", 0.0,
+             f"natsa={b_nat:.3f} naive={b_naive:.3f} "
+             f"straggler_reduction={b_naive/b_nat:.2f}x")
+    # rectangular AB space: diagonal lengths ramp at BOTH corners
+    la, lb = 400_000, 150_000
+    for parts in (16, 256):
+        nat = partition.balanced_ranges_ab(la, lb, parts, band=64)
+        naive = [(int(k[0]), int(k[-1]) + 1) for k in
+                 np.array_split(np.arange(-(la - 1), lb), parts)]
+        b_nat = partition.balance_badness_ab(la, lb, nat)
+        b_naive = partition.balance_badness_ab(la, lb, naive)
+        emit(f"partition_ab_badness_p{parts}", 0.0,
              f"natsa={b_nat:.3f} naive={b_naive:.3f} "
              f"straggler_reduction={b_naive/b_nat:.2f}x")
 
@@ -203,15 +249,29 @@ def bench_lm_decode():
         emit(f"lm_decode_step_smoke_{arch}", us, "cpu-smoke-config")
 
 
-def main() -> None:
+BENCHES = {
+    "baseline": bench_vs_baseline,
+    "ab_join": bench_ab_join,
+    "batch": bench_batch,
+    "partition": bench_partition,
+    "bytes": bench_bytes_proxy,
+    "anytime": bench_anytime,
+    "scaling": bench_scaling,
+    "lm_train": bench_lm_train,
+    "lm_decode": bench_lm_decode,
+}
+
+
+def main(argv: list[str] | None = None) -> None:
+    """Run all benches, or a subset: python benchmarks/run.py ab_join batch"""
+    names = list(argv if argv is not None else sys.argv[1:]) or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown benches {unknown}; choose from "
+                         f"{sorted(BENCHES)}")
     print("name,us_per_call,derived")
-    bench_vs_baseline()
-    bench_partition()
-    bench_bytes_proxy()
-    bench_anytime()
-    bench_scaling()
-    bench_lm_train()
-    bench_lm_decode()
+    for n in names:
+        BENCHES[n]()
     out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "bench_results.csv")
     os.makedirs(os.path.dirname(out), exist_ok=True)

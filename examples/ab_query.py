@@ -1,0 +1,97 @@
+"""AB-join quickstart: query a reference corpus, batch a fleet of series.
+
+Three serving-shaped workloads on synthetic telemetry:
+
+  1. `ab_join`     — which part of the reference corpus does each piece of
+                     the query stream resemble most? (cross-series join,
+                     no exclusion zone)
+  2. `StreamingProfile.query` — same question against an append-only
+                     reference that keeps growing between queries
+  3. `batch_profile` — self-join profiles for a whole fleet of series in
+                     ONE vmapped dispatch
+
+    PYTHONPATH=src python examples/ab_query.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.matrix_profile import ab_join, batch_profile
+from repro.core.streaming import StreamingProfile
+from repro.kernels import ops
+
+
+def main():
+    m = 100
+    rng = np.random.default_rng(17)
+
+    # reference corpus: smooth background with a distinctive chirp at 3000
+    n_ref = 5000
+    ref = np.convolve(np.cumsum(rng.normal(size=n_ref + 40)),
+                      np.ones(41) / 41, mode="valid")[:n_ref]
+    t = np.linspace(0, 1, m)
+    chirp = np.sin(2 * np.pi * (3 * t + 5 * t * t)) * 4
+    ref[3000:3000 + m] = chirp
+    ref = ref.astype(np.float32)
+
+    # query stream: mostly novel, but re-plays the chirp at offset 400
+    n_q = 900
+    query = np.convolve(np.cumsum(rng.normal(size=n_q + 40)),
+                        np.ones(41) / 41, mode="valid")[:n_q]
+    query[400:400 + m] = chirp + 0.05 * rng.normal(size=m)
+    query = query.astype(np.float32)
+
+    print(f"reference n={n_ref}, query n={n_q}, window m={m}")
+
+    # 1. AB join via the band engine
+    dist, idx = ab_join(query, ref, m)
+    best_q = int(np.argmin(np.asarray(dist)))
+    print(f"[ab_join] best query window starts at {best_q} "
+          f"(chirp planted at 400), matches reference position "
+          f"{int(idx[best_q])} (planted at 3000), "
+          f"dist={float(dist[best_q]):.3f}")
+    assert abs(best_q - 400) <= 3 and abs(int(idx[best_q]) - 3000) <= 3
+
+    # same join through the Pallas kernel wrapper (interpret mode on CPU)
+    kdist, kidx = ops.natsa_ab_join(query, ref, m, it=256, dt=16)
+    err = np.abs(np.asarray(kdist) - np.asarray(dist))
+    print(f"[pallas kernel, interpret] max |Δ| vs engine: "
+          f"{err[np.isfinite(err)].max():.2e}")
+
+    # 2. streaming corpus + query scoring
+    sp = StreamingProfile(m, exclusion=m // 4)
+    sp.append(ref[:4000])
+    d1, i1 = sp.query(query)
+    sp.append(ref[4000:])            # corpus grows, queries re-scored
+    d2, i2 = sp.query(query)
+    print(f"[streaming.query] best match {float(d2.min()):.3f} at query "
+          f"{int(np.argmin(d2))} -> ref {int(i2[np.argmin(d2)])}; "
+          f"growing the corpus only improves: "
+          f"{bool((d2 <= d1 + 1e-9).all())}")
+    assert (d2 <= d1 + 1e-9).all()
+
+    # 3. fleet batching: 6 periodic series, one with a shape anomaly
+    tt = np.arange(1200)
+    fleet = np.stack([
+        np.sin(2 * np.pi * tt / 60 + rng.uniform(0, 6))
+        + 0.05 * rng.normal(size=1200)
+        for _ in range(6)
+    ]).astype(np.float32)
+    fleet[4, 600:632] = 0.5 * rng.normal(size=32)   # noise burst in series 4
+    bdist, _ = batch_profile(fleet, 32)
+    discord_scores = np.asarray(bdist).max(axis=1)
+    worst = int(np.argmax(discord_scores))
+    print(f"[batch_profile] fleet discord scores: "
+          f"{np.round(discord_scores, 2)} -> series {worst} flagged "
+          f"(anomaly planted in series 4)")
+    assert worst == 4
+    print("OK — AB query, streaming query, and fleet batching all recovered "
+          "the planted structure.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,10 @@
 """Core NATSA engine: matrix profile, partitioning, anytime scheduling."""
 
 from repro.core.matrix_profile import (  # noqa: F401
-    ProfileState, matrix_profile, top_discords, top_motif,
+    ProfileState, ab_join, batch_ab_join, batch_profile, matrix_profile,
+    top_discords, top_motif,
 )
-from repro.core.zstats import ZStats, compute_stats, corr_to_dist  # noqa: F401
+from repro.core.zstats import (  # noqa: F401
+    CrossStats, ZStats, compute_cross_stats_host, compute_stats, corr_to_dist,
+    self_cross,
+)

@@ -22,9 +22,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.matrix_profile import (
-    DEFAULT_RESEED, NEG, ProfileState, band_rowmax, centered_windows,
+    DEFAULT_RESEED, NEG, ProfileState, band_rowmax, band_rowmax_ab,
+    centered_windows,
 )
-from repro.core.zstats import ZStats
+from repro.core.zstats import CrossStats, ZStats
+from repro.utils.compat import shard_map_compat
 
 
 def pmax_profile(state: ProfileState, axis: str) -> ProfileState:
@@ -55,6 +57,30 @@ def worker_chunk(stats: ZStats, k0: jax.Array, k1: jax.Array,
     return state
 
 
+def worker_chunk_ab(cross: CrossStats, k0: jax.Array, k1: jax.Array,
+                    n_bands: int, band: int,
+                    reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+    """Row-max over one SIGNED diagonal chunk [k0, k1) of the AB rectangle.
+
+    Same structure as `worker_chunk`; diagonals may be negative and the
+    chunk end is masked per-diagonal (AB chunk widths are not always
+    band-aligned — the exclusion gap forces odd cuts)."""
+    la = cross.l_a
+    wa = centered_windows(cross.a) if reseed_every is not None else None
+    wb = centered_windows(cross.b) if reseed_every is not None else None
+
+    def body(state: ProfileState, b):
+        start = k0 + b * band
+        corr, idx = band_rowmax_ab(cross, start, band, k_hi=k1,
+                                   reseed_every=reseed_every, wa=wa, wb=wb)
+        corr = jnp.where(start < k1, corr, NEG)
+        return state.merge(ProfileState(corr, idx)), None
+
+    init = ProfileState.empty(la)
+    state, _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return state
+
+
 def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
     """SPMD function for one anytime round.
 
@@ -68,10 +94,31 @@ def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
         local = worker_chunk(stats, k0_local[0], k1_local[0], n_bands, band)
         return pmax_profile(running.merge(local), axis)
 
-    shmapped = jax.shard_map(
+    shmapped = shard_map_compat(
         per_worker, mesh=mesh,
         in_specs=(P(), P(), P(axis), P(axis)),
         out_specs=P(),
-        check_vma=False,
+    )
+    return jax.jit(shmapped)
+
+
+def make_round_fn_ab(mesh, n_bands: int, band: int, axis: str = "workers"):
+    """AB analogue of `make_round_fn`: one anytime round over signed chunks.
+
+    Signature: (cross, running_profile, k0s (P,), k1s (P,)) -> merged profile.
+    Idle workers pass k0 == k1. CrossStats (both series' streams + seeds) are
+    replicated — still O(n_a + n_b) traffic vs the O(n_a * n_b) rectangle.
+    """
+
+    def per_worker(cross: CrossStats, running: ProfileState,
+                   k0_local, k1_local):
+        local = worker_chunk_ab(cross, k0_local[0], k1_local[0],
+                                n_bands, band)
+        return pmax_profile(running.merge(local), axis)
+
+    shmapped = shard_map_compat(
+        per_worker, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis)),
+        out_specs=P(),
     )
     return jax.jit(shmapped)

@@ -32,7 +32,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.zstats import ZStats, compute_stats, corr_to_dist
+from repro.core.zstats import CrossStats, ZStats, compute_stats, corr_to_dist
 
 NEG = -2.0  # corr lives in [-1, 1]; NEG marks "not yet computed"
 
@@ -189,6 +189,200 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
     return merged.to_distance(m), merged.index
 
 
+# -- AB join: rectangular diagonal space -------------------------------------
+#
+# The self-join engine above streams the upper triangle (k >= excl) and gets
+# the lower triangle from the reversal identity. That identity has a HOLE for
+# two series of different lengths (rows with l_b - l_a < j - i < 0 appear in
+# neither pass), so the AB engine streams the SIGNED diagonal space
+# k = j - i in [-(l_a-1), l_b) directly: diagonal k starts at cell
+# (max(0,-k), max(0,k)), its seed covariance is CrossStats.cov0s, and deltas
+# are masked to zero before the start — the cumsum recurrence then holds the
+# seed until the diagonal enters the rectangle. Self-join == the case A is B
+# with the band |k| < excl excluded (property-tested).
+
+
+def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
+                   k_hi=None, reseed_every: int | None = None,
+                   wa: jax.Array | None = None,
+                   wb: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Row-wise max correlation of A vs B over signed diagonals [k0, k0+band).
+
+    Returns (corr (l_a,), index (l_a,)) — index is the best j in B (or -1).
+    `k0` may be traced and NEGATIVE; `band` is static. `k_hi` additionally
+    masks diagonals >= k_hi (chunk ends that are not band-aligned).
+    """
+    sa, sb = cross.a, cross.b
+    la, lb = sa.n_subsequences, sb.n_subsequences
+    ks = k0 + jnp.arange(band)                     # (D,) signed
+    i = jnp.arange(la)                             # (l_a,)
+    j = i[None, :] + ks[:, None]                   # (D, l_a)
+    jc = jnp.clip(j, 0, lb - 1)                    # clamp for gathers
+    valid = (j >= 0) & (j < lb)
+    if k_hi is not None:
+        valid = valid & (ks < k_hi)[:, None]
+
+    dfj = jnp.take(sb.df, jc)
+    dgj = jnp.take(sb.dg, jc)
+    invnj = jnp.take(sb.invn, jc)
+    cov0b = jnp.take(cross.cov0s, jnp.clip(ks + la - 1, 0, la + lb - 2))
+
+    delta = sa.df[None, :] * dgj + dfj * sa.dg[None, :]
+    # predecessor cell (i-1, j-1) must exist; before a negative diagonal's
+    # start (j <= 0) the masked cumsum simply carries the seed forward.
+    delta = jnp.where(valid & (i[None, :] >= 1) & (j >= 1), delta, 0.0)
+    cov = cov0b[:, None] + jnp.cumsum(delta, axis=1)
+
+    if reseed_every is not None:
+        if wa is None:
+            wa = centered_windows(sa)
+        if wb is None:
+            wb = centered_windows(sb)
+        R = int(reseed_every)
+        n_seg = -(-la // R)
+        rows = jnp.minimum(jnp.arange(n_seg) * R, la - 1)         # (S,)
+        jrow = rows[None, :] + ks[:, None]                        # (D, S)
+        jr = jnp.clip(jrow, 0, lb - 1)
+        w_r = wa[rows]                                            # (S, m)
+        w_j = wb[jr]                                              # (D, S, m)
+        seeds = jnp.einsum("sm,dsm->ds", w_r, w_j)                # (D, S)
+        drift = seeds - jnp.take(cov, rows, axis=1)               # (D, S)
+        # segments whose start row is outside the diagonal keep the raw
+        # cumsum (bounded by R rows of drift, same as the baseline bound)
+        drift = jnp.where((jrow >= 0) & (jrow < lb), drift, 0.0)
+        seg = jnp.minimum(i // R, n_seg - 1)                      # (l_a,)
+        cov = cov + jnp.take(drift, seg, axis=1)
+
+    corr = cov * sa.invn[None, :] * invnj
+    corr = jnp.where(valid, corr, NEG)
+
+    best = jnp.argmax(corr, axis=0)
+    corr_best = jnp.take_along_axis(corr, best[None, :], axis=0)[0]
+    idx_best = (i + k0 + best).astype(jnp.int32)
+    idx_best = jnp.where(corr_best > NEG, idx_best, -1)
+    return corr_best.astype(jnp.float32), idx_best
+
+
+def chunk_rowmax_ab(cross: CrossStats, k0, width_static: int, band: int,
+                    reseed_every: int | None = DEFAULT_RESEED,
+                    k_hi=None) -> ProfileState:
+    """Row-max over signed diagonals [k0, k0 + width_static), band-scanned."""
+    la = cross.l_a
+    n_bands = -(-width_static // band)
+    wa = centered_windows(cross.a) if reseed_every is not None else None
+    wb = centered_windows(cross.b) if reseed_every is not None else None
+
+    def body(state: ProfileState, b):
+        start = k0 + b * band
+        corr, idx = band_rowmax_ab(cross, start, band, k_hi=k_hi,
+                                   reseed_every=reseed_every, wa=wa, wb=wb)
+        return state.merge(ProfileState(corr, idx)), None
+
+    init = ProfileState.empty(la)
+    state, _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return state
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def ab_join_from_stats(cross: CrossStats, exclusion: int = 0, band: int = 64,
+                       reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+    """Jitted AB-join core: max-corr profile of A's rows over the rectangle.
+
+    `exclusion` > 0 removes the band |j - i| < exclusion — only meaningful
+    when A is B, where it makes the AB join IDENTICAL to the self-join.
+    """
+    la, lb = cross.l_a, cross.l_b
+    excl = int(exclusion)
+    state = ProfileState.empty(la)
+    neg_width = la - excl          # diagonals [-(l_a-1), -excl]
+    pos_width = lb - excl          # diagonals [excl, l_b)
+    if neg_width > 0:
+        st = chunk_rowmax_ab(cross, jnp.int32(-(la - 1)), neg_width, band,
+                             reseed_every, k_hi=-excl + 1)
+        state = state.merge(st)
+    if pos_width > 0:
+        st = chunk_rowmax_ab(cross, jnp.int32(excl), pos_width, band,
+                             reseed_every, k_hi=lb)
+        state = state.merge(st)
+    return state
+
+
+def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
+            band: int = 64, reseed_every: int | None = DEFAULT_RESEED,
+            normalize: bool = True) -> tuple[jax.Array, jax.Array]:
+    """AB join: for every subsequence of A, its nearest neighbour in B.
+
+    Returns (distance_profile (l_a,), index (l_a,)); index[i] is the matching
+    start position in B. No exclusion zone by default (cross-series matches
+    at equal offsets are legitimate); `exclusion` exists so that
+    ab_join(ts, ts, m, exclusion=e) == matrix_profile(ts, m, exclusion=e).
+    Stream precompute is host-side f64, the O(l_a*l_b) engine device f32.
+    """
+    import numpy as np
+
+    from repro.core.zstats import compute_cross_stats_host
+
+    m = int(window)
+    excl = 0 if exclusion is None else int(exclusion)
+    if not normalize:
+        return ab_join_nonnorm(jnp.asarray(np.asarray(ts_a), jnp.float32),
+                               jnp.asarray(np.asarray(ts_b), jnp.float32),
+                               m, excl, band)
+    cross = compute_cross_stats_host(np.asarray(ts_a), np.asarray(ts_b), m)
+    merged = ab_join_from_stats(cross, excl, band, reseed_every)
+    return merged.to_distance(m), merged.index
+
+
+def batch_profile(series, window: int, *, exclusion: int | None = None,
+                  band: int = 64, reseed_every: int | None = DEFAULT_RESEED,
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Self-join matrix profiles for a (B, n) stack in ONE vmapped program.
+
+    Per-series host f64 stream prep, then a single vmap of the jitted band
+    engine — the multi-tenant serving path (one dispatch, B profiles).
+    Returns (distances (B, l), indices (B, l)).
+    """
+    import numpy as np
+
+    from repro.core.zstats import compute_stats_host
+
+    arr = np.asarray(series)
+    if arr.ndim != 2:
+        raise ValueError(f"expected a (batch, n) stack, got shape {arr.shape}")
+    m = int(window)
+    excl = default_exclusion(m) if exclusion is None else int(exclusion)
+    stats = [compute_stats_host(s, m) for s in arr]
+    stats_rev = [compute_stats_host(s[::-1], m) for s in arr]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stats)
+    stack_rev = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_rev)
+    fn = jax.vmap(
+        lambda s, sr: profile_from_stats(s, sr, excl, band, reseed_every))
+    merged = fn(stack, stack_rev)
+    return merged.to_distance(m), merged.index
+
+
+def batch_ab_join(stack_a, stack_b, window: int, *,
+                  exclusion: int | None = None, band: int = 64,
+                  reseed_every: int | None = DEFAULT_RESEED,
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Vmapped AB joins: row b of (B, n_a) against row b of (B, n_b)."""
+    import numpy as np
+
+    from repro.core.zstats import compute_cross_stats_host
+
+    a, b = np.asarray(stack_a), np.asarray(stack_b)
+    if a.ndim != 2 or b.ndim != 2 or a.shape[0] != b.shape[0]:
+        raise ValueError(f"expected matching (batch, n) stacks, got "
+                         f"{a.shape} vs {b.shape}")
+    m = int(window)
+    excl = 0 if exclusion is None else int(exclusion)
+    crosses = [compute_cross_stats_host(ra, rb, m) for ra, rb in zip(a, b)]
+    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *crosses)
+    fn = jax.vmap(lambda c: ab_join_from_stats(c, excl, band, reseed_every))
+    merged = fn(stack)
+    return merged.to_distance(m), merged.index
+
+
 def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
     """Non-normalized squared-Euclidean row-min over diagonals [k0, k0+band).
 
@@ -258,6 +452,98 @@ def matrix_profile_nonnorm(ts: jax.Array, window: int,
     rev_corr = rev.corr[::-1]
     rev_idx = jnp.where(rev.index[::-1] >= 0, l - 1 - rev.index[::-1], -1)
     merged = fwd.merge(ProfileState(rev_corr, rev_idx.astype(jnp.int32)))
+    dist = jnp.sqrt(jnp.maximum(-merged.corr, 0.0))
+    dist = jnp.where(jnp.isfinite(merged.corr), dist, jnp.inf)
+    return dist, merged.index
+
+
+def band_rowmin_nonnorm_ab(ts_a: jax.Array, ts_b: jax.Array, d20s: jax.Array,
+                           window: int, k0, band: int, k_hi=None):
+    """Non-normalized squared-Euclidean AB row-min over signed diagonals
+    [k0, k0+band). `d20s` are the seed distances at each diagonal's start
+    cell (index k + l_a - 1). Returns (neg_d2 (l_a,), idx (l_a,))."""
+    m = int(window)
+    na, nb = ts_a.shape[0], ts_b.shape[0]
+    la, lb = na - m + 1, nb - m + 1
+    ks = k0 + jnp.arange(band)                          # (D,) signed
+    i = jnp.arange(la)
+    j = i[None, :] + ks[:, None]                        # (D, l_a)
+    valid = (j >= 0) & (j < lb)
+    if k_hi is not None:
+        valid = valid & (ks < k_hi)[:, None]
+
+    d20 = jnp.take(d20s, jnp.clip(ks + la - 1, 0, la + lb - 2))
+
+    ga = lambda x: jnp.take(ts_a, jnp.clip(x, 0, na - 1))   # noqa: E731
+    gb = lambda x: jnp.take(ts_b, jnp.clip(x, 0, nb - 1))   # noqa: E731
+    tim = ga(i[None, :] + m - 1)                        # A[i+m-1]
+    tjm = gb(j + m - 1)                                 # B[j+m-1]
+    tip = ga(i[None, :] - 1)                            # A[i-1]
+    tjp = gb(j - 1)                                     # B[j-1]
+    delta = (tim - tjm) ** 2 - (tip - tjp) ** 2
+    delta = jnp.where(valid & (i[None, :] >= 1) & (j >= 1), delta, 0.0)
+    d2 = d20[:, None] + jnp.cumsum(delta, axis=1)
+    neg = jnp.where(valid, -jnp.maximum(d2, 0.0), -jnp.inf)
+
+    best = jnp.argmax(neg, axis=0)
+    neg_best = jnp.take_along_axis(neg, best[None, :], axis=0)[0]
+    idx = jnp.where(jnp.isfinite(neg_best),
+                    (i + k0 + best).astype(jnp.int32), -1)
+    return neg_best.astype(jnp.float32), idx
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4))
+def ab_join_nonnorm(ts_a: jax.Array, ts_b: jax.Array, window: int,
+                    exclusion: int = 0, band: int = 64):
+    """Exact non-normalized AB join -> (euclid distance (l_a,), idx (l_a,)).
+
+    Same signed-diagonal streaming as the z-normalized AB engine with the
+    raw-distance recurrence of `band_rowmin_nonnorm`.
+    """
+    from repro.core.zstats import sliding_dot
+
+    m = int(window)
+    excl = int(exclusion)
+    ts_a = jnp.asarray(ts_a, jnp.float32)
+    ts_b = jnp.asarray(ts_b, jnp.float32)
+    # distances are invariant under a COMMON shift of both series; removing
+    # the shared level keeps the f32 seeds (ssq + ssq - 2*qt) well-conditioned
+    # on offset-heavy data (per-series shifts would change the answer).
+    c = 0.5 * (jnp.mean(ts_a) + jnp.mean(ts_b))
+    ts_a = ts_a - c
+    ts_b = ts_b - c
+    la = ts_a.shape[0] - m + 1
+    lb = ts_b.shape[0] - m + 1
+
+    def ssq(ts):
+        csq = jnp.concatenate([jnp.zeros((1,), ts.dtype), jnp.cumsum(ts * ts)])
+        return csq[m:] - csq[:-m]
+
+    ssq_a, ssq_b = ssq(ts_a), ssq(ts_b)
+    qt_pos = sliding_dot(ts_a[:m], ts_b)                # <A_0, B_k>, (l_b,)
+    qt_neg = sliding_dot(ts_b[:m], ts_a)                # <A_i, B_0>, (l_a,)
+    d20_pos = ssq_a[0] + ssq_b - 2.0 * qt_pos           # k >= 0 seeds
+    d20_neg = ssq_a[1:] + ssq_b[0] - 2.0 * qt_neg[1:]   # k = -1..-(l_a-1)
+    d20s = jnp.concatenate([d20_neg[::-1], d20_pos])
+
+    def span(k_lo, width, k_hi):
+        n_bands = -(-width // band)
+
+        def body(state, b):
+            neg, idx = band_rowmin_nonnorm_ab(
+                ts_a, ts_b, d20s, m, k_lo + b * band, band, k_hi=k_hi)
+            return state.merge(ProfileState(neg, idx)), None
+
+        st, _ = jax.lax.scan(body, ProfileState.empty(la, -jnp.inf),
+                             jnp.arange(n_bands))
+        return st
+
+    merged = ProfileState.empty(la, -jnp.inf)
+    if la - excl > 0:
+        merged = merged.merge(
+            span(jnp.int32(-(la - 1)), la - excl, -excl + 1))
+    if lb - excl > 0:
+        merged = merged.merge(span(jnp.int32(excl), lb - excl, lb))
     dist = jnp.sqrt(jnp.maximum(-merged.corr, 0.0))
     dist = jnp.where(jnp.isfinite(merged.corr), dist, jnp.inf)
     return dist, merged.index

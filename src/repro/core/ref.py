@@ -40,3 +40,39 @@ def matrix_profile_bruteforce(ts, window: int, exclusion: int | None = None):
     banned = jnp.abs(i[:, None] - i[None, :]) < excl
     d = jnp.where(banned, jnp.inf, d)
     return d.min(axis=1), d.argmin(axis=1)
+
+
+def cross_distance_matrix(ts_a, ts_b, window: int, normalize: bool = True):
+    """Full (l_a, l_b) rectangle of distances between A and B subsequences."""
+    ts_a, ts_b = jnp.asarray(ts_a), jnp.asarray(ts_b)
+    m = int(window)
+
+    def windows(ts):
+        l = ts.shape[0] - m + 1
+        idx = jnp.arange(l)[:, None] + jnp.arange(m)[None, :]
+        return ts[idx]
+
+    wa, wb = windows(ts_a), windows(ts_b)
+    if not normalize:
+        diff = wa[:, None, :] - wb[None, :, :]
+        return jnp.sqrt((diff * diff).sum(axis=-1))
+    wa = wa - wa.mean(axis=1, keepdims=True)
+    wb = wb - wb.mean(axis=1, keepdims=True)
+    na = jnp.sqrt((wa * wa).sum(axis=1))
+    nb = jnp.sqrt((wb * wb).sum(axis=1))
+    dots = wa @ wb.T
+    denom = na[:, None] * nb[None, :]
+    corr = jnp.where(denom > 0, dots / jnp.maximum(denom, 1e-30), 0.0)
+    return corr_to_dist(jnp.clip(corr, -1.0, 1.0), m)
+
+
+def ab_join_bruteforce(ts_a, ts_b, window: int, exclusion: int = 0,
+                       normalize: bool = True):
+    """(profile (l_a,), index) of A vs B — the AB ground truth, no recurrence."""
+    d = cross_distance_matrix(ts_a, ts_b, window, normalize=normalize)
+    if exclusion > 0:
+        la, lb = d.shape
+        banned = jnp.abs(jnp.arange(la)[:, None] - jnp.arange(lb)[None, :]
+                         ) < int(exclusion)
+        d = jnp.where(banned, jnp.inf, d)
+    return d.min(axis=1), d.argmin(axis=1)

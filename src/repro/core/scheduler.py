@@ -27,8 +27,10 @@ import numpy as np
 from repro.core import partition
 from repro.core.matrix_profile import ProfileState
 from repro.core.partition import AnytimePlan
-from repro.core.zstats import ZStats, compute_stats_host
-from repro.core.distributed import make_round_fn
+from repro.core.zstats import (
+    ZStats, compute_cross_stats_host, compute_stats_host,
+)
+from repro.core.distributed import make_round_fn, make_round_fn_ab
 
 
 @dataclasses.dataclass
@@ -46,30 +48,49 @@ class SchedulerState:
 
 
 class AnytimeScheduler:
-    """Round-based anytime matrix profile over a device mesh axis."""
+    """Round-based anytime matrix profile over a device mesh axis.
+
+    Self-join by default; pass `ts_b` for an AB join — the plan then covers
+    the SIGNED diagonal space of the (l_a, l_b) rectangle (no exclusion zone
+    unless requested), rounds stay anytime-monotone, and `finish_reverse`
+    becomes a no-op because signed chunks already cover every cell.
+    """
 
     def __init__(self, ts, window: int, mesh, *, axis: str = "workers",
                  band: int = 64, chunks_per_worker: int = 8,
-                 exclusion: int | None = None):
+                 exclusion: int | None = None, ts_b=None):
         self.window = int(window)
         self.mesh = mesh
         self.axis = axis
         self.band = band
-        self.exclusion = (partition.np.maximum(1, window // 4)
-                          if exclusion is None else exclusion)
-        self.exclusion = int(self.exclusion)
+        self.ab = ts_b is not None
         ts = np.asarray(ts, np.float32)
-        self.stats = compute_stats_host(ts, self.window)
-        self.stats_rev = compute_stats_host(ts[::-1], self.window)
-        self.l = self.stats.n_subsequences
         n_workers = mesh.shape[axis]
-        self.plan = partition.interleaved_chunks(
-            self.l, self.exclusion, n_workers,
-            chunks_per_worker=chunks_per_worker, band=band)
+        if self.ab:
+            self.exclusion = 0 if exclusion is None else int(exclusion)
+            ts_b = np.asarray(ts_b, np.float32)
+            self.cross = compute_cross_stats_host(ts, ts_b, self.window)
+            self.l = self.cross.l_a
+            self.l_b = self.cross.l_b
+            self.plan = partition.interleaved_chunks_ab(
+                self.l, self.l_b, n_workers,
+                chunks_per_worker=chunks_per_worker, band=band,
+                excl=self.exclusion)
+        else:
+            self.exclusion = (partition.np.maximum(1, window // 4)
+                              if exclusion is None else exclusion)
+            self.exclusion = int(self.exclusion)
+            self.stats = compute_stats_host(ts, self.window)
+            self.stats_rev = compute_stats_host(ts[::-1], self.window)
+            self.l = self.stats.n_subsequences
+            self.l_b = None
+            self.plan = partition.interleaved_chunks(
+                self.l, self.exclusion, n_workers,
+                chunks_per_worker=chunks_per_worker, band=band)
         # static band count = widest chunk in bands
         widths = [max(0, k1 - k0) for k0, k1 in self.plan.chunks]
         self.n_bands = max(1, -(-max(widths) // band)) if widths else 1
-        self._round_fn = make_round_fn(mesh, self.n_bands, band, axis)
+        self._round_fn = self._make_round_fn()
         self.state = SchedulerState(
             plan=self.plan,
             done=np.zeros(len(self.plan.chunks), bool),
@@ -77,14 +98,30 @@ class AnytimeScheduler:
             rounds_completed=0,
         )
 
+    def _make_round_fn(self):
+        if self.ab:
+            return make_round_fn_ab(self.mesh, self.n_bands, self.band,
+                                    self.axis)
+        return make_round_fn(self.mesh, self.n_bands, self.band, self.axis)
+
+    @property
+    def _round_stats(self):
+        return self.cross if self.ab else self.stats
+
+    @property
+    def _k_empty(self) -> int:
+        """Sentinel diagonal past the end of the space (empty chunk)."""
+        return self.l_b if self.ab else self.l
+
     # -- execution ---------------------------------------------------------
 
     def _round_bounds(self, chunk_ids: tuple[int, ...]) -> tuple[np.ndarray, np.ndarray]:
+        empty = self._k_empty
         k0s, k1s = [], []
         for c in chunk_ids:
             if c < 0 or self.state.done[c]:
-                k0s.append(self.l)
-                k1s.append(self.l)      # empty
+                k0s.append(empty)
+                k1s.append(empty)      # empty
             else:
                 k0, k1 = self.plan.chunks[c]
                 k0s.append(k0)
@@ -93,8 +130,8 @@ class AnytimeScheduler:
         # the surplus devices idle (empty chunks)
         mesh_workers = self.mesh.shape[self.axis]
         while len(k0s) < mesh_workers:
-            k0s.append(self.l)
-            k1s.append(self.l)
+            k0s.append(empty)
+            k1s.append(empty)
         return (np.asarray(k0s, np.int32), np.asarray(k1s, np.int32))
 
     def step_round(self, *, fail_workers: set[int] | None = None) -> SchedulerState:
@@ -109,7 +146,7 @@ class AnytimeScheduler:
         ids = plan.rounds[r]
         k0s, k1s = self._round_bounds(ids)
         prev_profile = self.state.profile
-        merged = self._round_fn(self.stats, prev_profile,
+        merged = self._round_fn(self._round_stats, prev_profile,
                                 jnp.asarray(k0s), jnp.asarray(k1s))
         fail_workers = fail_workers or set()
         if fail_workers:
@@ -117,9 +154,9 @@ class AnytimeScheduler:
             # excluding it (SPMD semantics: we mask its chunk to empty).
             k0s2, k1s2 = k0s.copy(), k1s.copy()
             for w in fail_workers:
-                k0s2[w] = self.l
-                k1s2[w] = self.l
-            merged = self._round_fn(self.stats, prev_profile,
+                k0s2[w] = self._k_empty
+                k1s2[w] = self._k_empty
+            merged = self._round_fn(self._round_stats, prev_profile,
                                     jnp.asarray(k0s2), jnp.asarray(k1s2))
         done = self.state.done.copy()
         for w, c in enumerate(ids):
@@ -141,7 +178,10 @@ class AnytimeScheduler:
         The anytime loop runs the forward half; reversed diagonals are the
         same chunk plan on reversed stats. For a final exact answer call this
         after `run()` (benchmarks exercise partial/interrupted paths too).
+        AB plans cover the whole signed space already — no-op there.
         """
+        if self.ab:
+            return self.state.profile
         plan = partition.interleaved_chunks(
             self.l, self.exclusion, self.mesh.shape[self.axis],
             chunks_per_worker=len(self.plan.rounds), band=self.band)
@@ -170,7 +210,8 @@ class AnytimeScheduler:
                  index=np.asarray(self.state.profile.index),
                  done=self.state.done,
                  rounds_completed=self.state.rounds_completed,
-                 meta=json.dumps(dict(l=self.l, window=self.window,
+                 meta=json.dumps(dict(l=self.l, l_b=self.l_b,
+                                      window=self.window,
                                       exclusion=self.exclusion,
                                       band=self.band,
                                       chunks=list(self.plan.chunks))))
@@ -183,17 +224,18 @@ class AnytimeScheduler:
         z = np.load(path, allow_pickle=False)
         meta = json.loads(str(z["meta"]))
         assert meta["l"] == self.l and meta["window"] == self.window
+        assert meta.get("l_b") == self.l_b
         done = z["done"]
         profile = ProfileState(jnp.asarray(z["corr"]), jnp.asarray(z["index"]))
         workers = n_workers or self.mesh.shape[self.axis]
         base = AnytimePlan(l=self.l, exclusion=self.exclusion,
                            n_workers=workers,
                            chunks=tuple(tuple(c) for c in meta["chunks"]),
-                           rounds=())
+                           rounds=(), l_b=self.l_b)
         plan = partition.replan_remaining(base, done, workers)
         widths = [max(0, k1 - k0) for k0, k1 in plan.chunks]
         self.n_bands = max(1, -(-max(widths) // self.band)) if widths else 1
-        self._round_fn = make_round_fn(self.mesh, self.n_bands, self.band, self.axis)
+        self._round_fn = self._make_round_fn()
         self.plan = plan
         self.state = SchedulerState(plan=plan, done=done, profile=profile,
                                     rounds_completed=0)

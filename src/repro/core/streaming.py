@@ -29,6 +29,7 @@ class StreamingProfile:
         self._ts: list[float] = []
         self._profile = np.zeros((0,), np.float64)     # squared distance
         self._index = np.zeros((0,), np.int64)
+        self._ref_cache = None   # (n_points, windows-derived state) for query()
 
     # -- internals -----------------------------------------------------------
 
@@ -38,23 +39,38 @@ class StreamingProfile:
         idx = np.arange(l)[:, None] + np.arange(self.m)[None, :]
         return t[idx]
 
+    def _sqdist_rows(self, wa: np.ndarray, wb: np.ndarray | None,
+                     bc=None, bn=None) -> np.ndarray:
+        """Squared distances between window matrices, (p, m) x (q, m) -> (p, q).
+
+        The single home of the degenerate-window conventions (flat windows
+        correlate with nothing; denominators floored) for BOTH the append
+        path and query(). The b side may come precomputed (bc/bn from the
+        query cache): centered windows + norms when normalizing, raw windows
+        + per-window sum-of-squares otherwise.
+        """
+        if self.normalize:
+            ac = wa - wa.mean(axis=1, keepdims=True)
+            an = np.linalg.norm(ac, axis=1)
+            if bc is None:
+                bc = wb - wb.mean(axis=1, keepdims=True)
+                bn = np.linalg.norm(bc, axis=1)
+            denom = np.maximum(an[:, None] * bn[None, :], 1e-300)
+            corr = np.where((an[:, None] > 0) & (bn[None, :] > 0),
+                            ac @ bc.T / denom, 0.0)
+            return 2.0 * self.m * (1.0 - np.clip(corr, -1.0, 1.0))
+        # ||a-b||^2 expansion — avoids the (p, q, m) intermediate
+        if bc is None:
+            bc, bn = wb, (wb * wb).sum(axis=1)
+        return ((wa * wa).sum(axis=1)[:, None] + bn[None, :]
+                - 2.0 * wa @ bc.T)
+
     def _row_sqdist(self, j: int, w: np.ndarray) -> np.ndarray:
         """Squared distances of subsequence j vs subsequences [0, j-excl]."""
         hi = j - self.excl + 1
         if hi <= 0:
             return np.zeros((0,), np.float64)
-        a = w[:hi]
-        b = w[j]
-        if self.normalize:
-            ac = a - a.mean(axis=1, keepdims=True)
-            bc = b - b.mean()
-            na = np.linalg.norm(ac, axis=1)
-            nb = np.linalg.norm(bc)
-            denom = np.maximum(na * nb, 1e-300)
-            corr = np.where((na > 0) & (nb > 0), ac @ bc / denom, 0.0)
-            return 2.0 * self.m * (1.0 - np.clip(corr, -1.0, 1.0))
-        d = a - b[None, :]
-        return (d * d).sum(axis=1)
+        return self._sqdist_rows(w[j:j + 1], w[:hi])[0]
 
     # -- public ---------------------------------------------------------------
 
@@ -80,6 +96,42 @@ class StreamingProfile:
                 upd = row < self._profile[:row.size]
                 self._profile[:row.size][upd] = row[upd]
                 self._index[:row.size][upd] = j
+
+    def query(self, values) -> tuple[np.ndarray, np.ndarray]:
+        """Score a query stream against the FIXED reference corpus — the
+        series appended so far — WITHOUT appending it: an AB join with the
+        streaming state as the B side (the serving primitive: reference
+        corpus stays resident, queries fly through).
+
+        For each of the query's l_q = len(q) - m + 1 subsequences, returns
+        its distance to the nearest reference subsequence and that
+        reference's start index: (distances (l_q,), ref_indices (l_q,)).
+        No exclusion zone — query and reference are different series.
+        """
+        q = np.atleast_1d(np.asarray(values, np.float64))
+        if q.ndim != 1 or q.shape[0] < self.m:
+            raise ValueError(f"query must be 1-D with >= {self.m} points, "
+                             f"got shape {q.shape}")
+        if len(self._ts) < self.m:
+            raise ValueError("reference corpus has no complete window yet")
+        lq = q.shape[0] - self.m + 1
+        idx = np.arange(lq)[:, None] + np.arange(self.m)[None, :]
+        wq = q[idx]                                   # (l_q, m)
+        # reference-side state is invariant between appends — cache it
+        # (keyed by corpus length) so repeated queries reuse it
+        n = len(self._ts)
+        if self._ref_cache is None or self._ref_cache[0] != n:
+            w_ref = self._windows()                   # (l_ref, m)
+            if self.normalize:
+                rc = w_ref - w_ref.mean(axis=1, keepdims=True)
+                self._ref_cache = (n, rc, np.linalg.norm(rc, axis=1))
+            else:
+                self._ref_cache = (n, w_ref, (w_ref * w_ref).sum(axis=1))
+        _, bc, bn = self._ref_cache
+        d2 = self._sqdist_rows(wq, None, bc=bc, bn=bn)
+        best = np.argmin(d2, axis=1)
+        dist = np.sqrt(np.maximum(d2[np.arange(lq), best], 0.0))
+        return dist, best
 
     @property
     def n_subsequences(self) -> int:

@@ -48,6 +48,91 @@ class ZStats:
         return self.mu.shape[0]
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CrossStats:
+    """Streams for an AB join of series A against series B.
+
+    The implicit distance matrix is the full (l_a, l_b) RECTANGLE; its
+    diagonals are indexed by a SIGNED offset k = j - i in [-(l_a-1), l_b).
+    `cov0s[k + l_a - 1]` is the exact centered covariance at the FIRST cell of
+    diagonal k — (0, k) for k >= 0, (-k, 0) for k < 0 — the seed of the same
+    O(1)-update recurrence the self-join streams, now with per-series df/dg:
+
+        cov(i, j) = cov(i-1, j-1) + df_a[i]*dg_b[j] + df_b[j]*dg_a[i]
+
+    A self-join is the special case a is b (see `self_cross`); the exclusion
+    band |k| < excl is then applied by the engine, not baked into the streams.
+    """
+
+    a: ZStats
+    b: ZStats
+    cov0s: jax.Array   # (l_a + l_b - 1,) seed covariances, index k + l_a - 1
+
+    @property
+    def l_a(self) -> int:
+        return self.a.n_subsequences
+
+    @property
+    def l_b(self) -> int:
+        return self.b.n_subsequences
+
+    @property
+    def k_min(self) -> int:
+        return -(self.l_a - 1)
+
+    @property
+    def k_max(self) -> int:
+        return self.l_b
+
+    @property
+    def window(self) -> int:
+        return self.a.window
+
+
+def self_cross(stats: ZStats) -> CrossStats:
+    """View a self-join's streams as the AB rectangle A == B.
+
+    cov(i, j) is symmetric, so the negative-diagonal seeds cov(-k, 0) are just
+    the mirrored first row: cov0s = [cov0[l-1] .. cov0[1], cov0[0..l-1]].
+    """
+    cov0s = jnp.concatenate([stats.cov0[1:][::-1], stats.cov0])
+    return CrossStats(a=stats, b=stats, cov0s=cov0s)
+
+
+def _centered_windows_f64(t, window: int):
+    import numpy as np
+
+    m = int(window)
+    l = t.shape[0] - m + 1
+    idx = np.arange(l)[:, None] + np.arange(m)[None, :]
+    w = t[idx]
+    return w - w.mean(axis=1, keepdims=True)
+
+
+def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None) -> CrossStats:
+    """Build AB-join streams host-side in f64 (same rationale as
+    `compute_stats_host`); the seeds are exact centered dots, so the device
+    recurrence restarts from well-conditioned values on every diagonal.
+
+    Either side may be as short as one window (n >= m): query-against-corpus
+    joins legitimately use a short side in both orientations (short query vs
+    corpus, long stream vs small reference set).
+    """
+    import numpy as np
+
+    m = int(window)
+    sa = compute_stats_host(ts_a, m, out_dtype=out_dtype, min_subsequences=1)
+    sb = compute_stats_host(ts_b, m, out_dtype=out_dtype, min_subsequences=1)
+    wa = _centered_windows_f64(np.asarray(ts_a, np.float64), m)
+    wb = _centered_windows_f64(np.asarray(ts_b, np.float64), m)
+    neg = wa[1:] @ wb[0]            # k = -1 .. -(l_a-1), start cells (-k, 0)
+    pos = wb @ wa[0]                # k = 0 .. l_b-1,     start cells (0, k)
+    cov0s = np.concatenate([neg[::-1], pos]).astype(np.float32)
+    dt = jnp.float32 if out_dtype is None else out_dtype
+    return CrossStats(a=sa, b=sb, cov0s=jnp.asarray(cov0s, dt))
+
+
 def moving_mean_var(ts: jax.Array, m: int) -> tuple[jax.Array, jax.Array]:
     """Sliding mean and population variance over windows of length m.
 
@@ -136,7 +221,8 @@ def compute_stats_jit(ts: jax.Array, window: int) -> ZStats:
     return compute_stats(ts, window)
 
 
-def compute_stats_host(ts, window: int, out_dtype=None) -> ZStats:
+def compute_stats_host(ts, window: int, out_dtype=None,
+                       min_subsequences: int | None = None) -> ZStats:
     """Build the NATSA streams in float64 on the HOST, emit f32 streams.
 
     The in-graph `compute_stats` suffers catastrophic cancellation in f32
@@ -145,6 +231,9 @@ def compute_stats_host(ts, window: int, out_dtype=None) -> ZStats:
     per-window deviations, so the O(n) precompute is done once in f64 numpy
     (stream preparation = data ingestion; TPUs never see f64) and the device
     recurrence consumes well-conditioned f32 streams.
+
+    `min_subsequences` relaxes the self-join-oriented n >= 2m check: the B
+    side of an AB join only needs n >= m + min_subsequences - 1.
     """
     import numpy as np
 
@@ -153,8 +242,10 @@ def compute_stats_host(ts, window: int, out_dtype=None) -> ZStats:
         raise ValueError(f"time series must be 1-D, got shape {t.shape}")
     m = int(window)
     n = t.shape[0]
-    if n < 2 * m:
-        raise ValueError(f"series too short: n={n} < 2*window={2 * m}")
+    min_n = 2 * m if min_subsequences is None else m + int(min_subsequences) - 1
+    if n < min_n:
+        raise ValueError(f"series too short: n={n} < {min_n} "
+                         f"(window={m}, min_subsequences={min_subsequences})")
     t = t - t.mean()                      # shift-invariant; improves f32 casts
     l = n - m + 1
     csum = np.concatenate([[0.0], np.cumsum(t)])
@@ -162,7 +253,15 @@ def compute_stats_host(ts, window: int, out_dtype=None) -> ZStats:
     idx = np.arange(l)[:, None] + np.arange(m)[None, :]
     w = t[idx] - mu[:, None]              # exact two-pass centering
     norm = np.sqrt((w * w).sum(axis=1))
-    invn = np.where(norm > 0, 1.0 / np.maximum(norm, 1e-300), 0.0)
+    # flat-window guard must be RELATIVE: cumsum roundoff in mu leaves
+    # ~1e-15-relative residues in w for constant windows, and an exact
+    # norm > 0 test would then emit invn ~ 1e15 instead of the corr-0
+    # convention. Windows whose deviation is below 1e-8 of their magnitude
+    # are z-norm-degenerate either way. scale^2 = sum(t[idx]^2) is
+    # norm^2 + m*mu^2 (sum of deviations is ~0), so no second window pass.
+    scale2 = norm * norm + m * mu * mu
+    flat = norm * norm <= 1e-16 * np.maximum(scale2, 1e-300)
+    invn = np.where(~flat & (norm > 0), 1.0 / np.maximum(norm, 1e-300), 0.0)
     tail, head = t[m:], t[: l - 1]
     df = np.concatenate([[0.0], (tail[: l - 1] - head) / 2.0])
     dg = np.concatenate([[0.0], (tail[: l - 1] - mu[1:]) + (head - mu[:-1])])

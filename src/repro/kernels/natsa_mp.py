@@ -15,6 +15,16 @@ TPU adaptation of NATSA's in-HBM-logic processing unit:
     updates come from a second pass over the reversed series (see ops.py) —
     TPUs have no cheap scatter-min, reversal keeps the kernel scatter-free.
 
+The kernel is TWO-SERIES: the i side (rows, series A) and the j side
+(diagonal strips, series B) are independent stream sets, and the diagonal
+offset `k_start` is SIGNED, covering the rectangular AB diagonal space
+k = j - i in [-(l_a-1), l_b). Negative diagonals need no special recurrence:
+the j-side streams are zero-PREPADDED by `jpad`, so df_j/dg_j gathers before
+a diagonal's start cell return 0, the masked cumsum carries the seed
+covariance (CrossStats.cov0s) forward unchanged, and validity masking
+(jpos >= 0) hides the dead cells. A self-join is the case where both stream
+sets alias the same arrays, k_start = excl and jpad = 0.
+
 Grid: (n_row_tiles, n_diag_tiles), diag innermost so the output row block is
 revisited consecutively (read-modify-max accumulation), while the covariance
 scratch row for each diag tile persists across the outer row loop.
@@ -37,11 +47,12 @@ NEG = -2.0  # correlations live in [-1, 1]
 
 
 def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
-            out_corr, out_idx, carry, *, it: int, dt: int, excl: int, l: int):
+            out_corr, out_idx, carry, *, it: int, dt: int, k_start: int,
+            k_end: int, l_i: int, l_j: int, jpad: int):
     i_idx = pl.program_id(0)
     d_idx = pl.program_id(1)
     i0 = i_idx * it
-    k0 = excl + d_idx * dt
+    k0 = k_start + d_idx * dt          # signed diagonal offset of this tile
 
     # seed the diagonal registers at the first row tile
     @pl.when(i_idx == 0)
@@ -54,8 +65,9 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
 
     # gather the j-side strips for each diagonal in the tile: row dd reads
     # [i0+k0+dd, i0+k0+dd+IT) — overlapping windows, hence dynamic loads.
+    # `jpad` shifts signed positions into the zero-prepadded arrays.
     def strip(ref, dd):
-        return ref[pl.ds(i0 + k0 + dd, it)]
+        return ref[pl.ds(i0 + k0 + dd + jpad, it)]
 
     dfj = jnp.stack([strip(df_full, dd) for dd in range(dt)])      # (DT, IT)
     dgj = jnp.stack([strip(dg_full, dd) for dd in range(dt)])
@@ -69,9 +81,10 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
 
     ii = jax.lax.broadcasted_iota(jnp.int32, (dt, it), 1)          # row offset
     dd = jax.lax.broadcasted_iota(jnp.int32, (dt, it), 0)          # diag offset
-    jpos = i0 + ii + k0 + dd                                       # j index
+    jpos = i0 + ii + k0 + dd                                       # signed j
     ipos = i0 + ii
-    valid = (jpos < l) & (ipos < l)
+    valid = ((jpos >= 0) & (jpos < l_j) & (ipos < l_i)
+             & (k0 + dd < k_end))
     corr = jnp.where(valid, corr, NEG)
 
     best_d = jnp.argmax(corr, axis=0)                              # (IT,)
@@ -92,34 +105,45 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
         out_idx[0, :] = jnp.where(take, tile_idx, out_idx[0, :])
 
 
-@functools.partial(jax.jit, static_argnames=("it", "dt", "excl", "l", "interpret"))
-def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,
-                   interpret: bool = True):
-    """Row-max correlation profile over all diagonals k in [excl, l).
+@functools.partial(jax.jit, static_argnames=(
+    "it", "dt", "k_start", "k_end", "l_i", "l_j", "jpad", "interpret"))
+def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
+                      it: int, dt: int, k_start: int, k_end: int,
+                      l_i: int, l_j: int, jpad: int = 0,
+                      interpret: bool = True):
+    """Row-max correlation of A's rows over signed diagonals
+    [k_start, k_start + len(cov0)) ∩ [k_start, k_end) of the AB rectangle.
 
     Inputs are the padded streams:
-      df/dg/invn : (LP,) f32, LP >= n_row_tiles*IT + n_diag_tiles*DT + excl
-      cov0       : (n_diag_tiles*DT,) f32 — cov(0, excl+d), padded
-    Returns (corr (n_row_tiles*IT,), idx (n_row_tiles*IT,)).
+      df_i/dg_i/invn_i : (n_row_tiles*IT,) f32 — A-side row streams
+      df_j/dg_j/invn_j : (JP,) f32 — B-side, zero-prepadded by `jpad` with
+          JP >= n_row_tiles*IT + k_start + n_diag_tiles*DT + jpad
+      cov0             : (n_diag_tiles*DT,) f32 — CrossStats.cov0s slice
+    Returns (corr (n_row_tiles*IT,), idx (n_row_tiles*IT,)); idx is the best
+    j in B, -1 where no diagonal covers the row.
     """
-    lp = df.shape[0]
-    n_rows = -(-l // it)
+    rows = df_i.shape[0]
+    n_rows = rows // it
+    assert rows % it == 0, (rows, it)
     n_diags = cov0.shape[0] // dt
     assert cov0.shape[0] % dt == 0
-    assert lp >= n_rows * it + excl + n_diags * dt, (lp, n_rows, it, excl)
+    jp = df_j.shape[0]
+    assert jp >= n_rows * it + k_start + n_diags * dt + jpad, (
+        jp, n_rows, it, k_start, n_diags, dt, jpad)
+    assert k_start + jpad >= 0, (k_start, jpad)
 
-    rows = n_rows * it
-    df_row = df[:rows].reshape(n_rows, it)
-    dg_row = dg[:rows].reshape(n_rows, it)
-    invn_row = invn[:rows].reshape(n_rows, it)
+    df_row = df_i.reshape(n_rows, it)
+    dg_row = dg_i.reshape(n_rows, it)
+    invn_row = invn_i.reshape(n_rows, it)
 
     grid = (n_rows, n_diags)
     row_spec = pl.BlockSpec((1, it), lambda i, d: (i, 0))
-    full_spec = pl.BlockSpec((lp,), lambda i, d: (0,))
+    full_spec = pl.BlockSpec((jp,), lambda i, d: (0,))
     cov0_spec = pl.BlockSpec((dt,), lambda i, d: (d,))
     out_specs = [pl.BlockSpec((1, it), lambda i, d: (i, 0))] * 2
 
-    kernel = functools.partial(_kernel, it=it, dt=dt, excl=excl, l=l)
+    kernel = functools.partial(_kernel, it=it, dt=dt, k_start=k_start,
+                               k_end=k_end, l_i=l_i, l_j=l_j, jpad=jpad)
     corr, idx = pl.pallas_call(
         kernel,
         grid=grid,
@@ -130,5 +154,20 @@ def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,
                    jax.ShapeDtypeStruct((n_rows, it), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((n_diags, dt), jnp.float32)],
         interpret=interpret,
-    )(df_row, dg_row, invn_row, df, dg, invn, cov0)
+    )(df_row, dg_row, invn_row, df_j, dg_j, invn_j, cov0)
     return corr.reshape(-1), idx.reshape(-1)
+
+
+def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,
+                   interpret: bool = True):
+    """Self-join entry: row-max over diagonals k in [excl, l) — the special
+    case of `rowmax_profile_ab` where both stream sets alias one series.
+
+    df/dg/invn : (LP,) f32, LP >= n_row_tiles*IT + excl + n_diag_tiles*DT
+    cov0       : (n_diag_tiles*DT,) f32 — cov(0, excl+d), padded
+    """
+    rows = (-(-l // it)) * it
+    return rowmax_profile_ab(
+        df[:rows], dg[:rows], invn[:rows], df, dg, invn, cov0,
+        it=it, dt=dt, k_start=excl, k_end=l, l_i=l, l_j=l, jpad=0,
+        interpret=interpret)

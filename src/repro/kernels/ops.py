@@ -17,7 +17,10 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.zstats import ZStats, compute_stats_host, corr_to_dist
+from repro.core.zstats import (
+    CrossStats, ZStats, compute_cross_stats_host, compute_stats_host,
+    corr_to_dist,
+)
 from repro.kernels import natsa_mp
 
 NEG = natsa_mp.NEG
@@ -72,6 +75,90 @@ def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
     take = corr_r > corr_f
     corr = jnp.where(take, corr_r, corr_f)
     idx = jnp.where(take, idx_r, idx_f).astype(jnp.int32)
+    dist = jnp.where(corr <= NEG + 1e-6, jnp.inf,
+                     corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
+    return dist, idx
+
+
+# -- AB join through the kernel ----------------------------------------------
+
+
+def _pad_streams_ab(cross: CrossStats, it: int, dt: int, s0: int, s1: int):
+    """Pad A-side row streams and zero-prepad B-side full streams for the
+    signed diagonal span [s0, s1). Returns the seven kernel inputs plus
+    (n_rows, n_diags, jpad)."""
+    la, lb = cross.l_a, cross.l_b
+    n_rows = -(-la // it)
+    n_total = max(s1 - s0, 1)
+    n_diags = -(-n_total // dt)
+    jpad = max(0, -s0)
+    rows_len = n_rows * it
+
+    def prow(x):
+        return jnp.pad(x, (0, rows_len - la))
+
+    # padded_j[p] = stream_b[p - jpad]; the zero prepad makes df/dg gathers
+    # before a negative diagonal's start contribute nothing to the cumsum.
+    jlen = rows_len + s0 + n_diags * dt + jpad
+    back = max(jlen - jpad - lb, 0)
+
+    def pj(x):
+        return jnp.pad(x, (jpad, back))
+
+    u = np.clip(np.arange(s0, s0 + n_diags * dt) + la - 1, 0, la + lb - 2)
+    cov0p = jnp.take(cross.cov0s, jnp.asarray(u))
+    return (prow(cross.a.df), prow(cross.a.dg), prow(cross.a.invn),
+            pj(cross.b.df), pj(cross.b.dg), pj(cross.b.invn), cov0p,
+            n_rows, n_diags, jpad)
+
+
+def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
+                         it: int = 256, dt: int = 8, interpret: bool = True):
+    """Max-corr profile of A vs B over the rectangle via the kernel.
+
+    With exclusion == 0 the whole signed space [-(l_a-1), l_b) is ONE kernel
+    launch; an exclusion band splits it into a negative and a positive span.
+    Returns (corr (l_a,), idx (l_a,)).
+    """
+    la, lb = cross.l_a, cross.l_b
+    excl = int(exclusion)
+    if excl == 0:
+        spans = [(-(la - 1), lb)]
+    else:
+        spans = []
+        if la - excl > 0:
+            spans.append((-(la - 1), -excl + 1))
+        if lb - excl > 0:
+            spans.append((excl, lb))
+    corr = jnp.full((la,), natsa_mp.NEG, jnp.float32)
+    idx = jnp.full((la,), -1, jnp.int32)
+    for s0, s1 in spans:
+        (df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0p,
+         _, _, jpad) = _pad_streams_ab(cross, it, dt, s0, s1)
+        c, ix = natsa_mp.rowmax_profile_ab(
+            df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0p,
+            it=it, dt=dt, k_start=s0, k_end=s1, l_i=la, l_j=lb, jpad=jpad,
+            interpret=interpret)
+        c, ix = c[:la], ix[:la]
+        take = c > corr
+        corr = jnp.where(take, c, corr)
+        idx = jnp.where(take, ix, idx)
+    return corr, idx
+
+
+def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
+                  it: int = 256, dt: int = 8, interpret: bool = True):
+    """AB join via the Pallas kernel -> (distance (l_a,), idx (l_a,)).
+
+    Matches core.matrix_profile.ab_join / the brute-force oracle (tests
+    enforce it). No exclusion zone by default — pass one only to recover the
+    self-join as the A == B special case.
+    """
+    m = int(window)
+    excl = 0 if exclusion is None else int(exclusion)
+    cross = compute_cross_stats_host(np.asarray(ts_a), np.asarray(ts_b), m)
+    corr, idx = ab_rowmax_from_stats(cross, exclusion=excl, it=it, dt=dt,
+                                     interpret=interpret)
     dist = jnp.where(corr <= NEG + 1e-6, jnp.inf,
                      corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
     return dist, idx

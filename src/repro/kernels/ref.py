@@ -33,3 +33,13 @@ def rowmax_profile_ref(df, dg, invn, cov0, *, excl: int, l: int):
     idx = (i + excl + best).astype(jnp.int32)
     idx = jnp.where(corr_best > NEG, idx, -1)
     return corr_best, idx
+
+
+def rowmax_profile_ab_ref(cross, k_lo: int, k_hi: int):
+    """(corr (l_a,), idx (l_a,)) over signed AB diagonals [k_lo, k_hi) —
+    one un-reseeded whole-span evaluation of the band recurrence, exactly
+    what `natsa_mp.rowmax_profile_ab` computes for that span."""
+    from repro.core.matrix_profile import band_rowmax_ab
+
+    return band_rowmax_ab(cross, jnp.int32(k_lo), int(k_hi - k_lo),
+                          k_hi=k_hi, reseed_every=None)

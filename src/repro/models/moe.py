@@ -225,9 +225,10 @@ def moe_ffn(cfg, p: Tree, x, ctx: ShardCtx | None):
         return _moe_local(cfg, p_, x_, ctx, tp_axis=mlp_axis, ep_axis=ep_axis,
                           batch_axes=bt)
 
-    return jax.shard_map(
+    from repro.utils.compat import shard_map_compat
+
+    return shard_map_compat(
         inner, mesh=ctx.mesh,
         in_specs=(pspecs, xspec),
         out_specs=(xspec, P()),
-        check_vma=False,
     )(p, x)

@@ -1,0 +1,18 @@
+"""Cross-version jax shims (the repo targets modern jax but must run on the
+0.4.x line too, where shard_map lives in jax.experimental and the replication
+check is spelled check_rep)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map with the replication/VMA check disabled, any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)

@@ -1,0 +1,82 @@
+"""Hypothesis as a graceful optional dependency.
+
+When `hypothesis` is installed (see requirements-dev.txt) this module simply
+re-exports `given` / `settings` / `st` and tests get real property testing:
+shrinking, the example database, coverage-guided generation.
+
+When it is absent, a minimal seeded-random fallback samples `max_examples`
+deterministic examples per test (seed derived from the test name, so failures
+reproduce). Only the strategy surface this repo uses is implemented
+(`st.integers`, `st.sampled_from`, `st.floats`, `st.booleans`); adding a
+strategy here is deliberate friction — prefer the real package.
+
+Usage in tests:  ``from _hypothesis_compat import given, settings, st``
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in the no-deps CI job
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # sample(rng) -> value
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                # @settings may sit above @given (attribute lands on this
+                # wrapper) or below it (attribute lands on fn) — both are
+                # legal with real hypothesis, so honor both
+                n = getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples", 20))
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    vals = [s.sample(rng) for s in strategies]
+                    fn(*vals)
+            # do NOT functools.wraps: pytest would follow __wrapped__ and
+            # mistake the sampled parameters for fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

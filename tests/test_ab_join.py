@@ -1,0 +1,247 @@
+"""AB-join engine vs an independent brute-force oracle, plus the reduction
+identities: self-join == AB(A, A, exclusion), batch == per-series loop,
+Pallas kernel (interpret) == pure-JAX band engine.
+
+The oracle below is written from scratch in numpy (O(l_a*l_b*m), no
+recurrence, no shared code with src/) so every optimized path is checked
+against first principles.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.matrix_profile import (
+    ab_join, batch_ab_join, batch_profile, matrix_profile,
+    matrix_profile_nonnorm,
+)
+from repro.core.zstats import compute_cross_stats_host, dist_to_corr
+from repro.kernels import ops
+
+
+# -- independent numpy oracle -------------------------------------------------
+
+
+def oracle_ab(ts_a, ts_b, m, excl=0, normalize=True):
+    """(profile, index) of A vs B by direct O(l_a*l_b*m) evaluation."""
+    a = np.asarray(ts_a, np.float64)
+    b = np.asarray(ts_b, np.float64)
+    la, lb = a.shape[0] - m + 1, b.shape[0] - m + 1
+    d = np.empty((la, lb))
+    for i in range(la):
+        wa = a[i:i + m]
+        for j in range(lb):
+            wb = b[j:j + m]
+            if normalize:
+                ca, cb = wa - wa.mean(), wb - wb.mean()
+                na, nb = np.linalg.norm(ca), np.linalg.norm(cb)
+                # flat windows correlate with nothing (corr 0 convention)
+                c = ca @ cb / (na * nb) if na > 0 and nb > 0 else 0.0
+                d[i, j] = np.sqrt(max(2 * m * (1 - np.clip(c, -1, 1)), 0.0))
+            else:
+                d[i, j] = np.linalg.norm(wa - wb)
+    if excl > 0:
+        i = np.arange(la)[:, None]
+        j = np.arange(lb)[None, :]
+        d[np.abs(i - j) < excl] = np.inf
+    return d.min(axis=1), d.argmin(axis=1)
+
+
+def _series(n, seed=0, kind="walk"):
+    rng = np.random.default_rng(seed)
+    if kind == "walk":        # offset-heavy: random walk on a large level
+        return (1e4 + np.cumsum(rng.normal(size=n))).astype(np.float32)
+    if kind == "noise":
+        return rng.normal(size=n).astype(np.float32)
+    if kind == "sine":
+        t = np.arange(n, dtype=np.float32)
+        return (np.sin(2 * np.pi * t / 30)
+                + 0.05 * rng.normal(size=n)).astype(np.float32)
+    if kind == "flat":        # constant stretches -> zero-variance windows
+        ts = rng.normal(size=n).astype(np.float32)
+        ts[n // 3: n // 3 + n // 4] = 2.5
+        return ts
+    raise ValueError(kind)
+
+
+# -- oracle cross-checks ------------------------------------------------------
+
+
+@pytest.mark.parametrize("na,nb,m,kind", [
+    (220, 90, 12, "walk"),       # l_a > l_b (the reversal-identity hole)
+    (90, 220, 12, "walk"),       # l_a < l_b
+    (150, 150, 8, "noise"),      # equal lengths
+    (200, 61, 16, "sine"),       # B barely longer than 3 windows
+    (180, 120, 10, "flat"),      # zero-variance windows on both sides
+    (130, 25, 20, "noise"),      # l_b = 6: query-against-corpus shape
+    (25, 130, 20, "noise"),      # SHORT QUERY side: m <= n_a < 2m
+])
+@pytest.mark.parametrize("normalize", [True, False])
+def test_ab_join_matches_oracle(na, nb, m, kind, normalize):
+    ts_a = _series(na, seed=na + nb, kind=kind)
+    ts_b = _series(nb, seed=abs(na - nb) + 7, kind=kind)
+    p, idx = ab_join(ts_a, ts_b, m, normalize=normalize)
+    p_ref, _ = oracle_ab(ts_a, ts_b, m, normalize=normalize)
+    np.testing.assert_allclose(np.asarray(p), p_ref, rtol=2e-3, atol=2e-3)
+    # indices point into B and every chosen pair realizes its distance
+    idx = np.asarray(idx)
+    assert ((idx >= 0) & (idx < nb - m + 1)).all()
+    for i in range(0, na - m + 1, 17):
+        d_at, _ = oracle_ab(ts_a[i:i + m], ts_b[idx[i]:idx[i] + m], m,
+                            normalize=normalize)
+        assert abs(d_at[0] - np.asarray(p)[i]) < 5e-3
+
+
+def test_ab_join_single_reference_window():
+    """l_b == 1: the join degenerates to one distance per query row."""
+    ts_a = _series(120, seed=1, kind="noise")
+    ts_b = _series(16, seed=2, kind="noise")    # exactly one window
+    p, idx = ab_join(ts_a, ts_b, 16)
+    p_ref, _ = oracle_ab(ts_a, ts_b, 16)
+    np.testing.assert_allclose(np.asarray(p), p_ref, rtol=2e-3, atol=2e-3)
+    assert (np.asarray(idx) == 0).all()
+
+
+def test_ab_join_rejects_bad_shapes():
+    ts = _series(100, seed=0)
+    with pytest.raises(ValueError):
+        ab_join(ts, _series(7, seed=1), 16)       # B shorter than one window
+    with pytest.raises(ValueError):
+        compute_cross_stats_host(np.ones((4, 4)), ts, 16)
+    with pytest.raises(ValueError):
+        batch_profile(ts, 16)                     # 1-D where a stack expected
+    with pytest.raises(ValueError):
+        batch_ab_join(np.stack([ts, ts]), np.stack([ts]), 16)
+
+
+# -- reduction identities -----------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,excl,kind", [
+    (300, 16, 4, "walk"),
+    (257, 10, 3, "noise"),       # size not aligned to band
+    (400, 32, 8, "sine"),
+])
+def test_self_join_is_ab_special_case(n, m, excl, kind):
+    """ab_join(ts, ts, m, exclusion=e) == matrix_profile(ts, m, e) — the
+    acceptance identity, compared in CORRELATION space at atol 1e-4."""
+    ts = _series(n, seed=n, kind=kind)
+    p_ab, i_ab = ab_join(ts, ts, m, exclusion=excl)
+    p_mp, i_mp = matrix_profile(ts, m, exclusion=excl)
+    c_ab = dist_to_corr(jnp.asarray(p_ab), m)
+    c_mp = dist_to_corr(jnp.asarray(p_mp), m)
+    np.testing.assert_allclose(np.asarray(c_ab), np.asarray(c_mp), atol=1e-4)
+    # exclusion respected on the AB path too
+    pos = np.arange(len(np.asarray(i_ab)))
+    assert (np.abs(np.asarray(i_ab) - pos) >= excl).all()
+
+
+def test_self_join_is_ab_special_case_nonnorm():
+    ts = _series(300, seed=9, kind="sine")
+    p_ab, _ = ab_join(ts, ts, 16, exclusion=4, normalize=False)
+    p_mp, _ = matrix_profile_nonnorm(jnp.asarray(ts), 16, 4)
+    np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_mp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_batch_profile_equals_loop():
+    rng = np.random.default_rng(5)
+    stack = np.stack([
+        _series(260, seed=i, kind=k)
+        for i, k in enumerate(["walk", "noise", "sine", "flat"])
+    ])
+    del rng
+    m = 14
+    bp, bi = batch_profile(stack, m)
+    for r in range(stack.shape[0]):
+        p, i = matrix_profile(stack[r], m)
+        # vmap changes XLA fusion order -> ~1e-5 drift; indices may flip
+        # only on near-ties
+        np.testing.assert_allclose(np.asarray(bp[r]), np.asarray(p),
+                                   atol=2e-4)
+        mism = np.asarray(bi[r]) != np.asarray(i)
+        assert mism.mean() < 0.05
+
+
+def test_batch_ab_join_equals_loop():
+    a = np.stack([_series(200, seed=i, kind="walk") for i in range(3)])
+    b = np.stack([_series(90, seed=10 + i, kind="sine") for i in range(3)])
+    m = 12
+    bp, bi = batch_ab_join(a, b, m)
+    for r in range(3):
+        p, i = ab_join(a[r], b[r], m)
+        np.testing.assert_allclose(np.asarray(bp[r]), np.asarray(p),
+                                   atol=1e-5)
+        assert (np.asarray(bi[r]) == np.asarray(i)).all()
+
+
+@pytest.mark.parametrize("na,nb,m,it,dt", [
+    (300, 140, 16, 128, 8),
+    (140, 300, 16, 64, 16),
+    (257, 257, 10, 128, 8),      # unaligned sizes
+    (200, 80, 24, 32, 4),        # tiny tiles
+])
+def test_kernel_ab_matches_band_engine(na, nb, m, it, dt):
+    """AB via the Pallas wrapper (interpret mode) == pure-JAX band engine,
+    in correlation space."""
+    ts_a = _series(na, seed=na + m, kind="walk")
+    ts_b = _series(nb, seed=nb + m, kind="sine")
+    pk, ik = ops.natsa_ab_join(ts_a, ts_b, m, it=it, dt=dt)
+    pe, ie = ab_join(ts_a, ts_b, m)
+    ck = dist_to_corr(jnp.asarray(pk), m)
+    ce = dist_to_corr(jnp.asarray(pe), m)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(ce), atol=5e-4)
+    # argmax ties can differ only where correlations are ~equal
+    mism = np.asarray(ik) != np.asarray(ie)
+    assert np.abs(np.asarray(ck)[mism]
+                  - np.asarray(ce)[mism]).max(initial=0) < 5e-4
+
+
+def test_kernel_ab_with_exclusion_matches_self_kernel():
+    ts = _series(360, seed=3, kind="walk")
+    m, excl = 16, 4
+    p1, _ = ops.natsa_ab_join(ts, ts, m, exclusion=excl)
+    p2, _ = ops.natsa_matrix_profile(ts, m, exclusion=excl)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-4)
+
+
+# -- property tests -----------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 16, 25]),
+       st.sampled_from(["walk", "noise", "sine", "flat"]))
+def test_property_ab_profile_valid(seed, m, kind):
+    """Every (i, idx[i]) pair's true distance equals profile[i], and no
+    sampled pair beats it (row-min optimality)."""
+    na, nb = 180, 110
+    ts_a = _series(na, seed=seed, kind=kind)
+    ts_b = _series(nb, seed=seed + 1, kind=kind)
+    p, idx = ab_join(ts_a, ts_b, m)
+    p, idx = np.asarray(p), np.asarray(idx)
+    la, lb = na - m + 1, nb - m + 1
+    rng = np.random.default_rng(seed)
+
+    def true_corr(i, j):
+        a = ts_a[i:i + m].astype(np.float64)
+        b = ts_b[j:j + m].astype(np.float64)
+        a, b = a - a.mean(), b - b.mean()
+        na_, nb_ = np.linalg.norm(a), np.linalg.norm(b)
+        if na_ < 1e-9 * np.linalg.norm(ts_a[i:i + m]) or \
+           nb_ < 1e-9 * np.linalg.norm(ts_b[j:j + m]):
+            return None
+        return float(np.clip(a @ b / (na_ * nb_), -1, 1))
+
+    # compare in CORRELATION space — sqrt amplifies corr error near exact
+    # matches (dist 0), so distance-space tolerances are the wrong yardstick
+    c_engine = 1.0 - p * p / (2.0 * m)
+    for i in rng.integers(0, la, size=5):
+        c = true_corr(int(i), int(idx[i]))
+        if c is not None:
+            assert abs(c - c_engine[i]) < 2e-4, (i, idx[i], c, c_engine[i])
+        for j in rng.integers(0, lb, size=4):
+            c2 = true_corr(int(i), int(j))
+            if c2 is not None:
+                assert c_engine[i] >= c2 - 2e-4

@@ -1,0 +1,102 @@
+"""Anytime scheduler over AB (rectangular) plans: exactness, monotone
+convergence across interleaved rounds, and checkpoint -> resume -> identical
+final profile. Runs on a single-device in-process mesh (the multi-worker SPMD
+path is exercised in test_distributed_mp.py's subprocess)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ref import ab_join_bruteforce
+from repro.core.scheduler import AnytimeScheduler
+from repro.launch.mesh import make_worker_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_worker_mesh(1)
+
+
+def _pair(na=420, nb=200, seed=2):
+    rng = np.random.default_rng(seed)
+    a = np.cumsum(rng.normal(size=na)).astype(np.float32)
+    b = np.cumsum(rng.normal(size=nb)).astype(np.float32)
+    return a, b
+
+
+def test_ab_rounds_monotone_and_exact(mesh):
+    a, b = _pair()
+    m = 16
+    sch = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=6, band=16)
+    p_ref, _ = ab_join_bruteforce(jnp.asarray(a), jnp.asarray(b), m)
+    prev = None
+    fracs = []
+    for _ in range(sch.plan.n_rounds):
+        st = sch.step_round()
+        d = np.asarray(st.profile.to_distance(m))
+        if prev is not None:
+            assert (d <= prev + 1e-5).all(), "anytime merge must be monotone"
+        prev = d
+        fracs.append(st.fraction_done)
+    assert sch.finish_reverse() is sch.state.profile   # AB: no reverse pass
+    p, idx = sch.distance_profile()
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                               rtol=2e-3, atol=2e-3)
+    lb = len(b) - m + 1
+    assert ((np.asarray(idx) >= 0) & (np.asarray(idx) < lb)).all()
+    # interleaved rounds accumulate work strictly and finish at 1.0
+    assert all(f2 > f1 for f1, f2 in zip(fracs, fracs[1:]))
+    assert fracs[-1] == pytest.approx(1.0)
+
+
+def test_ab_checkpoint_resume_identical(mesh, tmp_path):
+    a, b = _pair(seed=5)
+    m = 20
+    path = str(tmp_path / "ab.npz")
+
+    full = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
+    full.run()
+    p_full, i_full = full.distance_profile()
+
+    part = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
+    part.step_round()
+    part.step_round()
+    assert 0.0 < part.state.fraction_done < 1.0
+    part.checkpoint(path)
+
+    res = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
+    res.resume(path)
+    res.run()
+    p_res, i_res = res.distance_profile()
+    # resumed run completes the EXACT remaining chunks: identical profile
+    np.testing.assert_array_equal(np.asarray(p_res), np.asarray(p_full))
+    np.testing.assert_array_equal(np.asarray(i_res), np.asarray(i_full))
+
+
+def test_ab_scheduler_with_exclusion_matches_self(mesh):
+    """AB plan on (ts, ts) with an exclusion band == self-join scheduler."""
+    a, _ = _pair(na=380, nb=0, seed=9)
+    m, excl = 16, 4
+    ab = AnytimeScheduler(a, m, mesh, ts_b=a, exclusion=excl,
+                          chunks_per_worker=4, band=16)
+    ab.run()
+    p_ab, _ = ab.distance_profile()
+
+    selfj = AnytimeScheduler(a, m, mesh, exclusion=excl,
+                             chunks_per_worker=4, band=16)
+    selfj.run()
+    selfj.finish_reverse()
+    p_self, _ = selfj.distance_profile()
+    np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_self),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ab_checkpoint_refuses_mismatched_geometry(mesh, tmp_path):
+    a, b = _pair(seed=11)
+    path = str(tmp_path / "geom.npz")
+    sch = AnytimeScheduler(a, 16, mesh, ts_b=b, chunks_per_worker=2)
+    sch.step_round()
+    sch.checkpoint(path)
+    other = AnytimeScheduler(a, 16, mesh, chunks_per_worker=2)  # self-join
+    with pytest.raises(AssertionError):
+        other.resume(path)

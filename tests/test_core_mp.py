@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.matrix_profile import (
     ProfileState, matrix_profile, profile_from_stats, top_discords, top_motif,

@@ -19,8 +19,8 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core.scheduler import AnytimeScheduler
 from repro.core.ref import matrix_profile_bruteforce
 
-mesh = jax.make_mesh((8,), ("workers",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_mesh
+mesh = compat_mesh((8,), ("workers",))
 rng = np.random.default_rng(1)
 ts = np.cumsum(rng.normal(size=600)).astype(np.float32)
 m = 20
@@ -51,6 +51,23 @@ sch3.run(); sch3.finish_reverse()
 p3, _ = sch3.distance_profile()
 out["err_resume"] = float(np.abs(np.asarray(p3) - np.asarray(p_ref)).max())
 out["frac_after_fail"] = sch2.state.fraction_done
+
+# AB join across the same 8-worker mesh (signed rectangular plan)
+from repro.core.ref import ab_join_bruteforce
+ts_b = np.cumsum(rng.normal(size=250)).astype(np.float32)
+pab_ref, _ = ab_join_bruteforce(jnp.asarray(ts), jnp.asarray(ts_b), m)
+ab = AnytimeScheduler(ts, m, mesh, ts_b=ts_b, chunks_per_worker=4, band=16)
+prev = None
+ab_mono = True
+for r in range(ab.plan.n_rounds):
+    st = ab.step_round()
+    d = np.asarray(st.profile.to_distance(m))
+    if prev is not None and not (d <= prev + 1e-5).all():
+        ab_mono = False
+    prev = d
+pab, _ = ab.distance_profile()
+out["ab_monotone"] = ab_mono
+out["ab_err"] = float(np.abs(np.asarray(pab) - np.asarray(pab_ref)).max())
 print(json.dumps(out))
 """ % (SRC,)
 
@@ -74,3 +91,8 @@ def test_anytime_monotone_across_workers(results):
 def test_failure_and_elastic_resume_exact(results):
     assert results["err_resume"] < 2e-3
     assert 0.0 < results["frac_after_fail"] < 1.0
+
+
+def test_ab_join_multiworker_exact_and_monotone(results):
+    assert results["ab_err"] < 2e-3
+    assert results["ab_monotone"]

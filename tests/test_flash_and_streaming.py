@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attn import flash_attention, ref_attention
 
@@ -95,6 +95,60 @@ def test_streaming_discord_detection():
     sp.append(base)
     pos, score = sp.top_discord()
     assert 185 <= pos <= 216, (pos, score)
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+def test_streaming_query_matches_ab_oracle(normalize):
+    """query() is an AB join of the query against the appended corpus."""
+    from repro.core.ref import ab_join_bruteforce
+    from repro.core.streaming import StreamingProfile
+    import jax.numpy as jnp
+    rng = np.random.default_rng(8)
+    ref = np.cumsum(rng.normal(size=240)).astype(np.float64)
+    q = np.cumsum(rng.normal(size=70)).astype(np.float64)
+    m = 12
+    sp = StreamingProfile(m, 3, normalize=normalize)
+    sp.append(ref)
+    d, idx = sp.query(q)
+    d_ref, i_ref = ab_join_bruteforce(jnp.asarray(q, jnp.float32),
+                                      jnp.asarray(ref, jnp.float32), m,
+                                      normalize=normalize)
+    np.testing.assert_allclose(d, np.asarray(d_ref), rtol=2e-3, atol=2e-3)
+    assert (idx == np.asarray(i_ref)).all()
+
+
+def test_streaming_query_does_not_mutate_state():
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(4)
+    sp = StreamingProfile(8, 2)
+    sp.append(rng.normal(size=80))
+    before_d = sp.distances().copy()
+    before_n = sp.n_subsequences
+    sp.query(rng.normal(size=30))
+    assert sp.n_subsequences == before_n
+    np.testing.assert_array_equal(sp.distances(), before_d)
+
+
+def test_streaming_query_validation():
+    from repro.core.streaming import StreamingProfile
+    sp = StreamingProfile(16, 4)
+    with pytest.raises(ValueError):
+        sp.query(np.zeros(20))          # corpus has no complete window yet
+    sp.append(np.random.default_rng(0).normal(size=40))
+    with pytest.raises(ValueError):
+        sp.query(np.zeros(10))          # query shorter than one window
+
+
+def test_streaming_query_improves_as_corpus_grows():
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(6)
+    sp = StreamingProfile(10, 2)
+    sp.append(rng.normal(size=60))
+    q = rng.normal(size=40)
+    d1, _ = sp.query(q)
+    sp.append(rng.normal(size=60))
+    d2, _ = sp.query(q)
+    assert (d2 <= d1 + 1e-12).all(), "a larger corpus can only match better"
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,7 +1,7 @@
 """Property tests for NATSA's balanced anytime partitioning."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import partition
 
@@ -83,3 +83,83 @@ def test_balance_badness_metric():
     assert partition.balance_badness(1000, [(8, 500), (500, 1000)]) > 1.0
     ranges = partition.balanced_ranges(100000, 8, 16, band=1)
     assert partition.balance_badness(100000, ranges) < 1.05
+
+
+# -- rectangular (AB) diagonal space ------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(50, 2000), st.integers(50, 2000), st.integers(1, 16),
+       st.sampled_from([1, 8, 64]), st.sampled_from([0, 0, 3]))
+def test_ab_ranges_cover_exactly(l_a, l_b, parts, band, excl):
+    excl = min(excl, min(l_a, l_b) // 4)
+    ranges = partition.balanced_ranges_ab(l_a, l_b, parts, band=band,
+                                          excl=excl)
+    k_min = -(l_a - 1)
+    cov = np.zeros(l_a - 1 + l_b, int)      # index k - k_min
+    for k0, k1 in ranges:
+        for k in range(max(k0, k_min), min(k1, l_b)):
+            cov[k - k_min] += 1
+    ks = np.arange(k_min, l_b)
+    inside = np.abs(ks) >= excl
+    assert (cov[inside] == 1).all(), "every rectangle diagonal exactly once"
+    assert (cov[~inside] == 0).all(), "exclusion band untouched"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1000, 20000), st.integers(500, 20000),
+       st.integers(2, 64))
+def test_ab_work_balance(l_a, l_b, parts):
+    """Equal WORK per range, within one diagonal's granularity (band=1)."""
+    ranges = partition.balanced_ranges_ab(l_a, l_b, parts, band=1)
+    w = np.array([partition.range_work_ab(l_a, l_b, r) for r in ranges],
+                 float)
+    total = w.sum()
+    assert total == float(l_a) * l_b, "ranges partition the full rectangle"
+    if parts * 4 > (l_a + l_b):
+        return  # degenerate: fewer diagonals than parts
+    max_diag = min(l_a, l_b)
+    assert w.max() <= total / parts + max_diag + 1, \
+        "no range exceeds fair share + one diagonal"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(300, 3000), st.integers(300, 3000), st.integers(1, 8),
+       st.integers(1, 6))
+def test_ab_interleaved_plan(l_a, l_b, workers, cpw):
+    plan = partition.interleaved_chunks_ab(l_a, l_b, workers,
+                                           chunks_per_worker=cpw, band=16)
+    assert plan.l_b == l_b
+    seen = set()
+    for r in plan.rounds:
+        assert len(r) == workers
+        for c in r:
+            if c >= 0:
+                assert c not in seen, "chunk scheduled twice"
+                seen.add(c)
+    nonempty = {c for c in range(len(plan.chunks))
+                if partition.range_work_ab(l_a, l_b, plan.chunks[c]) > 0}
+    assert nonempty <= seen, "all non-empty chunks scheduled"
+    # work accounting flows through the AB path
+    assert plan.chunk_work().sum() == l_a * l_b
+
+
+def test_ab_gap_never_straddled():
+    """With an exclusion band, no chunk may contain diagonals of both signs."""
+    l_a, l_b, excl = 700, 400, 5
+    for parts in (3, 7, 16):
+        for k0, k1 in partition.balanced_ranges_ab(l_a, l_b, parts, band=8,
+                                                   excl=excl):
+            if k1 > k0:
+                # entirely negative-side or entirely positive-side
+                assert k1 <= -excl + 1 or k0 >= excl, (k0, k1)
+
+
+def test_ab_replan_preserves_l_b():
+    plan = partition.interleaved_chunks_ab(900, 500, 4, chunks_per_worker=4)
+    done = np.zeros(len(plan.chunks), bool)
+    done[1::2] = True
+    new = partition.replan_remaining(plan, done, 2)
+    assert new.l_b == plan.l_b
+    scheduled = {c for r in new.rounds for c in r if c >= 0}
+    assert scheduled == {c for c in range(len(plan.chunks)) if not done[c]}

@@ -67,8 +67,8 @@ def test_roofline_terms_bottleneck():
 
 
 def test_sanitize_pspec_rules():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_mesh
+    mesh = compat_mesh((1,), ("model",))
 
     class FakeMesh:
         shape = {"model": 16, "data": 4}
