@@ -6,6 +6,11 @@ all-reduce (`pmax` on correlation + index recovery), which is exactly NATSA's
 cheap "merge local profiles" step — O(l) traffic per worker per merge,
 independent of the O(l^2/P) compute per chunk.
 
+Chunks are TWO-SIDED: every cell a worker streams updates both the row
+profile P[i] and the column profile P[j] (for AB joins, A's and B's profiles
+respectively), so the round plan needs to cover each diagonal exactly once —
+there is no reversed-series second phase.
+
 Chunks are equal-WORK, not equal-diagonal-count (long diagonals live at small
 k), so workers loop a common static band count and mask bands past their own
 chunk end — the masked bands are the load-imbalance the paper's partitioner
@@ -15,14 +20,12 @@ fraction stays small.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.matrix_profile import (
-    DEFAULT_RESEED, NEG, ProfileState, band_rowmax, band_rowmax_ab,
+    ColState, DEFAULT_RESEED, NEG, ProfileState, band_rowmax, band_rowmax_ab,
     centered_windows,
 )
 from repro.core.zstats import CrossStats, ZStats
@@ -41,44 +44,61 @@ def pmax_profile(state: ProfileState, axis: str) -> ProfileState:
 def worker_chunk(stats: ZStats, k0: jax.Array, k1: jax.Array,
                  n_bands: int, band: int,
                  reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
-    """Row-max over band-aligned diagonals [k0, k1), at most n_bands bands."""
+    """Two-sided harvest over band-aligned diagonals [k0, k1), <= n_bands
+    bands. Both the row and the column updates of every swept cell land in
+    the returned state."""
     l = stats.n_subsequences
     wc = centered_windows(stats) if reseed_every is not None else None
 
-    def body(state: ProfileState, b):
+    def body(carry, b):
+        state, col = carry
         start = k0 + b * band
-        corr, idx = band_rowmax(stats, start, band,
-                                reseed_every=reseed_every, windows_c=wc)
-        corr = jnp.where(start < k1, corr, NEG)
-        return state.merge(ProfileState(corr, idx)), None
+        rc, ri, win, wi = band_rowmax(stats, start, band,
+                                      reseed_every=reseed_every, windows_c=wc)
+        live = start < k1            # bands past the chunk end contribute 0
+        rc = jnp.where(live, rc, NEG)
+        win = jnp.where(live, win, NEG)
+        state = state.merge(ProfileState(rc, ri))
+        col = col.merge_window(win, wi, start)
+        return (state, col), None
 
-    init = ProfileState.empty(l)
-    state, _ = jax.lax.scan(body, init, jnp.arange(n_bands))
-    return state
+    init = (ProfileState.empty(l), ColState.empty(0, l, l + band))
+    (state, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return state.merge(col.to_profile(0, l))
 
 
 def worker_chunk_ab(cross: CrossStats, k0: jax.Array, k1: jax.Array,
                     n_bands: int, band: int,
-                    reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
-    """Row-max over one SIGNED diagonal chunk [k0, k1) of the AB rectangle.
+                    reseed_every: int | None = DEFAULT_RESEED
+                    ) -> tuple[ProfileState, ProfileState]:
+    """Two-sided harvest over one SIGNED diagonal chunk [k0, k1) of the AB
+    rectangle.
 
-    Same structure as `worker_chunk`; diagonals may be negative and the
-    chunk end is masked per-diagonal (AB chunk widths are not always
+    Returns (state_a (l_a,), state_b (l_b,)) — A's row harvest and B's
+    column harvest of the same swept cells. Diagonals may be negative and
+    the chunk end is masked per-diagonal (AB chunk widths are not always
     band-aligned — the exclusion gap forces odd cuts)."""
-    la = cross.l_a
+    la, lb = cross.l_a, cross.l_b
     wa = centered_windows(cross.a) if reseed_every is not None else None
     wb = centered_windows(cross.b) if reseed_every is not None else None
+    pad_l = la - 1                 # most negative valid diagonal start
 
-    def body(state: ProfileState, b):
+    def body(carry, b):
+        st_a, col = carry
         start = k0 + b * band
-        corr, idx = band_rowmax_ab(cross, start, band, k_hi=k1,
-                                   reseed_every=reseed_every, wa=wa, wb=wb)
-        corr = jnp.where(start < k1, corr, NEG)
-        return state.merge(ProfileState(corr, idx)), None
+        ra, ia, win, wi = band_rowmax_ab(cross, start, band, k_hi=k1,
+                                         reseed_every=reseed_every,
+                                         wa=wa, wb=wb)
+        live = start < k1
+        ra = jnp.where(live, ra, NEG)
+        win = jnp.where(live, win, NEG)
+        st_a = st_a.merge(ProfileState(ra, ia))
+        col = col.merge_window(win, wi, start + pad_l)
+        return (st_a, col), None
 
-    init = ProfileState.empty(la)
-    state, _ = jax.lax.scan(body, init, jnp.arange(n_bands))
-    return state
+    init = (ProfileState.empty(la), ColState.empty(pad_l, lb, la + band))
+    (state_a, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return state_a, col.to_profile(pad_l, lb)
 
 
 def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
@@ -87,7 +107,9 @@ def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
     Signature: (stats, running_profile, k0s (P,), k1s (P,)) -> merged profile.
     Idle workers pass k0 == k1 (empty chunk). Stats are replicated — they are
     O(n); the implicit distance matrix is O(n^2). Shipping the small streams
-    to every worker instead of partitioning the matrix is the NDP move.
+    to every worker instead of partitioning the matrix is the NDP move. A
+    full set of rounds yields the EXACT profile (two-sided chunks — no
+    reversed finish phase).
     """
 
     def per_worker(stats: ZStats, running: ProfileState, k0_local, k1_local):
@@ -103,22 +125,25 @@ def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
 
 
 def make_round_fn_ab(mesh, n_bands: int, band: int, axis: str = "workers"):
-    """AB analogue of `make_round_fn`: one anytime round over signed chunks.
+    """AB analogue of `make_round_fn`: one anytime round over signed chunks,
+    carrying BOTH profiles.
 
-    Signature: (cross, running_profile, k0s (P,), k1s (P,)) -> merged profile.
-    Idle workers pass k0 == k1. CrossStats (both series' streams + seeds) are
-    replicated — still O(n_a + n_b) traffic vs the O(n_a * n_b) rectangle.
+    Signature: (cross, running_a, running_b, k0s (P,), k1s (P,))
+    -> (merged_a, merged_b). Idle workers pass k0 == k1. CrossStats (both
+    series' streams + seeds) are replicated — still O(n_a + n_b) traffic vs
+    the O(n_a * n_b) rectangle.
     """
 
-    def per_worker(cross: CrossStats, running: ProfileState,
-                   k0_local, k1_local):
-        local = worker_chunk_ab(cross, k0_local[0], k1_local[0],
-                                n_bands, band)
-        return pmax_profile(running.merge(local), axis)
+    def per_worker(cross: CrossStats, running_a: ProfileState,
+                   running_b: ProfileState, k0_local, k1_local):
+        loc_a, loc_b = worker_chunk_ab(cross, k0_local[0], k1_local[0],
+                                       n_bands, band)
+        return (pmax_profile(running_a.merge(loc_a), axis),
+                pmax_profile(running_b.merge(loc_b), axis))
 
     shmapped = shard_map_compat(
         per_worker, mesh=mesh,
-        in_specs=(P(), P(), P(axis), P(axis)),
-        out_specs=P(),
+        in_specs=(P(), P(), P(), P(axis), P(axis)),
+        out_specs=(P(), P()),
     )
     return jax.jit(shmapped)

@@ -1,7 +1,10 @@
 """NATSA's balanced anytime workload partitioning, host-side.
 
 The iteration space is the upper triangle of an l x l matrix restricted to
-diagonals k in [excl, l): diagonal k holds (l - k) cells. Splitting diagonals
+diagonals k in [excl, l): diagonal k holds (l - k) cells, and each cell
+streamed yields BOTH its row- and column-profile update (the engine's fused
+two-sided harvest), so covering these diagonals once is the ENTIRE job —
+there is no reversed-series second phase to plan for. Splitting diagonals
 *evenly by count* (the naive scheme the paper argues against) gives the first
 worker ~2x the cells of the last. NATSA's scheme splits by *cumulative cell
 count* so every processing unit streams the same number of updates.
@@ -28,7 +31,10 @@ import numpy as np
 
 
 def diag_work(l: int, k: np.ndarray) -> np.ndarray:
-    """Cells on diagonal k (row profile only; the reversed pass doubles it)."""
+    """Cells on diagonal k. One streamed cell = one unit of work; each cell
+    produces both its row and its column profile update, so this is the
+    TOTAL work of the diagonal (the old reversed pass that doubled it is
+    gone)."""
     return l - k
 
 

@@ -2,10 +2,15 @@
 
 Drives `distributed.make_round_fn` over an `AnytimePlan`:
 
+  - every chunk is TWO-SIDED: each streamed cell updates both profile sides
+    (row and column for self-joins; A's and B's profiles for AB joins), so a
+    completed plan IS the exact answer — there is no reversed-series finish
+    phase (`finish_reverse` survives only as a deprecated no-op);
   - after every round the merged profile is a VALID interruptible answer
     (SCRIMP's anytime property, preserved by interleaved chunk order);
   - progress is a per-chunk done-bitmap; (profile, bitmap) checkpoints make
-    node failure cost at most one round;
+    node failure cost at most one round — AB checkpoints carry BOTH fused
+    profile sides;
   - `resume()` replans remaining chunks for ANY worker count (elastic
     scale-up/down and failed-worker exclusion use the same path).
 
@@ -18,7 +23,7 @@ import dataclasses
 import json
 import os
 import tempfile
-from typing import Callable
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +32,7 @@ import numpy as np
 from repro.core import partition
 from repro.core.matrix_profile import ProfileState
 from repro.core.partition import AnytimePlan
-from repro.core.zstats import (
-    ZStats, compute_cross_stats_host, compute_stats_host,
-)
+from repro.core.zstats import compute_cross_stats_host, compute_stats_host
 from repro.core.distributed import make_round_fn, make_round_fn_ab
 
 
@@ -37,8 +40,9 @@ from repro.core.distributed import make_round_fn, make_round_fn_ab
 class SchedulerState:
     plan: AnytimePlan
     done: np.ndarray            # (C,) bool
-    profile: ProfileState       # merged, lives on device(s)
+    profile: ProfileState       # merged (A side), lives on device(s)
     rounds_completed: int
+    profile_b: ProfileState | None = None   # AB joins: B side of the sweep
 
     @property
     def fraction_done(self) -> float:
@@ -52,8 +56,9 @@ class AnytimeScheduler:
 
     Self-join by default; pass `ts_b` for an AB join — the plan then covers
     the SIGNED diagonal space of the (l_a, l_b) rectangle (no exclusion zone
-    unless requested), rounds stay anytime-monotone, and `finish_reverse`
-    becomes a no-op because signed chunks already cover every cell.
+    unless requested) and every round also accumulates B's profile
+    (`distance_profile_b`). Rounds stay anytime-monotone; chunks harvest both
+    profile sides in the same sweep, so `run()` alone is exact.
     """
 
     def __init__(self, ts, window: int, mesh, *, axis: str = "workers",
@@ -81,7 +86,6 @@ class AnytimeScheduler:
                               if exclusion is None else exclusion)
             self.exclusion = int(self.exclusion)
             self.stats = compute_stats_host(ts, self.window)
-            self.stats_rev = compute_stats_host(ts[::-1], self.window)
             self.l = self.stats.n_subsequences
             self.l_b = None
             self.plan = partition.interleaved_chunks(
@@ -96,6 +100,7 @@ class AnytimeScheduler:
             done=np.zeros(len(self.plan.chunks), bool),
             profile=ProfileState.empty(self.l),
             rounds_completed=0,
+            profile_b=ProfileState.empty(self.l_b) if self.ab else None,
         )
 
     def _make_round_fn(self):
@@ -134,6 +139,16 @@ class AnytimeScheduler:
             k1s.append(empty)
         return (np.asarray(k0s, np.int32), np.asarray(k1s, np.int32))
 
+    def _run_round(self, prev: SchedulerState, k0s, k1s):
+        """One SPMD dispatch; returns (profile, profile_b)."""
+        if self.ab:
+            return self._round_fn(self._round_stats, prev.profile,
+                                  prev.profile_b,
+                                  jnp.asarray(k0s), jnp.asarray(k1s))
+        merged = self._round_fn(self._round_stats, prev.profile,
+                                jnp.asarray(k0s), jnp.asarray(k1s))
+        return merged, None
+
     def step_round(self, *, fail_workers: set[int] | None = None) -> SchedulerState:
         """Execute the next round. `fail_workers` simulates NDP-unit/node
         failure: those workers' chunks are NOT marked done (their compute is
@@ -145,9 +160,7 @@ class AnytimeScheduler:
             return self.state
         ids = plan.rounds[r]
         k0s, k1s = self._round_bounds(ids)
-        prev_profile = self.state.profile
-        merged = self._round_fn(self._round_stats, prev_profile,
-                                jnp.asarray(k0s), jnp.asarray(k1s))
+        merged, merged_b = self._run_round(self.state, k0s, k1s)
         fail_workers = fail_workers or set()
         if fail_workers:
             # a failed worker's contribution cannot be trusted: rerun the round
@@ -156,14 +169,14 @@ class AnytimeScheduler:
             for w in fail_workers:
                 k0s2[w] = self._k_empty
                 k1s2[w] = self._k_empty
-            merged = self._round_fn(self._round_stats, prev_profile,
-                                    jnp.asarray(k0s2), jnp.asarray(k1s2))
+            merged, merged_b = self._run_round(self.state, k0s2, k1s2)
         done = self.state.done.copy()
         for w, c in enumerate(ids):
             if c >= 0 and w not in fail_workers:
                 done[c] = True
         self.state = SchedulerState(plan=plan, done=done, profile=merged,
-                                    rounds_completed=r + 1)
+                                    rounds_completed=r + 1,
+                                    profile_b=merged_b)
         return self.state
 
     def run(self, max_rounds: int | None = None) -> SchedulerState:
@@ -173,31 +186,18 @@ class AnytimeScheduler:
         return self.state
 
     def finish_reverse(self) -> ProfileState:
-        """Complete the column half (reversed-series pass) and merge.
+        """DEPRECATED no-op, kept for API compatibility.
 
-        The anytime loop runs the forward half; reversed diagonals are the
-        same chunk plan on reversed stats. For a final exact answer call this
-        after `run()` (benchmarks exercise partial/interrupted paths too).
-        AB plans cover the whole signed space already — no-op there.
+        Chunks are two-sided: every round already merges both the row and the
+        column half of its swept cells, so there is no reversed-series pass
+        left to run — `run()` alone produces the exact profile. Returns the
+        current merged profile unchanged.
         """
-        if self.ab:
-            return self.state.profile
-        plan = partition.interleaved_chunks(
-            self.l, self.exclusion, self.mesh.shape[self.axis],
-            chunks_per_worker=len(self.plan.rounds), band=self.band)
-        prof = ProfileState.empty(self.l)
-        for r in range(plan.n_rounds):
-            ids = plan.rounds[r]
-            k0s = np.asarray([plan.chunks[c][0] if c >= 0 else self.l for c in ids], np.int32)
-            k1s = np.asarray([plan.chunks[c][1] if c >= 0 else self.l for c in ids], np.int32)
-            prof = self._round_fn(self.stats_rev, prof,
-                                  jnp.asarray(k0s), jnp.asarray(k1s))
-        rev_corr = prof.corr[::-1]
-        rev_idx = jnp.where(prof.index[::-1] >= 0,
-                            self.l - 1 - prof.index[::-1], -1).astype(jnp.int32)
-        merged = self.state.profile.merge(ProfileState(rev_corr, rev_idx))
-        self.state = dataclasses.replace(self.state, profile=merged)
-        return merged
+        warnings.warn(
+            "AnytimeScheduler.finish_reverse() is a deprecated no-op: fused "
+            "two-sided chunks complete both profile halves during run()",
+            DeprecationWarning, stacklevel=2)
+        return self.state.profile
 
     # -- fault tolerance / elasticity ---------------------------------------
 
@@ -205,6 +205,10 @@ class AnytimeScheduler:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = tempfile.NamedTemporaryFile(
             dir=os.path.dirname(path) or ".", delete=False, suffix=".tmp")
+        extra = {}
+        if self.ab:
+            extra = dict(corr_b=np.asarray(self.state.profile_b.corr),
+                         index_b=np.asarray(self.state.profile_b.index))
         np.savez(tmp,
                  corr=np.asarray(self.state.profile.corr),
                  index=np.asarray(self.state.profile.index),
@@ -214,19 +218,42 @@ class AnytimeScheduler:
                                       window=self.window,
                                       exclusion=self.exclusion,
                                       band=self.band,
-                                      chunks=list(self.plan.chunks))))
+                                      chunks=list(self.plan.chunks),
+                                      # done-chunks carry BOTH profile
+                                      # halves; pre-fusion checkpoints
+                                      # (row half only, column half owed to
+                                      # finish_reverse) must not resume
+                                      fused=True)),
+                 **extra)
         tmp.close()
         os.replace(tmp.name, path)
 
     def resume(self, path: str, *, n_workers: int | None = None) -> None:
         """Restart from checkpoint, replanning remaining chunks for the
-        current (possibly different) worker count — elastic scaling."""
+        current (possibly different) worker count — elastic scaling. The
+        checkpointed profile carries the fused two-sided state (both sides
+        for AB), so mid-plan restarts lose no column updates."""
         z = np.load(path, allow_pickle=False)
         meta = json.loads(str(z["meta"]))
         assert meta["l"] == self.l and meta["window"] == self.window
         assert meta.get("l_b") == self.l_b
+        # refuse pre-fusion checkpoints: their done-chunks contributed only
+        # the row half (the column half was owed to finish_reverse, now a
+        # no-op), so resuming them would silently drop lower-triangle
+        # updates. ValueError, not assert — this must survive python -O.
+        if not meta.get("fused"):
+            raise ValueError(
+                "checkpoint predates the fused two-sided engine; its "
+                "completed chunks lack column-half updates — recompute "
+                "from scratch")
         done = z["done"]
         profile = ProfileState(jnp.asarray(z["corr"]), jnp.asarray(z["index"]))
+        profile_b = None
+        if self.ab:
+            if "corr_b" not in z:
+                raise ValueError("AB checkpoint must carry the B-side state")
+            profile_b = ProfileState(jnp.asarray(z["corr_b"]),
+                                     jnp.asarray(z["index_b"]))
         workers = n_workers or self.mesh.shape[self.axis]
         base = AnytimePlan(l=self.l, exclusion=self.exclusion,
                            n_workers=workers,
@@ -238,10 +265,19 @@ class AnytimeScheduler:
         self._round_fn = self._make_round_fn()
         self.plan = plan
         self.state = SchedulerState(plan=plan, done=done, profile=profile,
-                                    rounds_completed=0)
+                                    rounds_completed=0, profile_b=profile_b)
 
     # -- results -------------------------------------------------------------
 
     def distance_profile(self) -> tuple[jax.Array, jax.Array]:
         return (self.state.profile.to_distance(self.window),
                 self.state.profile.index)
+
+    def distance_profile_b(self) -> tuple[jax.Array, jax.Array]:
+        """B's profile against A — the column harvest of the same rounds.
+        AB joins only."""
+        if not self.ab:
+            raise ValueError("distance_profile_b() requires an AB scheduler "
+                             "(construct with ts_b=...)")
+        return (self.state.profile_b.to_distance(self.window),
+                self.state.profile_b.index)

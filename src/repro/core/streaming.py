@@ -6,10 +6,16 @@ the implicit distance matrix, which both (a) sets the new subsequence's own
 profile entry and (b) can only LOWER existing entries (anytime-monotone,
 same merge semantics as the distributed scheduler).
 
-Host-side f64 stats (same rationale as zstats.compute_stats_host); the
-per-append row is one centered-windows matvec — vectorized, no recurrence
-drift. Supports both z-normalized and non-normalized distances so the
-telemetry monitor can stream either mode.
+`append(values)` is BATCHED: appending p points builds the window matrix
+once and evaluates all p new rows as a single (p, l) block with one
+`_sqdist_rows` call — O(n·m + p·n·m_matmul) per call instead of the old
+one-point-at-a-time loop that rebuilt the O(n·m) window matrix p times
+(O(p·n·m) rebuild cost alone, O(n^2·m) for a bulk load).
+
+Host-side f64 stats (same rationale as zstats.compute_stats_host); block
+rows are centered-windows matmuls — vectorized, no recurrence drift.
+Supports both z-normalized and non-normalized distances so the telemetry
+monitor can stream either mode.
 """
 
 from __future__ import annotations
@@ -65,37 +71,49 @@ class StreamingProfile:
         return ((wa * wa).sum(axis=1)[:, None] + bn[None, :]
                 - 2.0 * wa @ bc.T)
 
-    def _row_sqdist(self, j: int, w: np.ndarray) -> np.ndarray:
-        """Squared distances of subsequence j vs subsequences [0, j-excl]."""
-        hi = j - self.excl + 1
-        if hi <= 0:
-            return np.zeros((0,), np.float64)
-        return self._sqdist_rows(w[j:j + 1], w[:hi])[0]
-
     # -- public ---------------------------------------------------------------
 
     def append(self, values) -> None:
+        """Append point(s) and update the exact profile.
+
+        All new subsequences are evaluated as ONE (p, l) distance block: new
+        entry j takes its row-min over columns [0, j-excl] (which includes
+        earlier subsequences of the same batch), existing entries take the
+        column-min of the block — exactly the sequential per-point result,
+        order-independently.
+        """
         values = np.atleast_1d(np.asarray(values, np.float64))
-        for v in values:
-            self._ts.append(float(v))
-            if self.max_points and len(self._ts) > self.max_points:
-                raise ValueError("max_points exceeded; start a new profile")
-            l = len(self._ts) - self.m + 1
-            if l <= 0:
-                continue
-            j = l - 1
-            w = self._windows()
-            row = self._row_sqdist(j, w)
-            # grow state
-            self._profile = np.append(self._profile, np.inf)
-            self._index = np.append(self._index, -1)
-            if row.size:
-                best = int(np.argmin(row))
-                self._profile[j] = row[best]
-                self._index[j] = best
-                upd = row < self._profile[:row.size]
-                self._profile[:row.size][upd] = row[upd]
-                self._index[:row.size][upd] = j
+        if values.size == 0:
+            return
+        if self.max_points and len(self._ts) + values.size > self.max_points:
+            raise ValueError("max_points exceeded; start a new profile")
+        l_old = self._profile.shape[0]
+        self._ts.extend(float(v) for v in values)
+        l_new = len(self._ts) - self.m + 1
+        if l_new <= max(l_old, 0):
+            return                       # no new complete window yet
+        p = l_new - l_old
+        w = self._windows()                               # (l_new, m), built once
+        d2 = self._sqdist_rows(w[l_old:], w)              # (p, l_new)
+        # pair (i, j=l_old+r) is admissible iff i <= j - excl
+        jj = (l_old + np.arange(p))[:, None]
+        admissible = np.arange(l_new)[None, :] <= jj - self.excl
+        d2 = np.where(admissible, d2, np.inf)
+        # grow state
+        self._profile = np.concatenate([self._profile, np.full(p, np.inf)])
+        self._index = np.concatenate([self._index, np.full(p, -1, np.int64)])
+        # row mins -> the new subsequences' own entries
+        row_best = np.argmin(d2, axis=1)                  # (p,)
+        row_vals = d2[np.arange(p), row_best]
+        has = np.isfinite(row_vals)
+        self._profile[l_old:][has] = row_vals[has]
+        self._index[l_old:][has] = row_best[has]
+        # column mins -> existing entries (and earlier batch rows) improve
+        col_best = np.argmin(d2, axis=0)                  # (l_new,)
+        col_vals = d2[col_best, np.arange(l_new)]
+        upd = col_vals < self._profile[:l_new]
+        self._profile[:l_new][upd] = col_vals[upd]
+        self._index[:l_new][upd] = l_old + col_best[upd]
 
     def query(self, values) -> tuple[np.ndarray, np.ndarray]:
         """Score a query stream against the FIXED reference corpus — the

@@ -100,20 +100,17 @@ def self_cross(stats: ZStats) -> CrossStats:
     return CrossStats(a=stats, b=stats, cov0s=cov0s)
 
 
-def _centered_windows_f64(t, window: int):
-    import numpy as np
-
-    m = int(window)
-    l = t.shape[0] - m + 1
-    idx = np.arange(l)[:, None] + np.arange(m)[None, :]
-    w = t[idx]
-    return w - w.mean(axis=1, keepdims=True)
-
-
 def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None) -> CrossStats:
     """Build AB-join streams host-side in f64 (same rationale as
     `compute_stats_host`); the seeds are exact centered dots, so the device
     recurrence restarts from well-conditioned values on every diagonal.
+
+    The seed dots reuse the centered-window matrices the stats pass already
+    built (`return_centered_windows=True`), so each series' (l, m) window
+    matrix is materialized exactly ONCE — half the AB host-prep time and
+    peak memory of building it again for the seeds. Note the stats pass
+    centers each series around its own mean; the seeds are dot products of
+    PER-WINDOW-centered rows, which that global shift cannot change.
 
     Either side may be as short as one window (n >= m): query-against-corpus
     joins legitimately use a short side in both orientations (short query vs
@@ -122,10 +119,12 @@ def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None) -> CrossSt
     import numpy as np
 
     m = int(window)
-    sa = compute_stats_host(ts_a, m, out_dtype=out_dtype, min_subsequences=1)
-    sb = compute_stats_host(ts_b, m, out_dtype=out_dtype, min_subsequences=1)
-    wa = _centered_windows_f64(np.asarray(ts_a, np.float64), m)
-    wb = _centered_windows_f64(np.asarray(ts_b, np.float64), m)
+    sa, wa = compute_stats_host(ts_a, m, out_dtype=out_dtype,
+                                min_subsequences=1,
+                                return_centered_windows=True)
+    sb, wb = compute_stats_host(ts_b, m, out_dtype=out_dtype,
+                                min_subsequences=1,
+                                return_centered_windows=True)
     neg = wa[1:] @ wb[0]            # k = -1 .. -(l_a-1), start cells (-k, 0)
     pos = wb @ wa[0]                # k = 0 .. l_b-1,     start cells (0, k)
     cov0s = np.concatenate([neg[::-1], pos]).astype(np.float32)
@@ -202,9 +201,7 @@ def cov_row(stats: ZStats, row: int) -> jax.Array:
     ts = stats.ts
     q = jax.lax.dynamic_slice(ts, (row,), (m,))
     qt = sliding_dot(q, ts[row:])
-    l = stats.n_subsequences
-    mus = jax.lax.dynamic_slice(stats.mu, (row,), (l,))[: l - row] if False else stats.mu[row:]
-    return qt - m * stats.mu[row] * mus
+    return qt - m * stats.mu[row] * stats.mu[row:]
 
 
 def corr_to_dist(corr: jax.Array, window: int) -> jax.Array:
@@ -222,7 +219,8 @@ def compute_stats_jit(ts: jax.Array, window: int) -> ZStats:
 
 
 def compute_stats_host(ts, window: int, out_dtype=None,
-                       min_subsequences: int | None = None) -> ZStats:
+                       min_subsequences: int | None = None, *,
+                       return_centered_windows: bool = False):
     """Build the NATSA streams in float64 on the HOST, emit f32 streams.
 
     The in-graph `compute_stats` suffers catastrophic cancellation in f32
@@ -234,6 +232,11 @@ def compute_stats_host(ts, window: int, out_dtype=None,
 
     `min_subsequences` relaxes the self-join-oriented n >= 2m check: the B
     side of an AB join only needs n >= m + min_subsequences - 1.
+
+    `return_centered_windows=True` returns `(stats, w)` where `w` is the f64
+    (l, m) centered-window matrix the pass built anyway — callers needing
+    exact window dots (AB seed covariances) reuse it instead of
+    re-materializing O(l*m) memory.
     """
     import numpy as np
 
@@ -268,5 +271,8 @@ def compute_stats_host(ts, window: int, out_dtype=None,
     cov0 = w @ w[0]
     dt = jnp.float32 if out_dtype is None else out_dtype
     f = lambda x: jnp.asarray(np.asarray(x, np.float32), dt)
-    return ZStats(ts=f(t), mu=f(mu), invn=f(invn), df=f(df), dg=f(dg),
-                  cov0=f(cov0), window=m)
+    stats = ZStats(ts=f(t), mu=f(mu), invn=f(invn), df=f(df), dg=f(dg),
+                   cov0=f(cov0), window=m)
+    if return_centered_windows:
+        return stats, w
+    return stats

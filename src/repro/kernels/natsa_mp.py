@@ -1,4 +1,4 @@
-"""NATSA diagonal-streaming matrix-profile kernel (Pallas TPU).
+"""NATSA diagonal-streaming matrix-profile kernel (Pallas TPU), two-sided.
 
 TPU adaptation of NATSA's in-HBM-logic processing unit:
 
@@ -11,9 +11,14 @@ TPU adaptation of NATSA's in-HBM-logic processing unit:
   * a VMEM scratch carries the covariance of every diagonal across row tiles,
     so each stream element is touched exactly once per diagonal band — the
     kernel analogue of NATSA PUs' private diagonal registers;
-  * the kernel emits ROW-max correlation (+ argmax index) only; column
-    updates come from a second pass over the reversed series (see ops.py) —
-    TPUs have no cheap scatter-min, reversal keeps the kernel scatter-free.
+  * the kernel emits BOTH profile sides from the single sweep: the row-max
+    (+ argmax) per row tile, and the column-max harvested from the very same
+    (DT, IT) correlation tile via an in-tile diagonal re-gather — each
+    sublane's row is a STATIC shift by its diagonal offset, so the gather is
+    a stack of concatenations, and the (IT+DT)-wide column window is folded
+    into a full-length accumulator with one dynamic-slice read-modify-max
+    (scatter-free; TPUs have no cheap scatter-min). The old scheme ran the
+    whole kernel a second time over the reversed series for the column half.
 
 The kernel is TWO-SERIES: the i side (rows, series A) and the j side
 (diagonal strips, series B) are independent stream sets, and the diagonal
@@ -22,12 +27,17 @@ k = j - i in [-(l_a-1), l_b). Negative diagonals need no special recurrence:
 the j-side streams are zero-PREPADDED by `jpad`, so df_j/dg_j gathers before
 a diagonal's start cell return 0, the masked cumsum carries the seed
 covariance (CrossStats.cov0s) forward unchanged, and validity masking
-(jpos >= 0) hides the dead cells. A self-join is the case where both stream
-sets alias the same arrays, k_start = excl and jpad = 0.
+(jpos >= 0) hides the dead cells. The column outputs use the same shifted
+indexing: column j of the rectangle accumulates at flat position j + jpad.
+A self-join is the case where both stream sets alias the same arrays,
+k_start = excl and jpad = 0 — its column harvest IS the lower triangle, so
+one launch yields the complete profile.
 
 Grid: (n_row_tiles, n_diag_tiles), diag innermost so the output row block is
 revisited consecutively (read-modify-max accumulation), while the covariance
-scratch row for each diag tile persists across the outer row loop.
+scratch row for each diag tile persists across the outer row loop. The
+column accumulators map every grid step to the same full-length block, which
+the sequential TPU grid revisits in place.
 
 Layout note: tiles are (DT, IT) with diagonals on sublanes and rows on lanes;
 IT is a multiple of 128. Validated with interpret=True on CPU; compiled path
@@ -47,12 +57,20 @@ NEG = -2.0  # correlations live in [-1, 1]
 
 
 def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
-            out_corr, out_idx, carry, *, it: int, dt: int, k_start: int,
-            k_end: int, l_i: int, l_j: int, jpad: int):
+            out_corr, out_idx, out_colc, out_coli, carry, *, it: int, dt: int,
+            k_start: int, k_end: int, l_i: int, l_j: int, jpad: int,
+            col_len: int):
     i_idx = pl.program_id(0)
     d_idx = pl.program_id(1)
     i0 = i_idx * it
     k0 = k_start + d_idx * dt          # signed diagonal offset of this tile
+
+    # the column accumulators span the whole diagonal space; NEG-fill them
+    # once, before the first tile's read-modify-max
+    @pl.when((i_idx == 0) & (d_idx == 0))
+    def _init_col():
+        out_colc[:] = jnp.full((col_len,), NEG, jnp.float32)
+        out_coli[:] = jnp.full((col_len,), -1, jnp.int32)
 
     # seed the diagonal registers at the first row tile
     @pl.when(i_idx == 0)
@@ -87,8 +105,10 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
              & (k0 + dd < k_end))
     corr = jnp.where(valid, corr, NEG)
 
-    best_d = jnp.argmax(corr, axis=0)                              # (IT,)
-    tile_best = jnp.max(corr, axis=0)
+    # plain max + equality-recovered arg: cheaper than a variadic argmax
+    # reduce on both the interpret (XLA CPU) and Mosaic paths
+    tile_best = jnp.max(corr, axis=0)                              # (IT,)
+    best_d = jnp.max(jnp.where(corr == tile_best[None, :], dd, -1), axis=0)
     tile_idx = (i0 + jnp.arange(it) + k0 + best_d).astype(jnp.int32)
     tile_idx = jnp.where(tile_best > NEG, tile_idx, -1)
 
@@ -104,6 +124,29 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
         out_corr[0, :] = jnp.where(take, tile_best, prev)
         out_idx[0, :] = jnp.where(take, tile_idx, out_idx[0, :])
 
+    # -- column harvest of the SAME tile --------------------------------------
+    # the tile covers columns j in [i0+k0, i0+k0+IT+DT); the best value ending
+    # at local column t is max_dd corr[dd, t - dd] — a static per-sublane
+    # shift (diagonal re-gather), then one dynamic-slice read-modify-max into
+    # the flat accumulator at offset i0 + k0 + jpad.
+    w = it + dt
+    shifted = jnp.stack([
+        jnp.concatenate([jnp.full((d_,), NEG, jnp.float32), corr[d_, :],
+                         jnp.full((dt - d_,), NEG, jnp.float32)])
+        for d_ in range(dt)])                                      # (DT, W)
+    col_best = jnp.max(shifted, axis=0)                            # (W,)
+    ddw = jax.lax.broadcasted_iota(jnp.int32, (dt, w), 0)
+    col_d = jnp.max(jnp.where(shifted == col_best[None, :], ddw, -1), axis=0)
+    col_i = (i0 + jnp.arange(w) - col_d).astype(jnp.int32)
+    col_i = jnp.where(col_best > NEG, col_i, -1)
+
+    start = i0 + k0 + jpad
+    prev_c = out_colc[pl.ds(start, w)]
+    prev_i = out_coli[pl.ds(start, w)]
+    take_c = col_best > prev_c
+    out_colc[pl.ds(start, w)] = jnp.where(take_c, col_best, prev_c)
+    out_coli[pl.ds(start, w)] = jnp.where(take_c, col_i, prev_i)
+
 
 @functools.partial(jax.jit, static_argnames=(
     "it", "dt", "k_start", "k_end", "l_i", "l_j", "jpad", "interpret"))
@@ -111,16 +154,20 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
                       it: int, dt: int, k_start: int, k_end: int,
                       l_i: int, l_j: int, jpad: int = 0,
                       interpret: bool = True):
-    """Row-max correlation of A's rows over signed diagonals
-    [k_start, k_start + len(cov0)) ∩ [k_start, k_end) of the AB rectangle.
+    """Two-sided harvest over signed diagonals
+    [k_start, k_start + len(cov0)) ∩ [k_start, k_end) of the AB rectangle,
+    in ONE launch.
 
     Inputs are the padded streams:
       df_i/dg_i/invn_i : (n_row_tiles*IT,) f32 — A-side row streams
       df_j/dg_j/invn_j : (JP,) f32 — B-side, zero-prepadded by `jpad` with
           JP >= n_row_tiles*IT + k_start + n_diag_tiles*DT + jpad
       cov0             : (n_diag_tiles*DT,) f32 — CrossStats.cov0s slice
-    Returns (corr (n_row_tiles*IT,), idx (n_row_tiles*IT,)); idx is the best
-    j in B, -1 where no diagonal covers the row.
+    Returns (corr (n_row_tiles*IT,), idx, col_corr (col_len,), col_idx):
+    `idx` is the best j in B per row of A (-1 where no diagonal covers the
+    row); `col_corr[j + jpad]` is the best correlation ending at column j of
+    B with `col_idx` the winning row i in A (-1 where untouched), and
+    col_len = n_row_tiles*IT + k_start + n_diag_tiles*DT + jpad.
     """
     rows = df_i.shape[0]
     n_rows = rows // it
@@ -128,8 +175,12 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
     n_diags = cov0.shape[0] // dt
     assert cov0.shape[0] % dt == 0
     jp = df_j.shape[0]
-    assert jp >= n_rows * it + k_start + n_diags * dt + jpad, (
-        jp, n_rows, it, k_start, n_diags, dt, jpad)
+    # the accumulators must cover every tile's store window AND the full
+    # column space [0, l_j) + jpad — a short negative-only span (e.g. the
+    # self-join-with-exclusion case) can have tile windows ending before
+    # column l_j - 1
+    col_len = max(n_rows * it + k_start + n_diags * dt + jpad, l_j + jpad)
+    assert jp >= col_len, (jp, n_rows, it, k_start, n_diags, dt, jpad, l_j)
     assert k_start + jpad >= 0, (k_start, jpad)
 
     df_row = df_i.reshape(n_rows, it)
@@ -140,28 +191,36 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
     row_spec = pl.BlockSpec((1, it), lambda i, d: (i, 0))
     full_spec = pl.BlockSpec((jp,), lambda i, d: (0,))
     cov0_spec = pl.BlockSpec((dt,), lambda i, d: (d,))
-    out_specs = [pl.BlockSpec((1, it), lambda i, d: (i, 0))] * 2
+    col_spec = pl.BlockSpec((col_len,), lambda i, d: (0,))
+    out_specs = [pl.BlockSpec((1, it), lambda i, d: (i, 0))] * 2 + \
+        [col_spec, col_spec]
 
     kernel = functools.partial(_kernel, it=it, dt=dt, k_start=k_start,
-                               k_end=k_end, l_i=l_i, l_j=l_j, jpad=jpad)
-    corr, idx = pl.pallas_call(
+                               k_end=k_end, l_i=l_i, l_j=l_j, jpad=jpad,
+                               col_len=col_len)
+    corr, idx, colc, coli = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[row_spec, row_spec, row_spec,
                   full_spec, full_spec, full_spec, cov0_spec],
         out_specs=out_specs,
         out_shape=[jax.ShapeDtypeStruct((n_rows, it), jnp.float32),
-                   jax.ShapeDtypeStruct((n_rows, it), jnp.int32)],
+                   jax.ShapeDtypeStruct((n_rows, it), jnp.int32),
+                   jax.ShapeDtypeStruct((col_len,), jnp.float32),
+                   jax.ShapeDtypeStruct((col_len,), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((n_diags, dt), jnp.float32)],
         interpret=interpret,
     )(df_row, dg_row, invn_row, df_j, dg_j, invn_j, cov0)
-    return corr.reshape(-1), idx.reshape(-1)
+    return corr.reshape(-1), idx.reshape(-1), colc, coli
 
 
 def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,
                    interpret: bool = True):
-    """Self-join entry: row-max over diagonals k in [excl, l) — the special
-    case of `rowmax_profile_ab` where both stream sets alias one series.
+    """Self-join entry: two-sided harvest over diagonals k in [excl, l) — the
+    special case of `rowmax_profile_ab` where both stream sets alias one
+    series. The column side (col_corr[:l], col_idx[:l]) is the lower
+    triangle; merged with the row side it is the COMPLETE profile from one
+    launch.
 
     df/dg/invn : (LP,) f32, LP >= n_row_tiles*IT + excl + n_diag_tiles*DT
     cov0       : (n_diag_tiles*DT,) f32 — cov(0, excl+d), padded

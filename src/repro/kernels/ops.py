@@ -4,9 +4,14 @@ Pipeline (mirrors the paper's Fig. 1 dataflow):
   1. host-side f64 stream precompute (zstats.compute_stats_host) — data
      ingestion; TPUs have no f64 and NATSA likewise precomputes streams once;
   2. pad streams so every in-kernel dynamic load is in-bounds;
-  3. forward pallas_call  -> row-max profile (upper triangle);
-  4. reversed pallas_call -> column half via the reversal identity;
-  5. merge in correlation space, convert to z-normalized distance.
+  3. ONE pallas_call -> BOTH profile sides: the row-max half plus the
+     column-max half harvested from the same tiles (see natsa_mp._kernel's
+     in-tile diagonal re-gather);
+  4. merge the two sides in correlation space, convert to z-normalized
+     distance.
+
+The old pipeline ran a second reversed-series launch for the column half —
+twice the streamed bytes, twice the stats precompute, same answer.
 
 `interpret=True` (default) runs the kernel body on CPU for validation; on a
 real TPU pass interpret=False.
@@ -45,36 +50,39 @@ def _pad_streams(stats: ZStats, it: int, dt: int, excl: int):
 
 def rowmax_from_stats(stats: ZStats, *, excl: int, it: int = 256, dt: int = 8,
                       interpret: bool = True):
-    """Row-max correlation profile (corr (l,), idx (l,)) via the kernel."""
+    """Two-sided self-join harvest via ONE kernel launch.
+
+    Returns (corr (l,), idx, col_corr (l,), col_idx): the row-max half
+    (upper triangle, j > i) and the column-max half (lower triangle, i < j)
+    of the same swept cells. Their merge is the complete profile.
+    """
     df, dg, invn, cov0p, n_rows, n_diags, l = _pad_streams(stats, it, dt, excl)
-    corr, idx = natsa_mp.rowmax_profile(
+    corr, idx, colc, coli = natsa_mp.rowmax_profile(
         df, dg, invn, cov0p, it=it, dt=dt, excl=excl, l=l, interpret=interpret)
-    return corr[:l], idx[:l]
+    return corr[:l], idx[:l], colc[:l], coli[:l]
+
+
+def _merge_corr(corr_a, idx_a, corr_b, idx_b):
+    take = corr_b > corr_a
+    return (jnp.where(take, corr_b, corr_a),
+            jnp.where(take, idx_b, idx_a).astype(jnp.int32))
 
 
 def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
                          it: int = 256, dt: int = 8, interpret: bool = True):
     """Full matrix profile via the Pallas kernel. -> (distance (l,), idx (l,)).
 
-    Matches core.matrix_profile / the brute-force oracle (tests enforce it).
+    One launch, one pass over the streams: no reversed-series stats, no
+    second launch. Matches core.matrix_profile / the brute-force oracle
+    (tests enforce it).
     """
     m = int(window)
     excl = max(1, -(-m // 4)) if exclusion is None else int(exclusion)
-    ts_np = np.asarray(ts)
-    stats = compute_stats_host(ts_np, m)
-    stats_rev = compute_stats_host(ts_np[::-1], m)
-    l = stats.n_subsequences
+    stats = compute_stats_host(np.asarray(ts), m)
 
-    corr_f, idx_f = rowmax_from_stats(stats, excl=excl, it=it, dt=dt,
-                                      interpret=interpret)
-    corr_r, idx_r = rowmax_from_stats(stats_rev, excl=excl, it=it, dt=dt,
-                                      interpret=interpret)
-    corr_r = corr_r[::-1]
-    idx_r = jnp.where(idx_r[::-1] >= 0, l - 1 - idx_r[::-1], -1)
-
-    take = corr_r > corr_f
-    corr = jnp.where(take, corr_r, corr_f)
-    idx = jnp.where(take, idx_r, idx_f).astype(jnp.int32)
+    corr_r, idx_r, corr_c, idx_c = rowmax_from_stats(
+        stats, excl=excl, it=it, dt=dt, interpret=interpret)
+    corr, idx = _merge_corr(corr_r, idx_r, corr_c, idx_c)
     dist = jnp.where(corr <= NEG + 1e-6, jnp.inf,
                      corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
     return dist, idx
@@ -99,7 +107,9 @@ def _pad_streams_ab(cross: CrossStats, it: int, dt: int, s0: int, s1: int):
 
     # padded_j[p] = stream_b[p - jpad]; the zero prepad makes df/dg gathers
     # before a negative diagonal's start contribute nothing to the cumsum.
-    jlen = rows_len + s0 + n_diags * dt + jpad
+    # The kernel's column accumulators span max(jlen, jpad + lb) (see
+    # rowmax_profile_ab), so the j streams must reach at least that far.
+    jlen = max(rows_len + s0 + n_diags * dt + jpad, jpad + lb)
     back = max(jlen - jpad - lb, 0)
 
     def pj(x):
@@ -114,11 +124,12 @@ def _pad_streams_ab(cross: CrossStats, it: int, dt: int, s0: int, s1: int):
 
 def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
                          it: int = 256, dt: int = 8, interpret: bool = True):
-    """Max-corr profile of A vs B over the rectangle via the kernel.
+    """Two-sided AB harvest via the kernel.
 
     With exclusion == 0 the whole signed space [-(l_a-1), l_b) is ONE kernel
     launch; an exclusion band splits it into a negative and a positive span.
-    Returns (corr (l_a,), idx (l_a,)).
+    Returns (corr_a (l_a,), idx_a, corr_b (l_b,), idx_b) — A's profile over
+    B and B's profile over A, harvested from the same sweep.
     """
     la, lb = cross.l_a, cross.l_b
     excl = int(exclusion)
@@ -132,36 +143,45 @@ def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
             spans.append((excl, lb))
     corr = jnp.full((la,), natsa_mp.NEG, jnp.float32)
     idx = jnp.full((la,), -1, jnp.int32)
+    corr_b = jnp.full((lb,), natsa_mp.NEG, jnp.float32)
+    idx_b = jnp.full((lb,), -1, jnp.int32)
     for s0, s1 in spans:
         (df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0p,
          _, _, jpad) = _pad_streams_ab(cross, it, dt, s0, s1)
-        c, ix = natsa_mp.rowmax_profile_ab(
+        c, ix, cc, ci = natsa_mp.rowmax_profile_ab(
             df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0p,
             it=it, dt=dt, k_start=s0, k_end=s1, l_i=la, l_j=lb, jpad=jpad,
             interpret=interpret)
-        c, ix = c[:la], ix[:la]
-        take = c > corr
-        corr = jnp.where(take, c, corr)
-        idx = jnp.where(take, ix, idx)
-    return corr, idx
+        corr, idx = _merge_corr(corr, idx, c[:la], ix[:la])
+        corr_b, idx_b = _merge_corr(corr_b, idx_b,
+                                    cc[jpad:jpad + lb], ci[jpad:jpad + lb])
+    return corr, idx, corr_b, idx_b
 
 
 def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
-                  it: int = 256, dt: int = 8, interpret: bool = True):
+                  it: int = 256, dt: int = 8, interpret: bool = True,
+                  return_b: bool = False):
     """AB join via the Pallas kernel -> (distance (l_a,), idx (l_a,)).
 
-    Matches core.matrix_profile.ab_join / the brute-force oracle (tests
-    enforce it). No exclusion zone by default — pass one only to recover the
-    self-join as the A == B special case.
+    With `return_b=True` additionally returns B's profile against A —
+    (dist_a, idx_a, dist_b (l_b,), idx_b) — the column harvest of the same
+    launch, not a second join. Matches core.matrix_profile.ab_join / the
+    brute-force oracle (tests enforce it). No exclusion zone by default —
+    pass one only to recover the self-join as the A == B special case.
     """
     m = int(window)
     excl = 0 if exclusion is None else int(exclusion)
     cross = compute_cross_stats_host(np.asarray(ts_a), np.asarray(ts_b), m)
-    corr, idx = ab_rowmax_from_stats(cross, exclusion=excl, it=it, dt=dt,
-                                     interpret=interpret)
-    dist = jnp.where(corr <= NEG + 1e-6, jnp.inf,
-                     corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
-    return dist, idx
+    corr, idx, corr_b, idx_b = ab_rowmax_from_stats(
+        cross, exclusion=excl, it=it, dt=dt, interpret=interpret)
+
+    def dist(c):
+        return jnp.where(c <= NEG + 1e-6, jnp.inf,
+                         corr_to_dist(jnp.clip(c, -1.0, 1.0), m))
+
+    if return_b:
+        return dist(corr), idx, dist(corr_b), idx_b
+    return dist(corr), idx
 
 
 VMEM_BYTES = 128 * 2**20 // 8   # ~16 MiB/core, keep ~50% headroom
@@ -173,21 +193,26 @@ def kernel_vmem_bytes(l: int, it: int, dt: int) -> int:
     full = 3 * lp * 4                      # df/dg/invn
     rows = 3 * it * 4                      # row blocks
     outs = 2 * it * (4 + 4)                # corr+idx blocks (rw)
+    cols = lp * (4 + 4)                    # column accumulators (rw)
     tile = 4 * dt * it * 4                 # dfj/dgj/invnj/delta working tile
     carry = (-(-(l) // dt)) * dt * 4       # cov scratch
-    return full + rows + outs + tile + carry
+    return full + rows + outs + cols + tile + carry
 
 
 def hbm_bytes_per_cell(l: int, excl: int, it: int = 256, dt: int = 8) -> float:
     """Roofline model of HBM traffic per distance-matrix cell.
 
-    Two regimes (§Roofline-NATSA):
+    ONE pass now computes both profile sides (the reversed second pass is
+    gone), so the per-cell traffic of the streams is half the old scheme's
+    while each cell yields two profile updates. Two regimes
+    (§Roofline-NATSA):
       * VMEM-resident (l small enough): every stream element crosses
-        HBM->VMEM ONCE per pass — bytes/cell ~ O(1/l) -> effectively free.
+        HBM->VMEM ONCE — bytes/cell ~ O(1/l) -> effectively free.
         This is the TPU realization of NATSA's near-data principle.
       * streamed (l beyond VMEM): the engine row-blocks the space; the
-        j-side strips are re-fetched once per (row-tile, diag-tile), so
-        bytes/cell ~ 12*(it+dt)/(it*dt) — driven down by larger tiles.
+        j-side strips and the column-accumulator window are re-fetched once
+        per (row-tile, diag-tile), so bytes/cell ~ c*(it+dt)/(it*dt) —
+        driven down by larger tiles.
     Used by benchmarks and EXPERIMENTS.md §Roofline-NATSA.
     """
     n_rows = -(-l // it)
@@ -195,25 +220,30 @@ def hbm_bytes_per_cell(l: int, excl: int, it: int = 256, dt: int = 8) -> float:
     cells = float(sum(l - k for k in range(excl, l)))
     f32 = 4
     if kernel_vmem_bytes(l, it, dt) <= VMEM_BYTES:
-        total = 2 * (3 * (l + it + dt) * f32            # streams, once
-                     + n_diags * dt * f32               # seeds
-                     + n_rows * it * (f32 + 4) * 2)     # outputs rw
-        return total / max(cells * 2, 1.0)
+        total = (3 * (l + it + dt) * f32                # streams, once
+                 + n_diags * dt * f32                   # seeds
+                 + n_rows * it * (f32 + 4) * 2          # row outputs rw
+                 + (l + it + dt) * (f32 + 4) * 2)       # col accumulators rw
+        return total / max(cells, 1.0)
     i_side = n_rows * it * 3 * f32                      # once per row tile
     j_side = n_rows * n_diags * (it + dt) * 3 * f32     # per (row, diag) tile
-    outs = n_rows * n_diags * it * (f32 + 4) * 2        # rw of corr+idx
+    outs = n_rows * n_diags * it * (f32 + 4) * 2        # rw of row corr+idx
+    cols = n_rows * n_diags * (it + dt) * (f32 + 4) * 2  # rw of col window
     seeds = n_diags * dt * f32
-    total = 2 * (i_side + j_side + outs + seeds)        # fwd + reversed
-    return total / max(cells * 2, 1.0)
+    total = i_side + j_side + outs + cols + seeds       # single fused pass
+    return total / max(cells, 1.0)
 
 
-FLOPS_PER_CELL = 7.0   # 2 mul + 1 add (delta) + cumsum add + corr mul2 + max
+# per evaluated cell: 2 mul + 1 add (delta) + cumsum add + corr mul2 + the
+# row max AND the column max/select it now feeds (two-sided harvest)
+FLOPS_PER_CELL = 9.0
 
 
 def kernel_roofline(l: int, excl: int, it: int, dt: int) -> dict:
     """Compute- and memory-term seconds for the full profile at (l, it, dt),
-    single chip (197 TFLOP/s, 819 GB/s) — the paper-technique §Perf cell."""
-    cells = 2.0 * sum(l - k for k in range(excl, l))    # fwd + reversed
+    single chip (197 TFLOP/s, 819 GB/s) — the paper-technique §Perf cell.
+    Each cell is visited ONCE and contributes both profile sides."""
+    cells = float(sum(l - k for k in range(excl, l)))
     bpc = hbm_bytes_per_cell(l, excl, it, dt)
     return {
         "cells": cells,

@@ -1,9 +1,10 @@
 """Pure-jnp oracle for the NATSA Pallas kernel.
 
-Computes exactly what `natsa_mp.rowmax_profile` computes — row-wise max
-correlation (+ argmax index) over diagonals [excl, l) from the same padded
-streams — with no recurrence: covariance realized via an explicit cumsum per
-diagonal in one shot. Used by tests/test_kernel_natsa.py for allclose sweeps.
+Computes exactly what `natsa_mp.rowmax_profile` computes — BOTH profile
+sides over diagonals [excl, l) from the same padded streams — with no
+recurrence: covariance realized via an explicit cumsum per diagonal in one
+shot, the column side via the same anti-offset harvest the band engine uses.
+Used by tests/test_kernel_natsa.py for allclose sweeps.
 """
 
 from __future__ import annotations
@@ -14,7 +15,10 @@ NEG = -2.0
 
 
 def rowmax_profile_ref(df, dg, invn, cov0, *, excl: int, l: int):
-    """(corr (l,), idx (l,)) over diagonals k in [excl, excl + len(cov0))."""
+    """(corr (l,), idx, col_corr (l,), col_idx) over diagonals
+    k in [excl, excl + len(cov0))."""
+    from repro.core.matrix_profile import _col_window
+
     n_diags = cov0.shape[0]
     ks = excl + jnp.arange(n_diags)                  # (D,)
     i = jnp.arange(l)
@@ -32,13 +36,19 @@ def rowmax_profile_ref(df, dg, invn, cov0, *, excl: int, l: int):
     corr_best = jnp.take_along_axis(corr, best[None, :], axis=0)[0]
     idx = (i + excl + best).astype(jnp.int32)
     idx = jnp.where(corr_best > NEG, idx, -1)
-    return corr_best, idx
+    # the whole span is one "band": window entry t belongs to column excl + t
+    win, win_i = _col_window(corr, NEG)
+    k = l - excl
+    col_corr = jnp.full((l,), NEG, jnp.float32).at[excl:].set(win[:k])
+    col_idx = jnp.full((l,), -1, jnp.int32).at[excl:].set(win_i[:k])
+    return corr_best, idx, col_corr, col_idx
 
 
 def rowmax_profile_ab_ref(cross, k_lo: int, k_hi: int):
-    """(corr (l_a,), idx (l_a,)) over signed AB diagonals [k_lo, k_hi) —
-    one un-reseeded whole-span evaluation of the band recurrence, exactly
-    what `natsa_mp.rowmax_profile_ab` computes for that span."""
+    """(corr_a (l_a,), idx_a, corr_b (l_b,), idx_b) over signed AB diagonals
+    [k_lo, k_hi) — one un-reseeded whole-span evaluation of the band
+    recurrence, exactly what `natsa_mp.rowmax_profile_ab` computes for that
+    span (both sides)."""
     from repro.core.matrix_profile import band_rowmax_ab
 
     return band_rowmax_ab(cross, jnp.int32(k_lo), int(k_hi - k_lo),

@@ -38,7 +38,8 @@ def test_ab_rounds_monotone_and_exact(mesh):
             assert (d <= prev + 1e-5).all(), "anytime merge must be monotone"
         prev = d
         fracs.append(st.fraction_done)
-    assert sch.finish_reverse() is sch.state.profile   # AB: no reverse pass
+    with pytest.warns(DeprecationWarning):
+        assert sch.finish_reverse() is sch.state.profile   # deprecated no-op
     p, idx = sch.distance_profile()
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)
@@ -84,8 +85,7 @@ def test_ab_scheduler_with_exclusion_matches_self(mesh):
 
     selfj = AnytimeScheduler(a, m, mesh, exclusion=excl,
                              chunks_per_worker=4, band=16)
-    selfj.run()
-    selfj.finish_reverse()
+    selfj.run()          # fused two-sided rounds: exact without any finish
     p_self, _ = selfj.distance_profile()
     np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_self),
                                rtol=1e-3, atol=1e-3)

@@ -36,8 +36,7 @@ for r in range(sch.plan.n_rounds):
     if prev is not None and not (d <= prev + 1e-5).all():
         mono = False
     prev = d
-sch.finish_reverse()
-p, _ = sch.distance_profile()
+p, _ = sch.distance_profile()   # fused rounds: run() alone is exact
 out["monotone"] = mono
 out["err"] = float(np.abs(np.asarray(p) - np.asarray(p_ref)).max())
 
@@ -47,7 +46,7 @@ sch2.step_round(); sch2.step_round(fail_workers={3})
 sch2.checkpoint("/tmp/mp_test_ckpt.npz")
 sch3 = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
 sch3.resume("/tmp/mp_test_ckpt.npz", n_workers=5)   # elastic shrink
-sch3.run(); sch3.finish_reverse()
+sch3.run()
 p3, _ = sch3.distance_profile()
 out["err_resume"] = float(np.abs(np.asarray(p3) - np.asarray(p_ref)).max())
 out["frac_after_fail"] = sch2.state.fraction_done

@@ -1,0 +1,382 @@
+"""One-pass two-sided engine: the fused sweep must reproduce the old
+forward+reversed two-pass scheme and the numpy brute-force oracle on every
+exact path (band engine, AB with return_b, non-normalized, Pallas kernel in
+interpret mode, scheduler checkpoint/resume mid-fused-round), and no
+production path may stream reversed stats anymore.
+"""
+
+import inspect
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.matrix_profile import (
+    ProfileState, ab_join, band_rowmax, batch_ab_join, batch_profile,
+    matrix_profile, matrix_profile_nonnorm, profile_from_stats,
+)
+from repro.core.ref import ab_join_bruteforce, matrix_profile_bruteforce
+from repro.core.zstats import compute_stats_host, dist_to_corr
+from repro.kernels import ops
+
+
+def _series(n, seed=0, kind="walk"):
+    rng = np.random.default_rng(seed)
+    if kind == "walk":
+        return (1e3 + np.cumsum(rng.normal(size=n))).astype(np.float32)
+    if kind == "noise":
+        return rng.normal(size=n).astype(np.float32)
+    t = np.arange(n, dtype=np.float32)
+    return (np.sin(2 * np.pi * t / 40) + 0.05 * rng.normal(size=n)).astype(np.float32)
+
+
+def _two_pass_reference(ts, m, excl, band=64):
+    """The PR-1 scheme, reconstructed from the band primitives: a row-only
+    forward pass plus a row-only pass over the REVERSED series, merged via
+    the reversal identity. The fused engine must agree with this everywhere
+    (up to f32 accumulation-order drift along the two recurrence
+    directions)."""
+    stats = compute_stats_host(ts, m)
+    stats_rev = compute_stats_host(np.asarray(ts)[::-1], m)
+    l = stats.n_subsequences
+    span = l - excl
+    n_bands = -(-span // band)
+
+    def row_only(s):
+        st = ProfileState.empty(l)
+        for b in range(n_bands):
+            rc, ri, _, _ = band_rowmax(s, jnp.int32(excl + b * band), band,
+                                       reseed_every=512)
+            st = st.merge(ProfileState(rc, ri))
+        return st
+
+    fwd = row_only(stats)
+    rev = row_only(stats_rev)
+    rev_corr = rev.corr[::-1]
+    rev_idx = jnp.where(rev.index[::-1] >= 0, l - 1 - rev.index[::-1], -1)
+    return fwd.merge(ProfileState(rev_corr, rev_idx.astype(jnp.int32)))
+
+
+@pytest.mark.parametrize("n,m,kind", [
+    (400, 16, "walk"),
+    (257, 10, "noise"),       # sizes not aligned to band
+    (500, 32, "sine"),
+])
+def test_fused_matches_two_pass(n, m, kind):
+    ts = _series(n, seed=n + m, kind=kind)
+    excl = max(1, m // 4)
+    stats = compute_stats_host(ts, m)
+    fused = profile_from_stats(stats, excl, 64, 512)
+    two_pass = _two_pass_reference(ts, m, excl, band=64)
+    # the fused column harvest accumulates along the FORWARD recurrence while
+    # the reversed pass accumulated backwards, so agreement is to f32
+    # accumulation drift, not bitwise
+    np.testing.assert_allclose(np.asarray(fused.corr),
+                               np.asarray(two_pass.corr), atol=1e-4)
+    # indices may flip only on near-ties
+    mism = np.asarray(fused.index) != np.asarray(two_pass.index)
+    assert np.abs(np.asarray(fused.corr)[mism]
+                  - np.asarray(two_pass.corr)[mism]).max(initial=0) < 1e-4
+
+
+def test_fused_row_half_matches_forward_pass_and_is_deterministic():
+    """The row half of the fused sweep computes the old forward pass (same
+    recurrence, same order — differences are only XLA fusion reassociation
+    between the jitted chunk and the eager reference), and the fused profile
+    itself is bit-deterministic run-to-run."""
+    ts = _series(420, seed=7)
+    m, excl, band = 16, 4, 64
+    stats = compute_stats_host(ts, m)
+    l = stats.n_subsequences
+    fwd = ProfileState.empty(l)
+    for b in range(-(-(l - excl) // band)):
+        rc, ri, _, _ = band_rowmax(stats, jnp.int32(excl + b * band), band,
+                                   reseed_every=512)
+        fwd = fwd.merge(ProfileState(rc, ri))
+    fused = profile_from_stats(stats, excl, band, 512)
+    # wherever the merged winner came from the row side (index > position),
+    # it must match the reference forward pass
+    pos = np.arange(l)
+    from_row = np.asarray(fused.index) > pos
+    assert from_row.any()
+    np.testing.assert_allclose(np.asarray(fused.corr)[from_row],
+                               np.asarray(fwd.corr)[from_row], atol=2e-5)
+    # determinism: identical inputs -> identical bits
+    again = profile_from_stats(stats, excl, band, 512)
+    np.testing.assert_array_equal(np.asarray(fused.corr),
+                                  np.asarray(again.corr))
+    np.testing.assert_array_equal(np.asarray(fused.index),
+                                  np.asarray(again.index))
+
+
+@pytest.mark.parametrize("na,nb,m", [(220, 90, 12), (90, 220, 12),
+                                     (150, 150, 8)])
+def test_ab_return_b_matches_swapped_join(na, nb, m):
+    """B's profile from the same sweep == an independent BA join (z-norm
+    distance is symmetric), and == the brute-force oracle."""
+    a = _series(na, seed=na)
+    b = _series(nb, seed=nb + 1)
+    da, ia, db, ib = ab_join(a, b, m, return_b=True)
+    da_only, ia_only = ab_join(a, b, m)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(da_only))
+    pb_ref, _ = ab_join_bruteforce(jnp.asarray(b), jnp.asarray(a), m)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(pb_ref),
+                               rtol=2e-3, atol=2e-3)
+    la = na - m + 1
+    ib = np.asarray(ib)
+    assert ((ib >= 0) & (ib < la)).all()
+
+
+def test_ab_return_b_nonnorm():
+    a = _series(200, seed=3, kind="noise")
+    b = _series(80, seed=4, kind="noise")
+    m = 10
+    da, ia, db, ib = ab_join(a, b, m, normalize=False, return_b=True)
+    la, lb = 200 - m + 1, 80 - m + 1
+    wa = np.stack([a[k:k + m] for k in range(la)]).astype(np.float64)
+    wb = np.stack([b[k:k + m] for k in range(lb)]).astype(np.float64)
+    d = np.sqrt(((wa[:, None] - wb[None, :]) ** 2).sum(-1))
+    np.testing.assert_allclose(np.asarray(da), d.min(1), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(db), d.min(0), rtol=2e-3, atol=2e-3)
+
+
+def test_batch_ab_return_b():
+    a = np.stack([_series(160, seed=i) for i in range(3)])
+    b = np.stack([_series(70, seed=10 + i) for i in range(3)])
+    m = 12
+    da, ia, db, ib = batch_ab_join(a, b, m, return_b=True)
+    assert db.shape == (3, 70 - m + 1)
+    for r in range(3):
+        _, _, db1, _ = ab_join(a[r], b[r], m, return_b=True)
+        np.testing.assert_allclose(np.asarray(db[r]), np.asarray(db1),
+                                   atol=1e-5)
+
+
+def test_kernel_single_launch_matches_oracle():
+    ts = _series(600, seed=5)
+    m = 20
+    p, i = ops.natsa_matrix_profile(ts, m, it=128, dt=8)
+    p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), m)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kernel_ab_exclusion_row_aligned_length():
+    """Regression: when l is a multiple of `it` there is no row-padding
+    slack, and the negative span's column accumulator used to come up
+    shorter than jpad + l_b — shape-mismatch crash on the self-join-as-AB
+    path."""
+    m = 16
+    n = 256 + m - 1          # l == 256 == it exactly
+    ts = _series(n, seed=77)
+    p_ab, _ = ops.natsa_ab_join(ts, ts, m, exclusion=8, it=256, dt=8)
+    p_self, _ = ops.natsa_matrix_profile(ts, m, exclusion=8, it=256, dt=8)
+    np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_self),
+                               atol=1e-4)
+
+
+def test_kernel_ab_return_b_matches_engine():
+    a = _series(300, seed=8)
+    b = _series(140, seed=9, kind="sine")
+    m = 16
+    dk = ops.natsa_ab_join(a, b, m, it=64, dt=8, return_b=True)
+    de = ab_join(a, b, m, return_b=True)
+    ck = dist_to_corr(jnp.asarray(dk[2]), m)
+    ce = dist_to_corr(jnp.asarray(de[2]), m)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(ce), atol=5e-4)
+
+
+def test_no_reversed_stats_in_production_paths():
+    """Acceptance guard: no exact path builds reversed streams or needs a
+    reversed finish phase."""
+    import importlib
+
+    from repro.core import scheduler
+    mp = importlib.import_module("repro.core.matrix_profile")
+
+    for fn in (mp.matrix_profile, mp.batch_profile, ops.natsa_matrix_profile):
+        src = inspect.getsource(fn)
+        assert "[::-1]" not in src, fn.__name__
+    src = inspect.getsource(scheduler.AnytimeScheduler)
+    assert "stats_rev" not in src
+    # finish_reverse survives only as a deprecated no-op
+    assert "deprecated" in scheduler.AnytimeScheduler.finish_reverse.__doc__.lower()
+
+
+def test_batch_profile_single_sweep_matches_loop():
+    stack = np.stack([_series(260, seed=i, kind=k)
+                      for i, k in enumerate(["walk", "noise", "sine"])])
+    m = 14
+    bp, bi = batch_profile(stack, m)
+    for r in range(stack.shape[0]):
+        p, _ = matrix_profile(stack[r], m)
+        np.testing.assert_allclose(np.asarray(bp[r]), np.asarray(p),
+                                   atol=2e-4)
+
+
+def test_nonnorm_fused_matches_bruteforce():
+    rng = np.random.default_rng(11)
+    ts = rng.normal(size=300).astype(np.float32)
+    m, excl = 16, 4
+    p, idx = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
+    l = 300 - m + 1
+    w = np.stack([ts[i:i + m] for i in range(l)]).astype(np.float64)
+    d = np.sqrt(((w[:, None] - w[None, :]) ** 2).sum(-1))
+    ii = np.arange(l)
+    d[np.abs(ii[:, None] - ii[None, :]) < excl] = np.inf
+    np.testing.assert_allclose(np.asarray(p), d.min(1), rtol=1e-3, atol=1e-3)
+    # indices realize their distances (two-sided harvest keeps them valid)
+    idx = np.asarray(idx)
+    fin = np.isfinite(np.asarray(p))
+    for i in np.nonzero(fin)[0][::17]:
+        assert abs(np.linalg.norm(w[i] - w[idx[i]]) - np.asarray(p)[i]) < 1e-3
+
+
+# -- scheduler: fused rounds, checkpoint mid-round ---------------------------
+
+
+def _mesh1():
+    from repro.launch.mesh import make_worker_mesh
+    return make_worker_mesh(1)
+
+
+def test_scheduler_run_alone_is_exact():
+    """No finish_reverse: run() by itself must hit the oracle."""
+    ts = _series(420, seed=21)
+    m = 16
+    sch = __import__("repro.core.scheduler", fromlist=["AnytimeScheduler"]) \
+        .AnytimeScheduler(ts, m, _mesh1(), chunks_per_worker=4, band=16,
+                          exclusion=4)
+    sch.run()
+    p, _ = sch.distance_profile()
+    p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), m, exclusion=4)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
+                               rtol=2e-3, atol=2e-3)
+    with pytest.warns(DeprecationWarning):
+        out = sch.finish_reverse()
+    assert out is sch.state.profile
+
+
+def test_scheduler_checkpoint_resume_mid_fused_round(tmp_path):
+    from repro.core.scheduler import AnytimeScheduler
+    ts = _series(380, seed=23)
+    m = 16
+    mesh = _mesh1()
+    path = str(tmp_path / "fused.npz")
+
+    full = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16,
+                            exclusion=4)
+    full.run()
+    p_full, i_full = full.distance_profile()
+
+    part = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16,
+                            exclusion=4)
+    part.step_round()
+    part.step_round()
+    assert 0.0 < part.state.fraction_done < 1.0
+    part.checkpoint(path)
+
+    res = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16,
+                           exclusion=4)
+    res.resume(path)
+    res.run()
+    p_res, i_res = res.distance_profile()
+    # the checkpoint carries the fused (row+column) state: completing the
+    # remaining chunks reproduces the full run exactly
+    np.testing.assert_array_equal(np.asarray(p_res), np.asarray(p_full))
+    np.testing.assert_array_equal(np.asarray(i_res), np.asarray(i_full))
+
+
+def test_resume_refuses_prefusion_checkpoint(tmp_path):
+    """A checkpoint whose done-chunks carried only the row half (pre-fusion
+    format, column half owed to finish_reverse) must be rejected, not
+    silently resumed into an incomplete profile."""
+    import json
+
+    from repro.core.scheduler import AnytimeScheduler
+    ts = _series(300, seed=61)
+    sch = AnytimeScheduler(ts, 16, _mesh1(), chunks_per_worker=2, band=16)
+    sch.step_round()
+    path = str(tmp_path / "old.npz")
+    sch.checkpoint(path)
+    z = dict(np.load(path, allow_pickle=False))
+    meta = json.loads(str(z["meta"]))
+    meta.pop("fused")                      # forge a pre-fusion checkpoint
+    z["meta"] = json.dumps(meta)
+    np.savez(path, **z)
+    fresh = AnytimeScheduler(ts, 16, _mesh1(), chunks_per_worker=2, band=16)
+    with pytest.raises(ValueError, match="fused"):
+        fresh.resume(path)
+
+
+def test_ab_scheduler_b_side_checkpointed(tmp_path):
+    from repro.core.scheduler import AnytimeScheduler
+    a = _series(300, seed=31)
+    b = _series(150, seed=32)
+    m = 16
+    mesh = _mesh1()
+    path = str(tmp_path / "ab_fused.npz")
+
+    sch = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
+    sch.step_round()
+    sch.checkpoint(path)
+    res = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
+    res.resume(path)
+    res.run()
+    db, ib = res.distance_profile_b()
+    pb_ref, _ = ab_join_bruteforce(jnp.asarray(b), jnp.asarray(a), m)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(pb_ref),
+                               rtol=2e-3, atol=2e-3)
+    la = 300 - m + 1
+    assert ((np.asarray(ib) >= 0) & (np.asarray(ib) < la)).all()
+    # self-join schedulers refuse the B-side accessor
+    selfj = AnytimeScheduler(a, m, mesh, chunks_per_worker=2, band=16)
+    with pytest.raises(ValueError):
+        selfj.distance_profile_b()
+
+
+# -- streaming batched append -------------------------------------------------
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+def test_streaming_bulk_append_equals_pointwise(normalize):
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(41)
+    ts = np.cumsum(rng.normal(size=230)).astype(np.float64)
+    bulk = StreamingProfile(12, 3, normalize=normalize)
+    bulk.append(ts[:90])
+    bulk.append(ts[90:])
+    loop = StreamingProfile(12, 3, normalize=normalize)
+    for v in ts:
+        loop.append(v)
+    np.testing.assert_allclose(bulk.distances(), loop.distances(),
+                               rtol=1e-10, atol=1e-10)
+    np.testing.assert_array_equal(bulk.indices(), loop.indices())
+
+
+def test_streaming_max_points_refuses_overflow():
+    from repro.core.streaming import StreamingProfile
+    sp = StreamingProfile(8, 2, max_points=50)
+    sp.append(np.zeros(40))
+    with pytest.raises(ValueError):
+        sp.append(np.zeros(20))
+
+
+def test_cross_seed_dots_match_direct_f64():
+    """Folding the AB seed dots into the stats pass must not change them:
+    compare against a from-scratch f64 evaluation."""
+    from repro.core.zstats import compute_cross_stats_host
+    a = _series(120, seed=51)
+    b = _series(90, seed=52)
+    m = 16
+    cross = compute_cross_stats_host(a, b, m)
+    la, lb = 120 - m + 1, 90 - m + 1
+    wa = np.stack([a[i:i + m] for i in range(la)]).astype(np.float64)
+    wb = np.stack([b[j:j + m] for j in range(lb)]).astype(np.float64)
+    wa -= wa.mean(axis=1, keepdims=True)
+    wb -= wb.mean(axis=1, keepdims=True)
+    neg = (wa[1:] @ wb[0])[::-1]
+    pos = wb @ wa[0]
+    ref = np.concatenate([neg, pos])
+    np.testing.assert_allclose(np.asarray(cross.cov0s), ref,
+                               rtol=1e-5, atol=1e-4)

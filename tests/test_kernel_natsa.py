@@ -36,14 +36,20 @@ def test_kernel_matches_oracle(n, m, it, dt, kind):
     ts = _series(n, seed=n + m + it, kind=kind)
     stats = compute_stats_host(ts, m)
     excl = max(1, m // 4)
-    ck, ik = ops.rowmax_from_stats(stats, excl=excl, it=it, dt=dt)
+    ck, ik, cck, cik = ops.rowmax_from_stats(stats, excl=excl, it=it, dt=dt)
     df, dg, invn, cov0p, _, _, l = ops._pad_streams(stats, it, dt, excl)
-    cr, ir = rowmax_profile_ref(df, dg, invn, cov0p, excl=excl, l=l)
+    cr, ir, ccr, cir = rowmax_profile_ref(df, dg, invn, cov0p, excl=excl, l=l)
     np.testing.assert_allclose(np.asarray(ck), np.asarray(cr[:l]),
+                               rtol=1e-4, atol=1e-4)
+    # the fused column half must match the oracle's anti-offset harvest too
+    np.testing.assert_allclose(np.asarray(cck), np.asarray(ccr[:l]),
                                rtol=1e-4, atol=1e-4)
     # argmax ties can differ only where correlations are ~equal
     mism = np.asarray(ik) != np.asarray(ir[:l])
     assert np.abs(np.asarray(ck)[mism] - np.asarray(cr[:l])[mism]).max(initial=0) < 1e-4
+    mismc = np.asarray(cik) != np.asarray(cir[:l])
+    assert np.abs(np.asarray(cck)[mismc]
+                  - np.asarray(ccr[:l])[mismc]).max(initial=0) < 1e-4
 
 
 @pytest.mark.parametrize("n,m", [(400, 16), (700, 24), (350, 12)])
