@@ -7,6 +7,9 @@ Paper mapping (NATSA, ICCD'20 / CS.AR'22 extended abstract):
                         vectorized diagonal engine vs the Pallas kernel
                         (interpret mode) on the same host; derived = speedup
                         over brute force.
+  bench_long_series   — n=16384 self-join: the banked-column-accumulator
+                        regime (kernel col block bounded by col_tile);
+                        engine + kernel must beat the dense oracle (CI gate).
   bench_scaling       — Fig "speedup vs #PUs": anytime scheduler on 1..8
                         SPMD workers (subprocess w/ forced device count);
                         derived = parallel efficiency vs 1 worker.
@@ -152,11 +155,22 @@ def bench_anytime():
 def bench_ab_join():
     """AB join (query corpus vs reference) — engine, kernel, brute force.
 
-    The engine/kernel rows now also harvest the B-side profile from the same
-    sweep (`return_b`), so each timed call produces BOTH joins; the brute
-    force row computes only the A side."""
-    from repro.core.matrix_profile import ab_join
+    The engine/kernel rows harvest the B-side profile from the same sweep
+    (`return_b`), so each timed call produces BOTH joins; the brute force
+    row computes only the A side. Three engine rows separate the two 2-D
+    tiling effects: `ab_engine` is `ab_join`'s dispatch (short side on
+    rows, row-streamed here), `ab_engine_banded` forces the row-CLAMPED
+    band-diagonal engine — the path large joins and the distributed/anytime
+    scheduler use — and `ab_engine_unclamped` the PR-2 full-height band
+    sweep, so `clamp_gain` compares like with like (ROADMAP open item 1)."""
+    from repro.core.matrix_profile import ab_join, ab_join_from_stats
     from repro.core.ref import ab_join_bruteforce
+    from repro.core.zstats import compute_cross_stats_host
+
+    def banded(a, b, m, clamp):
+        cross = compute_cross_stats_host(np.asarray(a), np.asarray(b), m)
+        return ab_join_from_stats(cross, 0, 256, 512, True, clamp)[0].corr
+
     for (na, nb, m) in ((2048, 1024, 64), (4096, 512, 128)):
         ts_a = pipeline.random_walk(na, seed=11)
         ts_b = pipeline.random_walk(nb, seed=12)
@@ -164,13 +178,44 @@ def bench_ab_join():
             jnp.asarray(a), jnp.asarray(b), m)[0], ts_a, ts_b, reps=2)
         t_eng = _timeit(lambda a, b: ab_join(a, b, m, return_b=True)[0],
                         ts_a, ts_b, reps=3)
+        t_band = _timeit(lambda a, b: banded(a, b, m, True),
+                         ts_a, ts_b, reps=2)
+        t_unc = _timeit(lambda a, b: banded(a, b, m, False),
+                        ts_a, ts_b, reps=2)
         t_krn = _timeit(lambda a, b: ops.natsa_ab_join(
             a, b, m, it=256, dt=16, return_b=True)[0], ts_a, ts_b, reps=2)
         emit(f"ab_bruteforce_a{na}_b{nb}", t_bf, "baseline")
         emit(f"ab_engine_a{na}_b{nb}", t_eng,
              f"speedup_vs_bf={t_bf/t_eng:.2f}x(two-sided)")
+        emit(f"ab_engine_banded_a{na}_b{nb}", t_band,
+             f"speedup_vs_bf={t_bf/t_band:.2f}x(row-clamped band engine)")
+        emit(f"ab_engine_unclamped_a{na}_b{nb}", t_unc,
+             f"clamp_gain={t_unc/t_band:.2f}x(pre-clamp sweep)")
         emit(f"ab_kernel_interp_a{na}_b{nb}", t_krn,
              f"speedup_vs_bf={t_bf/t_krn:.2f}x(interpret-mode two-sided)")
+
+
+def bench_long_series():
+    """Long self-join (n=16384): the banked-column-accumulator regime.
+
+    The kernel row runs with an explicit `col_tile` so its per-step column
+    block is O(col_tile), not O(l) — the layout that scales past VMEM on
+    real hardware (ROADMAP open item 2) — and must still beat the dense
+    brute-force oracle even in interpret mode. The engine row streams the
+    same triangle through the band engine."""
+    from repro.core.matrix_profile import matrix_profile
+    from repro.core.ref import matrix_profile_bruteforce
+    n, m = 16384, 128
+    ts = pipeline.random_walk(n, seed=21)
+    t_bf = _timeit(lambda t: matrix_profile_bruteforce(jnp.asarray(t), m)[0],
+                   ts, reps=1)
+    t_eng = _timeit(lambda t: matrix_profile(t, m)[0], ts, reps=2)
+    t_krn = _timeit(lambda t: ops.natsa_matrix_profile(
+        t, m, it=2048, dt=64, col_tile=4096)[0], ts, reps=1)
+    emit(f"mp_bruteforce_n{n}", t_bf, "baseline")
+    emit(f"mp_engine_n{n}", t_eng, f"speedup_vs_bf={t_bf/t_eng:.2f}x")
+    emit(f"mp_kernel_interp_n{n}", t_krn,
+         f"speedup_vs_bf={t_bf/t_krn:.2f}x(banked col_tile=4096)")
 
 
 def bench_batch():
@@ -261,6 +306,7 @@ def bench_lm_decode():
 BENCHES = {
     "baseline": bench_vs_baseline,
     "ab_join": bench_ab_join,
+    "long": bench_long_series,
     "batch": bench_batch,
     "partition": bench_partition,
     "bytes": bench_bytes_proxy,
@@ -285,9 +331,10 @@ def main(argv: list[str] | None = None) -> None:
     os.makedirs(art, exist_ok=True)
     with open(os.path.join(art, "bench_results.csv"), "w") as f:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
-    # machine-readable mirror for CI perf gates and cross-PR comparisons
+    # machine-readable mirror for CI perf gates and cross-PR comparisons —
+    # keyed identically to PR2's table so trajectory tooling diffs in place
     table = {r.split(",")[0]: float(r.split(",")[1]) for r in ROWS}
-    with open(os.path.join(art, "BENCH_PR2.json"), "w") as f:
+    with open(os.path.join(art, "BENCH_PR3.json"), "w") as f:
         json.dump(table, f, indent=1, sort_keys=True)
 
 

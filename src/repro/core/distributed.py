@@ -25,8 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.matrix_profile import (
-    ColState, DEFAULT_RESEED, NEG, ProfileState, band_rowmax, band_rowmax_ab,
-    centered_windows,
+    ColState, DEFAULT_RESEED, NEG, ProfileState, _ab_padded_streams,
+    ab_reseed, ab_row_tile, band_rowmax, band_rowmax_ab, centered_windows,
 )
 from repro.core.zstats import CrossStats, ZStats
 from repro.utils.compat import shard_map_compat
@@ -77,28 +77,35 @@ def worker_chunk_ab(cross: CrossStats, k0: jax.Array, k1: jax.Array,
     Returns (state_a (l_a,), state_b (l_b,)) — A's row harvest and B's
     column harvest of the same swept cells. Diagonals may be negative and
     the chunk end is masked per-diagonal (AB chunk widths are not always
-    band-aligned — the exclusion gap forces odd cuts)."""
+    band-aligned — the exclusion gap forces odd cuts). Band tiles are
+    row-clamped (see `ab_row_tile`): both harvests come back as bounded
+    windows merged at each band's dynamic row offset i0, so a skewed
+    rectangle costs ~l_b cells per diagonal, not l_a."""
     la, lb = cross.l_a, cross.l_b
+    reseed_every = ab_reseed(la, lb, reseed_every)
     wa = centered_windows(cross.a) if reseed_every is not None else None
     wb = centered_windows(cross.b) if reseed_every is not None else None
+    li = ab_row_tile(la, lb, band)
+    padded = _ab_padded_streams(cross, band, li)
     pad_l = la - 1                 # most negative valid diagonal start
 
     def body(carry, b):
-        st_a, col = carry
+        rows, col = carry
         start = k0 + b * band
-        ra, ia, win, wi = band_rowmax_ab(cross, start, band, k_hi=k1,
-                                         reseed_every=reseed_every,
-                                         wa=wa, wb=wb)
+        ra, ia, win, wi, i0 = band_rowmax_ab(cross, start, band, k_hi=k1,
+                                             reseed_every=reseed_every,
+                                             wa=wa, wb=wb, padded=padded)
         live = start < k1
         ra = jnp.where(live, ra, NEG)
         win = jnp.where(live, win, NEG)
-        st_a = st_a.merge(ProfileState(ra, ia))
-        col = col.merge_window(win, wi, start + pad_l)
-        return (st_a, col), None
+        rows = rows.merge_window(ra, ia, i0)
+        col = col.merge_window(win, wi, start + i0 + pad_l)
+        return (rows, col), None
 
-    init = (ProfileState.empty(la), ColState.empty(pad_l, lb, la + band))
-    (state_a, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
-    return state_a, col.to_profile(pad_l, lb)
+    init = (ColState.empty(0, la, li),
+            ColState.empty(pad_l, lb, li + 2 * band))
+    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return rows.to_profile(0, la), col.to_profile(pad_l, lb)
 
 
 def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):

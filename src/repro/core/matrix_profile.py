@@ -156,6 +156,79 @@ class ColState:
                             index=self.index[pad_left:pad_left + l_out])
 
 
+@dataclasses.dataclass
+class BankedColState:
+    """`ColState` with the flat accumulator split into overlapping BANKS —
+    the engine-side mirror of the Pallas kernel's banked column accumulator
+    (kernels/natsa_mp.py), so interpret mode and XLA agree on the scheme.
+
+    Rows of `corr` cover the flat space at stride `stride = width - w_max`
+    (w_max the widest window ever merged): window start s lands wholly in
+    bank s // stride at local offset s mod stride, so a merge is ONE 2-D
+    dynamic-slice read-modify-max of a (1, w)-block — the working set per
+    merge is one bank, whatever the flat length. `to_flat` max-merges the
+    overlaps back (static unrolled slices, scatter-free)."""
+
+    corr: jax.Array    # (n_banks, width)
+    index: jax.Array
+    stride: int
+
+    @classmethod
+    def empty(cls, flat_len: int, width: int, w_max: int,
+              fill: float = NEG) -> "BankedColState":
+        if width <= w_max:
+            raise ValueError(f"bank width {width} must exceed the merge "
+                             f"window bound {w_max}")
+        stride = width - w_max
+        n_banks = max(1, max(flat_len - w_max, 0) // stride + 1)
+        return cls(corr=jnp.full((n_banks, width), fill, jnp.float32),
+                   index=jnp.full((n_banks, width), -1, jnp.int32),
+                   stride=stride)
+
+    def merge_window(self, win: jax.Array, win_i: jax.Array,
+                     start) -> "BankedColState":
+        w = win.shape[0]
+        bank = start // self.stride
+        local = start - bank * self.stride
+        seg_c = jax.lax.dynamic_slice(self.corr, (bank, local), (1, w))[0]
+        seg_i = jax.lax.dynamic_slice(self.index, (bank, local), (1, w))[0]
+        take = win > seg_c
+        return BankedColState(
+            corr=jax.lax.dynamic_update_slice(
+                self.corr, jnp.where(take, win, seg_c)[None], (bank, local)),
+            index=jax.lax.dynamic_update_slice(
+                self.index, jnp.where(take, win_i, seg_i)[None],
+                (bank, local)),
+            stride=self.stride)
+
+    def to_flat(self, flat_len: int,
+                fill: float = NEG) -> tuple[jax.Array, jax.Array]:
+        n_banks, width = self.corr.shape
+        flat_c = jnp.full((flat_len,), fill, jnp.float32)
+        flat_i = jnp.full((flat_len,), -1, jnp.int32)
+        for b in range(n_banks):
+            s = b * self.stride
+            e = min(s + width, flat_len)
+            if e <= s:
+                break
+            bc, bi = self.corr[b, :e - s], self.index[b, :e - s]
+            take = bc > flat_c[s:e]
+            flat_c = flat_c.at[s:e].set(jnp.where(take, bc, flat_c[s:e]))
+            flat_i = flat_i.at[s:e].set(jnp.where(take, bi, flat_i[s:e]))
+        return flat_c, flat_i
+
+    def to_profile(self, pad_left: int, l_out: int,
+                   fill: float = NEG) -> ProfileState:
+        flat_c, flat_i = self.to_flat(pad_left + l_out, fill)
+        return ProfileState(corr=flat_c[pad_left:],
+                            index=flat_i[pad_left:])
+
+
+jax.tree_util.register_dataclass(BankedColState,
+                                 data_fields=["corr", "index"],
+                                 meta_fields=["stride"])
+
+
 def band_rowmax(stats: ZStats, k0, band: int, *,
                 reseed_every: int | None = None,
                 windows_c: jax.Array | None = None
@@ -306,43 +379,131 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
 # obtained for free from the single sweep (`ab_join(..., return_b=True)`).
 # Self-join == the case A is B with the band |k| < excl excluded
 # (property-tested).
+#
+# The sweep is tiled in BOTH dimensions: besides the `band`-wide diagonal
+# axis, each band tile's ROW range is clamped to the rows actually inside
+# the signed rectangle — i in [max(0, -(k0+band-1)), ...) with a STATIC
+# height `ab_row_tile(l_a, l_b, band) = min(l_a, l_b + band - 1)` — so a
+# skewed join (l_b << l_a) streams ~l_b*l_a cells instead of l_a^2. Row and
+# column harvests are both bounded WINDOWS merged into padded running states
+# with one dynamic slice each; the j-side strips are loaded as one dynamic
+# slice plus a static skew (`_unskew`) instead of a 2-D gather.
+
+
+def ab_row_tile(l_a: int, l_b: int, band: int) -> int:
+    """Static height of a row-clamped AB band tile.
+
+    A band [k0, k0+band) only touches rows i in
+    [max(0, -(k0+band-1)), min(l_a, l_b - k0)) — at most
+    min(l_a, l_b + band - 1) of them, whatever k0 is. Shapes must be static
+    under jit/scan, so every band computes this worst-case height at a
+    dynamic offset i0; for l_b << l_a that is the whole row-clamping win
+    (~l_b + band rows instead of l_a)."""
+    return int(min(l_a, l_b + band - 1))
+
+
+def _unskew(w: jax.Array, rows: int, li: int) -> jax.Array:
+    """Diagonal strip loads without a 2-D gather: out[d, t] = w[t + d].
+
+    `w` is one (li + rows,) contiguous window of a stream; row d needs the
+    same window shifted by its (STATIC) diagonal offset d. Broadcast + pad +
+    reshape realizes all `rows` shifts in one reshape — the inverse of
+    `_col_window`'s skew, and the engine analogue of the kernel's per-sublane
+    strip loads."""
+    W = w.shape[0]                 # li + rows
+    p = jnp.broadcast_to(w, (rows, W)).reshape(-1)
+    return jnp.pad(p, (0, rows)).reshape(rows, W + 1)[:, :li]
+
+
+def _ab_padded_streams(cross: CrossStats, band: int, li: int,
+                       clamp_rows: bool = True):
+    """Zero-pad both series' streams so every row slice (offset i0) and every
+    j-side window slice (offset i0 + k0 + pad_left, width li + band) is in
+    bounds for any diagonal a chunk scan can visit, including overshooting
+    all-masked bands. Zero df/dg pads contribute nothing to the cumsum; pad
+    reads are additionally masked to NEG before any harvest.
+
+    Returns (pad_left, streams...). With the row clamp, i0 + k0 is at least
+    1 - band, so a `band`-wide left pad suffices; the unclamped A/B path
+    pins i0 = 0 and its window start k0 reaches -(l_a - 1)."""
+    pad_left = band if clamp_rows else band + cross.l_a - 1
+    pa = lambda x: jnp.pad(x, (0, li))                      # noqa: E731
+    pb = lambda x: jnp.pad(x, (pad_left, li + 2 * band))    # noqa: E731
+    sa, sb = cross.a, cross.b
+    return (pad_left, pa(sa.df), pa(sa.dg), pa(sa.invn),
+            pb(sb.df), pb(sb.dg), pb(sb.invn))
+
+
+def ab_reseed(l_a: int, l_b: int, reseed_every: int | None) -> int | None:
+    """Reseeding exists to bound f32 cumsum drift to `reseed_every` rows from
+    an exact seed. An AB diagonal accumulates at most min(l_a, l_b) deltas
+    (outside the rectangle they are masked to zero), so when the longest
+    diagonal is shorter than one reseed segment the seeds already give the
+    same bound for free — skip the reseed machinery entirely."""
+    if reseed_every is not None and min(l_a, l_b) <= int(reseed_every):
+        return None
+    return reseed_every
 
 
 def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
                    k_hi=None, reseed_every: int | None = None,
                    wa: jax.Array | None = None,
-                   wb: jax.Array | None = None, harvest_cols: bool = True
-                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+                   wb: jax.Array | None = None, harvest_cols: bool = True,
+                   clamp_rows: bool = True, padded=None
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                              jax.Array]:
     """Two-sided harvest of A vs B over signed diagonals [k0, k0+band).
 
-    Returns (corr_a (l_a,), idx_a, win (l_a+band,), win_i) — idx_a is the
-    best j in B for each row of A; (win, win_i) is B's column-profile window
-    (entry t = best value ending at B's column j = k0 + t, win_i the winning
-    row i in A), read off the same (D, l_a) correlation tile. `k0` may be
-    traced and NEGATIVE; `band` is static. `k_hi` additionally masks
-    diagonals >= k_hi (chunk ends that are not band-aligned). Unlike the
-    self-join, A's exact profile needs no column half (the signed span
-    already covers every cell of each row), so `harvest_cols=False` skips
-    the window when B's profile is not wanted (win, win_i come back None).
+    Returns (row_win (li,), row_idx, win (li+band,), win_i, i0): the row
+    harvest is a WINDOW over rows [i0, i0+li) of A (entry t = best corr of
+    row i0+t, row_idx its j in B), with li = `ab_row_tile(l_a, l_b, band)`
+    and i0 = max(0, -(k0+band-1)) — the row clamp that keeps a skewed join
+    from computing l_a cells per diagonal. (win, win_i) is B's column-profile
+    window (entry t = best value ending at B's column j = i0 + k0 + t, win_i
+    the winning row i in A), read off the same (D, li) correlation tile.
+    `k0` may be traced and NEGATIVE; `band` is static. `k_hi` additionally
+    masks diagonals >= k_hi (chunk ends that are not band-aligned).
+    `harvest_cols=False` skips the column window when B's profile is not
+    wanted (win, win_i come back None); `clamp_rows=False` forces i0 = 0 and
+    li = l_a — the pre-clamp full-height sweep, kept for A/B tests and
+    benches. Stream loads are dynamic slices + static skews (`_unskew`), not
+    2-D gathers.
     """
     sa, sb = cross.a, cross.b
     la, lb = sa.n_subsequences, sb.n_subsequences
+    li = ab_row_tile(la, lb, band) if clamp_rows else la
+    i0 = (jnp.maximum(0, -(k0 + band - 1)).astype(jnp.int32)
+          if clamp_rows else jnp.int32(0))
+    if padded is None:
+        padded = _ab_padded_streams(cross, band, li, clamp_rows)
+    pad_left, dfa_p, dga_p, invna_p, dfb_p, dgb_p, invnb_p = padded
+
     ks = k0 + jnp.arange(band)                     # (D,) signed
-    i = jnp.arange(la)                             # (l_a,)
-    j = i[None, :] + ks[:, None]                   # (D, l_a)
-    jc = jnp.clip(j, 0, lb - 1)                    # clamp for gathers
-    valid = (j >= 0) & (j < lb)
+    i = i0 + jnp.arange(li)                        # (li,) absolute rows of A
+    j = i[None, :] + ks[:, None]                   # (D, li)
+    valid = (j >= 0) & (j < lb) & (i < la)[None, :]
     if k_hi is not None:
         valid = valid & (ks < k_hi)[:, None]
 
-    dfj = jnp.take(sb.df, jc)
-    dgj = jnp.take(sb.dg, jc)
-    invnj = jnp.take(sb.invn, jc)
+    def row(x):                                    # (li,) contiguous A slice
+        return jax.lax.dynamic_slice(x, (i0,), (li,))
+
+    dfi, dgi, invni = row(dfa_p), row(dga_p), row(invna_p)
+
+    off = i0 + k0 + pad_left
+    W = li + band
+
+    def strips(x):                                 # (D, li) skewed B windows
+        return _unskew(jax.lax.dynamic_slice(x, (off,), (W,)), band, li)
+
+    dfj, dgj, invnj = strips(dfb_p), strips(dgb_p), strips(invnb_p)
     cov0b = jnp.take(cross.cov0s, jnp.clip(ks + la - 1, 0, la + lb - 2))
 
-    delta = sa.df[None, :] * dgj + dfj * sa.dg[None, :]
+    delta = dfi[None, :] * dgj + dfj * dgi[None, :]
     # predecessor cell (i-1, j-1) must exist; before a negative diagonal's
-    # start (j <= 0) the masked cumsum simply carries the seed forward.
+    # start (j <= 0) the masked cumsum simply carries the seed forward. The
+    # clamp start i0 is <= every band diagonal's start row, so no live cell
+    # precedes the tile.
     delta = jnp.where(valid & (i[None, :] >= 1) & (j >= 1), delta, 0.0)
     cov = cov0b[:, None] + jnp.cumsum(delta, axis=1)
 
@@ -352,21 +513,24 @@ def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
         if wb is None:
             wb = centered_windows(sb)
         R = int(reseed_every)
-        n_seg = -(-la // R)
-        rows = jnp.minimum(jnp.arange(n_seg) * R, la - 1)         # (S,)
-        jrow = rows[None, :] + ks[:, None]                        # (D, S)
+        n_seg = -(-li // R)
+        rows_rel = jnp.minimum(jnp.arange(n_seg) * R, li - 1)     # (S,) local
+        rows_abs = i0 + rows_rel
+        rows_c = jnp.minimum(rows_abs, la - 1)
+        jrow = rows_abs[None, :] + ks[:, None]                    # (D, S)
         jr = jnp.clip(jrow, 0, lb - 1)
-        w_r = wa[rows]                                            # (S, m)
+        w_r = wa[rows_c]                                          # (S, m)
         w_j = wb[jr]                                              # (D, S, m)
         seeds = jnp.einsum("sm,dsm->ds", w_r, w_j)                # (D, S)
-        drift = seeds - jnp.take(cov, rows, axis=1)               # (D, S)
-        # segments whose start row is outside the diagonal keep the raw
+        drift = seeds - jnp.take(cov, rows_rel, axis=1)           # (D, S)
+        # segments whose start cell is outside the rectangle keep the raw
         # cumsum (bounded by R rows of drift, same as the baseline bound)
-        drift = jnp.where((jrow >= 0) & (jrow < lb), drift, 0.0)
-        seg = jnp.minimum(i // R, n_seg - 1)                      # (l_a,)
+        drift = jnp.where((jrow >= 0) & (jrow < lb)
+                          & (rows_abs < la)[None, :], drift, 0.0)
+        seg = jnp.minimum(jnp.arange(li) // R, n_seg - 1)         # (li,)
         cov = cov + jnp.take(drift, seg, axis=1)
 
-    corr = cov * sa.invn[None, :] * invnj
+    corr = cov * invni[None, :] * invnj
     corr = jnp.where(valid, corr, NEG)
 
     corr_best, d_win = _row_harvest(corr)
@@ -375,51 +539,71 @@ def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
     win = win_i = None
     if harvest_cols:
         win, win_i = _col_window(corr, NEG)
-    return corr_best.astype(jnp.float32), idx_best, win, win_i
+        win_i = jnp.where(win > NEG, win_i + i0, -1)  # local row -> absolute
+    return corr_best.astype(jnp.float32), idx_best, win, win_i, i0
 
 
 def chunk_rowmax_ab(cross: CrossStats, k0, width_static: int, band: int,
                     reseed_every: int | None = DEFAULT_RESEED,
-                    k_hi=None, two_sided: bool = True
+                    k_hi=None, two_sided: bool = True,
+                    clamp_rows: bool = True, col_tile: int | None = None
                     ) -> tuple[ProfileState, ProfileState | None]:
     """Two-sided states over signed diagonals [k0, k0+width), band-scanned.
 
     Returns (state_a (l_a,), state_b (l_b,)) — A's row harvest and B's
-    column harvest of the same swept cells. The column side accumulates in a
-    padded `ColState` whose left pad absorbs negative diagonals' window
-    starts; `two_sided=False` skips it entirely (state_b is None) — A's
-    profile is already exact from the row harvest alone.
+    column harvest of the same swept cells. BOTH sides accumulate as bounded
+    windows in padded `ColState`s (per-band work O(li + band), li the
+    clamped row tile): the row side merges each band's (li,) window at its
+    dynamic offset i0, the column side its (li+band,) window at
+    i0 + k0 + pad_l. `two_sided=False` skips the column state entirely
+    (state_b is None) — A's profile is already exact from the row harvest
+    alone. `col_tile` accumulates the column side in a `BankedColState`
+    of that bank width instead of one flat vector — the engine twin of the
+    kernel's banked accumulator (must exceed li + band).
     """
     la, lb = cross.l_a, cross.l_b
     n_bands = -(-width_static // band)
+    reseed_every = ab_reseed(la, lb, reseed_every)
     wa = centered_windows(cross.a) if reseed_every is not None else None
     wb = centered_windows(cross.b) if reseed_every is not None else None
+    li = ab_row_tile(la, lb, band) if clamp_rows else la
+    padded = _ab_padded_streams(cross, band, li, clamp_rows)
     pad_l = la - 1                 # most negative valid diagonal start
-    pad_r = la + band              # last window + overshooting bands
+    pad_r = li + 2 * band          # last window + overshooting bands
 
     def body(carry, b):
-        st_a, col = carry
+        rows, col = carry
         start = k0 + b * band
-        ra, ia, win, wi = band_rowmax_ab(cross, start, band, k_hi=k_hi,
-                                         reseed_every=reseed_every,
-                                         wa=wa, wb=wb,
-                                         harvest_cols=two_sided)
-        st_a = st_a.merge(ProfileState(ra, ia))
+        ra, ia, win, wi, i0 = band_rowmax_ab(cross, start, band, k_hi=k_hi,
+                                             reseed_every=reseed_every,
+                                             wa=wa, wb=wb,
+                                             harvest_cols=two_sided,
+                                             clamp_rows=clamp_rows,
+                                             padded=padded)
+        rows = rows.merge_window(ra, ia, i0)
         if two_sided:
-            col = col.merge_window(win, wi, start + pad_l)
-        return (st_a, col), None
+            col = col.merge_window(win, wi, start + i0 + pad_l)
+        return (rows, col), None
 
-    init = (ProfileState.empty(la),
-            ColState.empty(pad_l, lb, pad_r) if two_sided else None)
-    (state_a, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
-    return state_a, col.to_profile(pad_l, lb) if two_sided else None
+    if two_sided:
+        # ColState and BankedColState share merge_window/to_profile, so the
+        # scan body is agnostic to which accumulator layout is in play
+        init_col = (BankedColState.empty(pad_l + lb + li + band, col_tile,
+                                         li + band)
+                    if col_tile is not None
+                    else ColState.empty(pad_l, lb, pad_r))
+    init = (ColState.empty(0, la, li), init_col if two_sided else None)
+    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return (rows.to_profile(0, la),
+            col.to_profile(pad_l, lb) if two_sided else None)
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6))
 def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
                        band: int = DEFAULT_BAND,
                        reseed_every: int | None = DEFAULT_RESEED,
-                       two_sided: bool = True
+                       two_sided: bool = True, clamp_rows: bool = True,
+                       col_tile: int | None = None
                        ) -> tuple[ProfileState, ProfileState | None]:
     """Jitted AB-join core: BOTH profiles of the rectangle from one sweep.
 
@@ -430,7 +614,8 @@ def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
     two-span split visited it twice). A's profile is exact from the row
     harvest alone (the signed span covers every cell of each row), so
     `two_sided=False` skips the column harvest and returns state_b=None —
-    the cheap path when B's profile is not wanted.
+    the cheap path when B's profile is not wanted. `clamp_rows=False`
+    restores the pre-clamp full-height sweep (A/B testing only).
     """
     la, lb = cross.l_a, cross.l_b
     excl = int(exclusion)
@@ -446,34 +631,130 @@ def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
     if excl == 0:
         merge(*chunk_rowmax_ab(cross, jnp.int32(-(la - 1)), la - 1 + lb,
                                band, reseed_every, k_hi=lb,
-                               two_sided=two_sided))
+                               two_sided=two_sided, clamp_rows=clamp_rows,
+                               col_tile=col_tile))
         return state_a, state_b
     neg_width = la - excl          # diagonals [-(l_a-1), -excl]
     pos_width = lb - excl          # diagonals [excl, l_b)
     if neg_width > 0:
         merge(*chunk_rowmax_ab(cross, jnp.int32(-(la - 1)), neg_width, band,
                                reseed_every, k_hi=-excl + 1,
-                               two_sided=two_sided))
+                               two_sided=two_sided, clamp_rows=clamp_rows,
+                               col_tile=col_tile))
     if pos_width > 0:
         merge(*chunk_rowmax_ab(cross, jnp.int32(excl), pos_width, band,
-                               reseed_every, k_hi=lb, two_sided=two_sided))
+                               reseed_every, k_hi=lb, two_sided=two_sided,
+                               clamp_rows=clamp_rows, col_tile=col_tile))
     return state_a, state_b
+
+
+# How many rows the short side of a rectangle may have before the
+# row-streamed AB sweep (sequential lax.scan over rows) stops paying off and
+# `ab_join` falls back to the band-diagonal engine: per-step dispatch
+# overhead is ~microseconds, so a few thousand steps is noise while the
+# vectorized per-row work stays wide.
+AB_ROWSTREAM_MAX_ROWS = 4096
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
+                      reseed_every: int | None = DEFAULT_RESEED
+                      ) -> tuple[ProfileState, ProfileState]:
+    """Row-streamed AB join: ONE lax.scan over A's rows, each step a fully
+    vectorized O(l_b) update — the rectangle's other natural 2-D tiling
+    (rows x full-width strips) and the fastest exact path when one side is
+    short.
+
+    Per row i the carried covariance vector obeys the same O(1)-update
+    recurrence the band engine streams per diagonal —
+    QT(i, j) = QT(i-1, j-1) + df_a[i] dg_b[j] + df_b[j] dg_a[i] — with the
+    j = 0 cell re-seeded exactly from `cov0s` (it starts diagonal k = -i),
+    so every cell is touched once with NO masking, skewing, or windowing at
+    all; that is what lets it beat a dense-matmul oracle on skewed shapes.
+    Both profiles come from the same sweep: the per-row max is A's profile,
+    the running elementwise max over rows is B's. Drift control: rows at
+    multiples of `reseed_every` replace the whole carry with exact centered
+    dots (a small precomputed (S, l_b) matrix); a diagonal accumulates at
+    most min(l_a, l_b) deltas, so `ab_reseed` skips that machinery when the
+    seeds alone already bound drift tighter.
+
+    `ab_join` dispatches here (orienting the SHORT side onto rows) when the
+    row count is at most AB_ROWSTREAM_MAX_ROWS; the band-diagonal engine
+    remains the path for huge near-square rectangles and for every
+    partitioned/anytime/distributed schedule.
+    """
+    sa, sb = cross.a, cross.b
+    la, lb = cross.l_a, cross.l_b
+    excl = int(exclusion)
+    R = ab_reseed(la, lb, reseed_every)
+    dfb, dgb, invnb = sb.df, sb.dg, sb.invn
+    row0 = cross.cov0s[la - 1:]                        # cov(0, j), (l_b,)
+    seeds_neg = cross.cov0s[:la][::-1]                 # cov(i, 0), (l_a,)
+    if R is not None:
+        wa = centered_windows(sa)
+        wb = centered_windows(sb)
+        import numpy as np
+        rows = np.arange(0, la, int(R))                # static row ids
+        exact = jnp.einsum("sm,lm->sl", wa[rows], wb)  # (S, l_b) reseed rows
+    jj = jnp.arange(lb)
+
+    def step(carry, xs):
+        qt, pb, ib = carry
+        dfi, dgi, invni, seed0, i = xs
+        delta = dfi * dgb + dfb * dgi
+        qt = jnp.concatenate([seed0[None], qt[:-1] + delta[1:]])
+        if R is not None:
+            qt = jnp.where(i % R == 0,
+                           jax.lax.dynamic_index_in_dim(exact, i // R, 0,
+                                                        keepdims=False), qt)
+        else:
+            qt = jnp.where(i == 0, row0, qt)
+        corr = qt * invnb * invni
+        if excl > 0:
+            corr = jnp.where(jnp.abs(jj - i) >= excl, corr, NEG)
+        take = corr > pb
+        pb = jnp.where(take, corr, pb)
+        ib = jnp.where(take, i, ib)
+        # plain max + equality-recovered arg, as everywhere in this engine:
+        # variadic argmax is ~1.7x the whole step's cost on XLA CPU
+        mx = jnp.max(corr)
+        am = jnp.max(jnp.where(corr >= mx, jj, -1))
+        return (qt, pb, ib), (mx, am)
+
+    init = (jnp.zeros((lb,), jnp.float32),
+            jnp.full((lb,), NEG, jnp.float32),
+            jnp.full((lb,), -1, jnp.int32))
+    xs = (sa.df, sa.dg, sa.invn, seeds_neg,
+          jnp.arange(la, dtype=jnp.int32))
+    (_, pb, ib), (pa, ja) = jax.lax.scan(step, init, xs)
+    ja = jnp.where(pa > NEG, ja, -1).astype(jnp.int32)
+    return (ProfileState(pa.astype(jnp.float32), ja),
+            ProfileState(pb, ib))
 
 
 def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
             band: int = DEFAULT_BAND,
             reseed_every: int | None = DEFAULT_RESEED,
-            normalize: bool = True, return_b: bool = False):
+            normalize: bool = True, return_b: bool = False,
+            clamp_rows: bool = True):
     """AB join: for every subsequence of A, its nearest neighbour in B.
 
     Returns (distance_profile (l_a,), index (l_a,)); index[i] is the matching
     start position in B. With `return_b=True` additionally returns B's
     profile against A — (dist_a, idx_a, dist_b (l_b,), idx_b) — harvested
-    from the SAME single sweep (the column side of each tile), not a second
-    join. No exclusion zone by default (cross-series matches at equal offsets
-    are legitimate); `exclusion` exists so that
+    from the SAME single sweep, not a second join. No exclusion zone by
+    default (cross-series matches at equal offsets are legitimate);
+    `exclusion` exists so that
     ab_join(ts, ts, m, exclusion=e) == matrix_profile(ts, m, exclusion=e).
     Stream precompute is host-side f64, the O(l_a*l_b) engine device f32.
+
+    Scheduling: the rectangle is swept with its SHORT side on rows — the
+    orientation with the fewest streamed cells — via `ab_join_rowstream`
+    whenever that side fits AB_ROWSTREAM_MAX_ROWS; huge near-square joins
+    take the band-diagonal engine (`ab_join_from_stats`), whose tiles are
+    row-clamped to the rectangle. `clamp_rows=False` forces the pre-clamp
+    full-height band sweep (A/B comparison only — same answer, l_a cells per
+    diagonal).
     """
     import numpy as np
 
@@ -485,10 +766,21 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
         out = ab_join_nonnorm(
             jnp.asarray(np.asarray(ts_a), jnp.float32),
             jnp.asarray(np.asarray(ts_b), jnp.float32), m, excl, band,
-            two_sided=return_b)
+            two_sided=return_b, clamp_rows=clamp_rows)
         return out if return_b else out[:2]
-    cross = compute_cross_stats_host(np.asarray(ts_a), np.asarray(ts_b), m)
-    sa, sb = ab_join_from_stats(cross, excl, band, reseed_every, return_b)
+    a, b = np.asarray(ts_a), np.asarray(ts_b)
+    la_est, lb_est = a.shape[0] - m + 1, b.shape[0] - m + 1
+    if clamp_rows and min(la_est, lb_est) <= AB_ROWSTREAM_MAX_ROWS:
+        if lb_est < la_est:        # stream the short side as rows
+            cross = compute_cross_stats_host(b, a, m)
+            sb, sa = ab_join_rowstream(cross, excl, reseed_every)
+        else:
+            cross = compute_cross_stats_host(a, b, m)
+            sa, sb = ab_join_rowstream(cross, excl, reseed_every)
+    else:
+        cross = compute_cross_stats_host(a, b, m)
+        sa, sb = ab_join_from_stats(cross, excl, band, reseed_every,
+                                    return_b, clamp_rows)
     if return_b:
         return sa.to_distance(m), sa.index, sb.to_distance(m), sb.index
     return sa.to_distance(m), sa.index
@@ -631,30 +923,50 @@ def matrix_profile_nonnorm(ts: jax.Array, window: int,
 
 def band_rowmin_nonnorm_ab(ts_a: jax.Array, ts_b: jax.Array, d20s: jax.Array,
                            window: int, k0, band: int, k_hi=None,
-                           harvest_cols: bool = True):
+                           harvest_cols: bool = True,
+                           clamp_rows: bool = True, padded=None):
     """Non-normalized squared-Euclidean AB harvest over signed diagonals
     [k0, k0+band). `d20s` are the seed distances at each diagonal's start
-    cell (index k + l_a - 1). Returns (neg_d2 (l_a,), idx, win (l_a+band,),
-    win_i) — A's row side and B's column-profile window of the same tile
-    (None, None with `harvest_cols=False`)."""
+    cell (index k + l_a - 1). Returns (neg_d2 (li,), idx, win (li+band,),
+    win_i, i0) — A's row-profile WINDOW over rows [i0, i0+li) and B's
+    column-profile window of the same row-clamped tile (win/win_i None with
+    `harvest_cols=False`); li is `ab_row_tile(l_a, l_b, band)` unless
+    `clamp_rows=False` pins i0 = 0, li = l_a."""
     m = int(window)
     na, nb = ts_a.shape[0], ts_b.shape[0]
     la, lb = na - m + 1, nb - m + 1
+    li = ab_row_tile(la, lb, band) if clamp_rows else la
+    i0 = (jnp.maximum(0, -(k0 + band - 1)).astype(jnp.int32)
+          if clamp_rows else jnp.int32(0))
+    if padded is None:
+        padded = _nonnorm_padded_series(ts_a, ts_b, band, li, clamp_rows)
+    pad_left, tsa_p, tsb_p = padded
+
     ks = k0 + jnp.arange(band)                          # (D,) signed
-    i = jnp.arange(la)
-    j = i[None, :] + ks[:, None]                        # (D, l_a)
-    valid = (j >= 0) & (j < lb)
+    i = i0 + jnp.arange(li)                             # (li,) absolute rows
+    j = i[None, :] + ks[:, None]                        # (D, li)
+    valid = (j >= 0) & (j < lb) & (i < la)[None, :]
     if k_hi is not None:
         valid = valid & (ks < k_hi)[:, None]
 
     d20 = jnp.take(d20s, jnp.clip(ks + la - 1, 0, la + lb - 2))
 
-    ga = lambda x: jnp.take(ts_a, jnp.clip(x, 0, na - 1))   # noqa: E731
-    gb = lambda x: jnp.take(ts_b, jnp.clip(x, 0, nb - 1))   # noqa: E731
-    tim = ga(i[None, :] + m - 1)                        # A[i+m-1]
-    tjm = gb(j + m - 1)                                 # B[j+m-1]
-    tip = ga(i[None, :] - 1)                            # A[i-1]
-    tjp = gb(j - 1)                                     # B[j-1]
+    # A is left-padded by 1 (the i-1 read at i = 0, masked anyway) and B by
+    # pad_left + 1; strips are one contiguous slice + static skew, no gather.
+    def arow(offset):                                   # (li,) A slice
+        return jax.lax.dynamic_slice(tsa_p, (i0 + 1 + offset,), (li,))
+
+    W = li + band
+
+    def bstrips(offset):                                # (D, li) B windows
+        w = jax.lax.dynamic_slice(tsb_p,
+                                  (i0 + k0 + pad_left + 1 + offset,), (W,))
+        return _unskew(w, band, li)
+
+    tim = arow(m - 1)[None, :]                          # A[i+m-1]
+    tip = arow(-1)[None, :]                             # A[i-1]
+    tjm = bstrips(m - 1)                                # B[j+m-1]
+    tjp = bstrips(-1)                                   # B[j-1]
     delta = (tim - tjm) ** 2 - (tip - tjp) ** 2
     delta = jnp.where(valid & (i[None, :] >= 1) & (j >= 1), delta, 0.0)
     d2 = d20[:, None] + jnp.cumsum(delta, axis=1)
@@ -666,21 +978,38 @@ def band_rowmin_nonnorm_ab(ts_a: jax.Array, ts_b: jax.Array, d20s: jax.Array,
     win = win_i = None
     if harvest_cols:
         win, win_i = _col_window(neg, -jnp.inf)
-    return neg_best.astype(jnp.float32), idx, win, win_i
+        win_i = jnp.where(jnp.isfinite(win), win_i + i0, -1)
+    return neg_best.astype(jnp.float32), idx, win, win_i, i0
 
 
-@partial(jax.jit, static_argnums=(2, 3, 4), static_argnames=("two_sided",))
+def _nonnorm_padded_series(ts_a, ts_b, band: int, li: int,
+                           clamp_rows: bool = True):
+    """Pad raw series so the nonnorm band's slices (rows at i0 - 1, strips at
+    i0 + k0 - 1 .. + m - 1 + li + band) stay in bounds; pad reads are masked
+    before any harvest. Returns (pad_left, A_padded, B_padded); the
+    unclamped path needs the extra l_a - 1 of left slack (see
+    `_ab_padded_streams`)."""
+    la = ts_a.shape[0]            # >= l_a, safe left-slack bound
+    pad_left = band if clamp_rows else band + la - 1
+    return (pad_left, jnp.pad(ts_a, (1, li + 1)),
+            jnp.pad(ts_b, (pad_left + 1, li + 2 * band + 1)))
+
+
+@partial(jax.jit, static_argnums=(2, 3, 4),
+         static_argnames=("two_sided", "clamp_rows"))
 def ab_join_nonnorm(ts_a: jax.Array, ts_b: jax.Array, window: int,
                     exclusion: int = 0, band: int = DEFAULT_BAND, *,
-                    two_sided: bool = True):
+                    two_sided: bool = True, clamp_rows: bool = True):
     """Exact non-normalized AB join -> (dist_a (l_a,), idx_a, dist_b (l_b,),
     idx_b) — both sides from one signed-diagonal sweep (dist_b/idx_b are
     None with `two_sided=False`, which skips the column harvest; A's
     profile needs only the row side).
 
-    Same signed-diagonal streaming as the z-normalized AB engine with the
-    raw-distance recurrence of `band_rowmin_nonnorm`. With exclusion == 0 the
-    whole signed space is one span (diagonal k = 0 evaluated once).
+    Same signed-diagonal streaming as the z-normalized AB engine — including
+    the row clamp (`clamp_rows=False` restores the full-height sweep) — with
+    the raw-distance recurrence of `band_rowmin_nonnorm`. With
+    exclusion == 0 the whole signed space is one span (diagonal k = 0
+    evaluated once).
     """
     from repro.core.zstats import sliding_dot
 
@@ -709,26 +1038,29 @@ def ab_join_nonnorm(ts_a: jax.Array, ts_b: jax.Array, window: int,
     d20s = jnp.concatenate([d20_neg[::-1], d20_pos])
 
     pad_l = la - 1
+    li = ab_row_tile(la, lb, band) if clamp_rows else la
+    padded = _nonnorm_padded_series(ts_a, ts_b, band, li, clamp_rows)
 
     def span(k_lo, width, k_hi):
         n_bands = -(-width // band)
 
         def body(carry, b):
-            st_a, col = carry
+            rows, col = carry
             start = k_lo + b * band
-            ra, ia, win, wi = band_rowmin_nonnorm_ab(
+            ra, ia, win, wi, i0 = band_rowmin_nonnorm_ab(
                 ts_a, ts_b, d20s, m, start, band, k_hi=k_hi,
-                harvest_cols=two_sided)
-            st_a = st_a.merge(ProfileState(ra, ia))
+                harvest_cols=two_sided, clamp_rows=clamp_rows, padded=padded)
+            rows = rows.merge_window(ra, ia, i0)
             if two_sided:
-                col = col.merge_window(win, wi, start + pad_l)
-            return (st_a, col), None
+                col = col.merge_window(win, wi, start + i0 + pad_l)
+            return (rows, col), None
 
-        init = (ProfileState.empty(la, -jnp.inf),
-                ColState.empty(pad_l, lb, la + band, -jnp.inf)
+        init = (ColState.empty(0, la, li, -jnp.inf),
+                ColState.empty(pad_l, lb, li + 2 * band, -jnp.inf)
                 if two_sided else None)
-        (st_a, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
-        return st_a, col.to_profile(pad_l, lb) if two_sided else None
+        (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+        return (rows.to_profile(0, la),
+                col.to_profile(pad_l, lb) if two_sided else None)
 
     merged_a = ProfileState.empty(la, -jnp.inf)
     merged_b = ProfileState.empty(lb, -jnp.inf) if two_sided else None

@@ -82,21 +82,35 @@ def range_work(l: int, r: tuple[int, int]) -> int:
 # equal-work scheme covers it.
 
 
-def diag_work_ab(l_a: int, l_b: int, k: np.ndarray) -> np.ndarray:
-    """Cells on signed diagonal k of the (l_a, l_b) rectangle."""
+def diag_work_ab(l_a: int, l_b: int, k: np.ndarray,
+                 band: int = 1) -> np.ndarray:
+    """Engine cost of signed diagonal k of the (l_a, l_b) rectangle.
+
+    With band == 1 this is the exact cell count inside the rectangle. With
+    band > 1 it models the ROW-CLAMPED band engine (`ab_row_tile`): a
+    `band`-wide tile starting at k computes the union row range
+    [max(0, -(k+band-1)), min(l_a, l_b - k)) whatever the per-diagonal
+    overlap is, so each diagonal is charged that clamped height — the count
+    the balancer must equalize for the anytime scheduler's rounds to finish
+    together (charging true cells would under-weight corner diagonals whose
+    band still streams the clamp slack)."""
     k = np.asarray(k)
-    return np.maximum(0, np.minimum(l_a, l_b - k) - np.maximum(0, -k))
+    return np.maximum(0, np.minimum(l_a, l_b - k)
+                      - np.maximum(0, -(k + band - 1)))
 
 
 def balanced_ranges_ab(l_a: int, l_b: int, parts: int, band: int = 1,
                        excl: int = 0) -> list[tuple[int, int]]:
     """Split the rectangle's signed diagonals into ~equal-work ranges.
 
-    With excl == 0 (the true-AB default) returns exactly `parts` half-open
-    (k0, k1) ranges covering [-(l_a-1), l_b) (padded with empty ranges if
-    alignment collapses cuts). With excl > 0 the band |k| < excl is removed
-    and a cut is FORCED at the gap so no range straddles it — the result may
-    then hold parts+1 ranges. Empty sentinel ranges are (l_b, l_b).
+    `band` both aligns the cut points and selects the clamped-cell cost
+    model (`diag_work_ab(..., band)`) so the split balances what the
+    row-clamped engine actually computes. With excl == 0 (the true-AB
+    default) returns exactly `parts` half-open (k0, k1) ranges covering
+    [-(l_a-1), l_b) (padded with empty ranges if alignment collapses cuts).
+    With excl > 0 the band |k| < excl is removed and a cut is FORCED at the
+    gap so no range straddles it — the result may then hold parts+1 ranges.
+    Empty sentinel ranges are (l_b, l_b).
     """
     if parts <= 0:
         raise ValueError("parts must be positive")
@@ -111,7 +125,7 @@ def balanced_ranges_ab(l_a: int, l_b: int, parts: int, band: int = 1,
     ks = np.concatenate(segs) if segs else np.array([], np.int64)
     if ks.size == 0:
         return [(l_b, l_b)] * parts
-    w = diag_work_ab(l_a, l_b, ks).astype(np.float64)
+    w = diag_work_ab(l_a, l_b, ks, band=band).astype(np.float64)
     cum = np.cumsum(w)
     total = cum[-1]
     targets = total * (np.arange(1, parts) / parts)
@@ -126,12 +140,15 @@ def balanced_ranges_ab(l_a: int, l_b: int, parts: int, band: int = 1,
     return ranges
 
 
-def range_work_ab(l_a: int, l_b: int, r: tuple[int, int]) -> int:
+def range_work_ab(l_a: int, l_b: int, r: tuple[int, int],
+                  band: int = 1) -> int:
+    """Work of one signed range under the band-clamped cost model
+    (band == 1: exact cells — the coverage/progress semantics)."""
     k0, k1 = r
     k0, k1 = max(k0, -(l_a - 1)), min(k1, l_b)
     if k1 <= k0:
         return 0
-    return int(diag_work_ab(l_a, l_b, np.arange(k0, k1)).sum())
+    return int(diag_work_ab(l_a, l_b, np.arange(k0, k1), band=band).sum())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,9 +249,11 @@ def balance_badness(l: int, ranges: list[tuple[int, int]]) -> float:
 
 
 def balance_badness_ab(l_a: int, l_b: int,
-                       ranges: list[tuple[int, int]]) -> float:
-    """Straggler metric over signed AB ranges (see `balance_badness`)."""
-    w = np.array([range_work_ab(l_a, l_b, r) for r in ranges],
+                       ranges: list[tuple[int, int]],
+                       band: int = 1) -> float:
+    """Straggler metric over signed AB ranges (see `balance_badness`).
+    `band` > 1 scores under the row-clamped engine cost model."""
+    w = np.array([range_work_ab(l_a, l_b, r, band=band) for r in ranges],
                  dtype=np.float64)
     w = w[w > 0]
     if w.size == 0:

@@ -46,6 +46,11 @@ class SchedulerState:
 
     @property
     def fraction_done(self) -> float:
+        """Fraction of the ANSWER covered (true cells swept). Chunk cuts are
+        balanced separately under the row-clamped engine COST model
+        (`partition.diag_work_ab(..., band)`), so equal-time rounds can
+        advance this coverage metric slightly unevenly on skewed AB
+        rectangles — coverage is what anytime accuracy tracks."""
         w = self.plan.chunk_work().astype(np.float64)
         t = w.sum()
         return float((w * self.done).sum() / t) if t else 1.0
@@ -58,7 +63,10 @@ class AnytimeScheduler:
     the SIGNED diagonal space of the (l_a, l_b) rectangle (no exclusion zone
     unless requested) and every round also accumulates B's profile
     (`distance_profile_b`). Rounds stay anytime-monotone; chunks harvest both
-    profile sides in the same sweep, so `run()` alone is exact.
+    profile sides in the same sweep, so `run()` alone is exact. AB workers
+    stream ROW-CLAMPED band tiles (`worker_chunk_ab`) and the plan's
+    equal-work cuts use the matching clamped cost model, so skewed
+    rectangles neither waste l_a-high tiles nor leave straggler rounds.
     """
 
     def __init__(self, ts, window: int, mesh, *, axis: str = "workers",

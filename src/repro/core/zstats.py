@@ -253,9 +253,12 @@ def compute_stats_host(ts, window: int, out_dtype=None,
     l = n - m + 1
     csum = np.concatenate([[0.0], np.cumsum(t)])
     mu = (csum[m:] - csum[:-m]) / m
-    idx = np.arange(l)[:, None] + np.arange(m)[None, :]
-    w = t[idx] - mu[:, None]              # exact two-pass centering
-    norm = np.sqrt((w * w).sum(axis=1))
+    # zero-copy window view instead of an (l, m) index-gather: stats prep is
+    # on the timed serving path, so the only O(l*m) materialization is the
+    # centered matrix itself
+    view = np.lib.stride_tricks.sliding_window_view(t, m)
+    w = view - mu[:, None]                # exact two-pass centering
+    norm = np.sqrt(np.einsum("lm,lm->l", w, w))
     # flat-window guard must be RELATIVE: cumsum roundoff in mu leaves
     # ~1e-15-relative residues in w for constant windows, and an exact
     # norm > 0 test would then emit invn ~ 1e15 instead of the corr-0

@@ -16,9 +16,21 @@ TPU adaptation of NATSA's in-HBM-logic processing unit:
     (DT, IT) correlation tile via an in-tile diagonal re-gather — each
     sublane's row is a STATIC shift by its diagonal offset, so the gather is
     a stack of concatenations, and the (IT+DT)-wide column window is folded
-    into a full-length accumulator with one dynamic-slice read-modify-max
-    (scatter-free; TPUs have no cheap scatter-min). The old scheme ran the
-    whole kernel a second time over the reversed series for the column half.
+    into a column accumulator with one dynamic-slice read-modify-max
+    (scatter-free; TPUs have no cheap scatter-min).
+
+The column accumulator is BANKED: instead of one full-length VMEM block
+(which cannot scale past VMEM for long series), the output is a
+(n_banks, col_tile) array whose rows cover the flat column space at stride
+`col_tile - (IT+DT)` — overlapping just enough that every tile's (IT+DT)-wide
+window fits entirely inside the single bank `s // stride` (s the window's
+flat start). The out-spec's index_map picks that bank per grid step, so the
+VMEM working set of the column side is ONE col_tile-sized block — the same
+streaming treatment the j-side strips get — and a host-side reduction
+(`reduce_col_banks`) max-merges the overlapped banks back into the flat
+profile. Banks are pre-initialized through input/output aliasing (an
+index-mapped block has no "first visit" predicate a @pl.when could test).
+`col_tile=None` degenerates to a single full-length bank (small series).
 
 The kernel is TWO-SERIES: the i side (rows, series A) and the j side
 (diagonal strips, series B) are independent stream sets, and the diagonal
@@ -35,9 +47,10 @@ one launch yields the complete profile.
 
 Grid: (n_row_tiles, n_diag_tiles), diag innermost so the output row block is
 revisited consecutively (read-modify-max accumulation), while the covariance
-scratch row for each diag tile persists across the outer row loop. The
-column accumulators map every grid step to the same full-length block, which
-the sequential TPU grid revisits in place.
+scratch row for each diag tile persists across the outer row loop. A column
+bank is revisited consecutively within one row tile and re-fetched when the
+row loop wraps the bank index back down (correct on the sequential TPU grid;
+the wrap costs one HBM round-trip per bank per row tile).
 
 Layout note: tiles are (DT, IT) with diagonals on sublanes and rows on lanes;
 IT is a multiple of 128. Validated with interpret=True on CPU; compiled path
@@ -57,20 +70,13 @@ NEG = -2.0  # correlations live in [-1, 1]
 
 
 def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
-            out_corr, out_idx, out_colc, out_coli, carry, *, it: int, dt: int,
-            k_start: int, k_end: int, l_i: int, l_j: int, jpad: int,
-            col_len: int):
+            _colc_init, _coli_init, out_corr, out_idx, out_colc, out_coli,
+            carry, *, it: int, dt: int, k_start: int, k_end: int, l_i: int,
+            l_j: int, jpad: int, col_stride: int):
     i_idx = pl.program_id(0)
     d_idx = pl.program_id(1)
     i0 = i_idx * it
     k0 = k_start + d_idx * dt          # signed diagonal offset of this tile
-
-    # the column accumulators span the whole diagonal space; NEG-fill them
-    # once, before the first tile's read-modify-max
-    @pl.when((i_idx == 0) & (d_idx == 0))
-    def _init_col():
-        out_colc[:] = jnp.full((col_len,), NEG, jnp.float32)
-        out_coli[:] = jnp.full((col_len,), -1, jnp.int32)
 
     # seed the diagonal registers at the first row tile
     @pl.when(i_idx == 0)
@@ -128,7 +134,9 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
     # the tile covers columns j in [i0+k0, i0+k0+IT+DT); the best value ending
     # at local column t is max_dd corr[dd, t - dd] — a static per-sublane
     # shift (diagonal re-gather), then one dynamic-slice read-modify-max into
-    # the flat accumulator at offset i0 + k0 + jpad.
+    # the bank holding this tile's window. The window's flat start is
+    # s = i0 + k0 + jpad; its bank is s // col_stride (the out-spec fetched
+    # exactly that bank), and the bank overlap guarantees local + W fits.
     w = it + dt
     shifted = jnp.stack([
         jnp.concatenate([jnp.full((d_,), NEG, jnp.float32), corr[d_, :],
@@ -140,19 +148,57 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
     col_i = (i0 + jnp.arange(w) - col_d).astype(jnp.int32)
     col_i = jnp.where(col_best > NEG, col_i, -1)
 
-    start = i0 + k0 + jpad
-    prev_c = out_colc[pl.ds(start, w)]
-    prev_i = out_coli[pl.ds(start, w)]
+    s = i0 + k0 + jpad
+    local = s - (s // col_stride) * col_stride
+    prev_c = out_colc[0, pl.ds(local, w)]
+    prev_i = out_coli[0, pl.ds(local, w)]
     take_c = col_best > prev_c
-    out_colc[pl.ds(start, w)] = jnp.where(take_c, col_best, prev_c)
-    out_coli[pl.ds(start, w)] = jnp.where(take_c, col_i, prev_i)
+    out_colc[0, pl.ds(local, w)] = jnp.where(take_c, col_best, prev_c)
+    out_coli[0, pl.ds(local, w)] = jnp.where(take_c, col_i, prev_i)
+
+
+def col_bank_layout(col_len: int, it: int, dt: int,
+                    col_tile: int | None) -> tuple[int, int, int]:
+    """(n_banks, bank_width, stride) of the banked column accumulator.
+
+    Every tile window is (it+dt) wide and starts at some flat s in
+    [0, col_len - it - dt]; banks of width `col_tile` at stride
+    `col_tile - (it+dt)` guarantee window s lives wholly inside bank
+    s // stride. col_tile=None collapses to one full-length bank."""
+    w = it + dt
+    if col_tile is None:
+        return 1, col_len, col_len
+    if col_tile <= w:
+        raise ValueError(f"col_tile={col_tile} must exceed the tile window "
+                         f"it+dt={w}")
+    stride = col_tile - w
+    n_banks = max(1, (max(col_len - w, 0)) // stride + 1)
+    return n_banks, col_tile, stride
+
+
+def reduce_col_banks(colc: jax.Array, coli: jax.Array, stride: int,
+                     out_len: int) -> tuple[jax.Array, jax.Array]:
+    """Max-merge overlapping (n_banks, bank_width) accumulators back into the
+    flat (out_len,) column profile — the host-side half of the banking
+    scheme. ONE implementation serves kernel and engine: this delegates to
+    `BankedColState.to_flat`, so stride/truncation/tie semantics cannot
+    drift between the two (the mirror invariant the tiling tests pin).
+    Imported lazily — core.matrix_profile never imports kernels, so there
+    is no cycle."""
+    from repro.core.matrix_profile import BankedColState
+
+    return BankedColState(corr=colc, index=coli,
+                          stride=stride).to_flat(out_len, NEG)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "it", "dt", "k_start", "k_end", "l_i", "l_j", "jpad", "interpret"))
+    "it", "dt", "k_start", "k_end", "l_i", "l_j", "jpad", "col_tile",
+    "return_banked", "interpret"))
 def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
                       it: int, dt: int, k_start: int, k_end: int,
                       l_i: int, l_j: int, jpad: int = 0,
+                      col_tile: int | None = None,
+                      return_banked: bool = False,
                       interpret: bool = True):
     """Two-sided harvest over signed diagonals
     [k_start, k_start + len(cov0)) ∩ [k_start, k_end) of the AB rectangle,
@@ -167,7 +213,14 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
     `idx` is the best j in B per row of A (-1 where no diagonal covers the
     row); `col_corr[j + jpad]` is the best correlation ending at column j of
     B with `col_idx` the winning row i in A (-1 where untouched), and
-    col_len = n_row_tiles*IT + k_start + n_diag_tiles*DT + jpad.
+    col_len = max(n_row_tiles*IT + k_start + n_diag_tiles*DT, l_j) + jpad.
+
+    `col_tile` bounds the column accumulator's VMEM block: the kernel
+    accumulates into (n_banks, col_tile) overlapped banks (see
+    `col_bank_layout`) and the flat profile is recovered by
+    `reduce_col_banks`. With `return_banked=True` the raw banks and their
+    stride are returned instead — (corr, idx, banks_c, banks_i, stride) —
+    for callers that reduce themselves (tests assert the block bound).
     """
     rows = df_i.shape[0]
     n_rows = rows // it
@@ -182,6 +235,7 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
     col_len = max(n_rows * it + k_start + n_diags * dt + jpad, l_j + jpad)
     assert jp >= col_len, (jp, n_rows, it, k_start, n_diags, dt, jpad, l_j)
     assert k_start + jpad >= 0, (k_start, jpad)
+    n_banks, bank_w, stride = col_bank_layout(col_len, it, dt, col_tile)
 
     df_row = df_i.reshape(n_rows, it)
     dg_row = dg_i.reshape(n_rows, it)
@@ -191,36 +245,50 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
     row_spec = pl.BlockSpec((1, it), lambda i, d: (i, 0))
     full_spec = pl.BlockSpec((jp,), lambda i, d: (0,))
     cov0_spec = pl.BlockSpec((dt,), lambda i, d: (d,))
-    col_spec = pl.BlockSpec((col_len,), lambda i, d: (0,))
+    col_spec = pl.BlockSpec(
+        (1, bank_w),
+        lambda i, d: ((i * it + k_start + d * dt + jpad) // stride, 0))
     out_specs = [pl.BlockSpec((1, it), lambda i, d: (i, 0))] * 2 + \
         [col_spec, col_spec]
 
+    # banks are initialized through aliasing: an index-mapped bank has no
+    # cheap "first visit" predicate, so the NEG/-1 fill arrives as an
+    # aliased input instead of an in-kernel @pl.when store
+    colc_init = jnp.full((n_banks, bank_w), NEG, jnp.float32)
+    coli_init = jnp.full((n_banks, bank_w), -1, jnp.int32)
+
     kernel = functools.partial(_kernel, it=it, dt=dt, k_start=k_start,
                                k_end=k_end, l_i=l_i, l_j=l_j, jpad=jpad,
-                               col_len=col_len)
+                               col_stride=stride)
     corr, idx, colc, coli = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[row_spec, row_spec, row_spec,
-                  full_spec, full_spec, full_spec, cov0_spec],
+                  full_spec, full_spec, full_spec, cov0_spec,
+                  col_spec, col_spec],
         out_specs=out_specs,
         out_shape=[jax.ShapeDtypeStruct((n_rows, it), jnp.float32),
                    jax.ShapeDtypeStruct((n_rows, it), jnp.int32),
-                   jax.ShapeDtypeStruct((col_len,), jnp.float32),
-                   jax.ShapeDtypeStruct((col_len,), jnp.int32)],
+                   jax.ShapeDtypeStruct((n_banks, bank_w), jnp.float32),
+                   jax.ShapeDtypeStruct((n_banks, bank_w), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((n_diags, dt), jnp.float32)],
+        input_output_aliases={7: 2, 8: 3},
         interpret=interpret,
-    )(df_row, dg_row, invn_row, df_j, dg_j, invn_j, cov0)
-    return corr.reshape(-1), idx.reshape(-1), colc, coli
+    )(df_row, dg_row, invn_row, df_j, dg_j, invn_j, cov0,
+      colc_init, coli_init)
+    if return_banked:
+        return corr.reshape(-1), idx.reshape(-1), colc, coli, stride
+    flat_c, flat_i = reduce_col_banks(colc, coli, stride, col_len)
+    return corr.reshape(-1), idx.reshape(-1), flat_c, flat_i
 
 
 def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,
-                   interpret: bool = True):
+                   col_tile: int | None = None, interpret: bool = True):
     """Self-join entry: two-sided harvest over diagonals k in [excl, l) — the
     special case of `rowmax_profile_ab` where both stream sets alias one
     series. The column side (col_corr[:l], col_idx[:l]) is the lower
     triangle; merged with the row side it is the COMPLETE profile from one
-    launch.
+    launch. `col_tile` bounds the column accumulator's VMEM block (banked).
 
     df/dg/invn : (LP,) f32, LP >= n_row_tiles*IT + excl + n_diag_tiles*DT
     cov0       : (n_diag_tiles*DT,) f32 — cov(0, excl+d), padded
@@ -229,4 +297,4 @@ def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,
     return rowmax_profile_ab(
         df[:rows], dg[:rows], invn[:rows], df, dg, invn, cov0,
         it=it, dt=dt, k_start=excl, k_end=l, l_i=l, l_j=l, jpad=0,
-        interpret=interpret)
+        col_tile=col_tile, interpret=interpret)

@@ -48,17 +48,41 @@ def _pad_streams(stats: ZStats, it: int, dt: int, excl: int):
             n_rows, n_diags, l)
 
 
+# Column accumulators below this flat length fit one VMEM block comfortably;
+# longer spaces are banked into `auto_col_tile`-sized blocks so the working
+# set stays bounded however long the series grows.
+AUTO_COL_BANK_MIN = 8192
+
+
+def auto_col_tile(col_len: int, it: int, dt: int,
+                  col_tile: int | None) -> int | None:
+    """Resolve the col_tile policy: None = auto (bank long spaces into
+    max(4096, 2*(it+dt)) blocks, keep short ones unbanked), 0 = force one
+    full-length bank, any other int = explicit block bound."""
+    if col_tile == 0:
+        return None
+    if col_tile is not None:
+        return int(col_tile)
+    if col_len <= AUTO_COL_BANK_MIN:
+        return None
+    return max(4096, 2 * (it + dt))
+
+
 def rowmax_from_stats(stats: ZStats, *, excl: int, it: int = 256, dt: int = 8,
-                      interpret: bool = True):
+                      col_tile: int | None = None, interpret: bool = True):
     """Two-sided self-join harvest via ONE kernel launch.
 
     Returns (corr (l,), idx, col_corr (l,), col_idx): the row-max half
     (upper triangle, j > i) and the column-max half (lower triangle, i < j)
     of the same swept cells. Their merge is the complete profile.
+    `col_tile` bounds the kernel's column-accumulator block (see
+    `auto_col_tile` for the default policy).
     """
     df, dg, invn, cov0p, n_rows, n_diags, l = _pad_streams(stats, it, dt, excl)
+    ct = auto_col_tile(n_rows * it + excl + n_diags * dt, it, dt, col_tile)
     corr, idx, colc, coli = natsa_mp.rowmax_profile(
-        df, dg, invn, cov0p, it=it, dt=dt, excl=excl, l=l, interpret=interpret)
+        df, dg, invn, cov0p, it=it, dt=dt, excl=excl, l=l, col_tile=ct,
+        interpret=interpret)
     return corr[:l], idx[:l], colc[:l], coli[:l]
 
 
@@ -69,19 +93,22 @@ def _merge_corr(corr_a, idx_a, corr_b, idx_b):
 
 
 def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
-                         it: int = 256, dt: int = 8, interpret: bool = True):
+                         it: int = 256, dt: int = 8,
+                         col_tile: int | None = None, interpret: bool = True):
     """Full matrix profile via the Pallas kernel. -> (distance (l,), idx (l,)).
 
     One launch, one pass over the streams: no reversed-series stats, no
     second launch. Matches core.matrix_profile / the brute-force oracle
-    (tests enforce it).
+    (tests enforce it). Long series get a BANKED column accumulator
+    (col_tile-bounded VMEM block per grid step; `auto_col_tile` policy).
     """
     m = int(window)
     excl = max(1, -(-m // 4)) if exclusion is None else int(exclusion)
     stats = compute_stats_host(np.asarray(ts), m)
 
     corr_r, idx_r, corr_c, idx_c = rowmax_from_stats(
-        stats, excl=excl, it=it, dt=dt, interpret=interpret)
+        stats, excl=excl, it=it, dt=dt, col_tile=col_tile,
+        interpret=interpret)
     corr, idx = _merge_corr(corr_r, idx_r, corr_c, idx_c)
     dist = jnp.where(corr <= NEG + 1e-6, jnp.inf,
                      corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
@@ -123,13 +150,15 @@ def _pad_streams_ab(cross: CrossStats, it: int, dt: int, s0: int, s1: int):
 
 
 def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
-                         it: int = 256, dt: int = 8, interpret: bool = True):
+                         it: int = 256, dt: int = 8,
+                         col_tile: int | None = None, interpret: bool = True):
     """Two-sided AB harvest via the kernel.
 
     With exclusion == 0 the whole signed space [-(l_a-1), l_b) is ONE kernel
     launch; an exclusion band splits it into a negative and a positive span.
     Returns (corr_a (l_a,), idx_a, corr_b (l_b,), idx_b) — A's profile over
-    B and B's profile over A, harvested from the same sweep.
+    B and B's profile over A, harvested from the same sweep. `col_tile`
+    bounds the column-accumulator block (`auto_col_tile` policy).
     """
     la, lb = cross.l_a, cross.l_b
     excl = int(exclusion)
@@ -147,11 +176,14 @@ def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
     idx_b = jnp.full((lb,), -1, jnp.int32)
     for s0, s1 in spans:
         (df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0p,
-         _, _, jpad) = _pad_streams_ab(cross, it, dt, s0, s1)
+         n_rows, n_diags, jpad) = _pad_streams_ab(cross, it, dt, s0, s1)
+        ct = auto_col_tile(
+            max(n_rows * it + s0 + n_diags * dt + jpad, lb + jpad),
+            it, dt, col_tile)
         c, ix, cc, ci = natsa_mp.rowmax_profile_ab(
             df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0p,
             it=it, dt=dt, k_start=s0, k_end=s1, l_i=la, l_j=lb, jpad=jpad,
-            interpret=interpret)
+            col_tile=ct, interpret=interpret)
         corr, idx = _merge_corr(corr, idx, c[:la], ix[:la])
         corr_b, idx_b = _merge_corr(corr_b, idx_b,
                                     cc[jpad:jpad + lb], ci[jpad:jpad + lb])
@@ -159,8 +191,8 @@ def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
 
 
 def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
-                  it: int = 256, dt: int = 8, interpret: bool = True,
-                  return_b: bool = False):
+                  it: int = 256, dt: int = 8, col_tile: int | None = None,
+                  interpret: bool = True, return_b: bool = False):
     """AB join via the Pallas kernel -> (distance (l_a,), idx (l_a,)).
 
     With `return_b=True` additionally returns B's profile against A —
@@ -168,12 +200,24 @@ def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     launch, not a second join. Matches core.matrix_profile.ab_join / the
     brute-force oracle (tests enforce it). No exclusion zone by default —
     pass one only to recover the self-join as the A == B special case.
+    The rectangle is swept with its SHORT side on the row axis (fewest
+    computed tiles); outputs are mapped back, so callers never see the
+    orientation.
     """
     m = int(window)
     excl = 0 if exclusion is None else int(exclusion)
-    cross = compute_cross_stats_host(np.asarray(ts_a), np.asarray(ts_b), m)
+    a, b = np.asarray(ts_a), np.asarray(ts_b)
+    if b.shape[0] < a.shape[0]:
+        # row tiles cover the SHORT side: an (l_a/it x (l_a+l_b)/dt) grid
+        # shrinks to (l_b/it x (l_a+l_b)/dt) — the kernel-side row clamp
+        d_b, i_b, d_a, i_a = natsa_ab_join(b, a, m, exclusion=excl, it=it,
+                                           dt=dt, col_tile=col_tile,
+                                           interpret=interpret, return_b=True)
+        return (d_a, i_a, d_b, i_b) if return_b else (d_a, i_a)
+    cross = compute_cross_stats_host(a, b, m)
     corr, idx, corr_b, idx_b = ab_rowmax_from_stats(
-        cross, exclusion=excl, it=it, dt=dt, interpret=interpret)
+        cross, exclusion=excl, it=it, dt=dt, col_tile=col_tile,
+        interpret=interpret)
 
     def dist(c):
         return jnp.where(c <= NEG + 1e-6, jnp.inf,
@@ -187,13 +231,19 @@ def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
 VMEM_BYTES = 128 * 2**20 // 8   # ~16 MiB/core, keep ~50% headroom
 
 
-def kernel_vmem_bytes(l: int, it: int, dt: int) -> int:
-    """VMEM working set of one rowmax_profile call (full streams resident)."""
+def kernel_vmem_bytes(l: int, it: int, dt: int,
+                      col_tile: int | None = None) -> int:
+    """VMEM working set of one rowmax_profile call (full streams resident).
+
+    The column accumulator contributes ONE (col_tile)-sized bank block when
+    banked (the auto policy for long series) instead of the full flat
+    length — the term that used to grow with l and cap series length."""
     lp = l + it + dt + 64
+    ct = auto_col_tile(lp, it, dt, col_tile)
     full = 3 * lp * 4                      # df/dg/invn
     rows = 3 * it * 4                      # row blocks
     outs = 2 * it * (4 + 4)                # corr+idx blocks (rw)
-    cols = lp * (4 + 4)                    # column accumulators (rw)
+    cols = (ct if ct is not None else lp) * (4 + 4)  # col bank block (rw)
     tile = 4 * dt * it * 4                 # dfj/dgj/invnj/delta working tile
     carry = (-(-(l) // dt)) * dt * 4       # cov scratch
     return full + rows + outs + cols + tile + carry

@@ -45,10 +45,11 @@ def rowmax_profile_ref(df, dg, invn, cov0, *, excl: int, l: int):
 
 
 def rowmax_profile_ab_ref(cross, k_lo: int, k_hi: int):
-    """(corr_a (l_a,), idx_a, corr_b (l_b,), idx_b) over signed AB diagonals
+    """(row_win, row_idx, col_win, col_win_i, i0) over signed AB diagonals
     [k_lo, k_hi) — one un-reseeded whole-span evaluation of the band
-    recurrence, exactly what `natsa_mp.rowmax_profile_ab` computes for that
-    span (both sides)."""
+    recurrence (row-clamped windows at offset i0, see
+    `matrix_profile.band_rowmax_ab`), exactly what
+    `natsa_mp.rowmax_profile_ab` computes for that span (both sides)."""
     from repro.core.matrix_profile import band_rowmax_ab
 
     return band_rowmax_ab(cross, jnp.int32(k_lo), int(k_hi - k_lo),
