@@ -1,8 +1,11 @@
-"""Core NATSA engine: matrix profile, partitioning, anytime scheduling."""
+"""Core NATSA engine: matrix profile, planning, partitioning, scheduling."""
 
 from repro.core.matrix_profile import (  # noqa: F401
     ProfileState, ab_join, batch_ab_join, batch_profile, matrix_profile,
     top_discords, top_motif,
+)
+from repro.core.plan import (  # noqa: F401
+    SweepPlan, SweepResult, execute, plan_sweep, round_executor,
 )
 from repro.core.zstats import (  # noqa: F401
     CrossStats, ZStats, compute_cross_stats_host, compute_stats, corr_to_dist,

@@ -108,8 +108,10 @@ def worker_chunk_ab(cross: CrossStats, k0: jax.Array, k1: jax.Array,
     return rows.to_profile(0, la), col.to_profile(pad_l, lb)
 
 
-def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
-    """SPMD function for one anytime round.
+def make_round_fn(plan, mesh, axis: str = "workers"):
+    """SPMD function for one anytime round of a distributed `SweepPlan`
+    (core.plan.round_executor is the only caller — tiling and reseed knobs
+    come off the plan, not positional args).
 
     Signature: (stats, running_profile, k0s (P,), k1s (P,)) -> merged profile.
     Idle workers pass k0 == k1 (empty chunk). Stats are replicated — they are
@@ -118,9 +120,11 @@ def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
     full set of rounds yields the EXACT profile (two-sided chunks — no
     reversed finish phase).
     """
+    n_bands, band, reseed = plan.n_bands, plan.band, plan.reseed_every
 
     def per_worker(stats: ZStats, running: ProfileState, k0_local, k1_local):
-        local = worker_chunk(stats, k0_local[0], k1_local[0], n_bands, band)
+        local = worker_chunk(stats, k0_local[0], k1_local[0], n_bands, band,
+                             reseed)
         return pmax_profile(running.merge(local), axis)
 
     shmapped = shard_map_compat(
@@ -131,7 +135,7 @@ def make_round_fn(mesh, n_bands: int, band: int, axis: str = "workers"):
     return jax.jit(shmapped)
 
 
-def make_round_fn_ab(mesh, n_bands: int, band: int, axis: str = "workers"):
+def make_round_fn_ab(plan, mesh, axis: str = "workers"):
     """AB analogue of `make_round_fn`: one anytime round over signed chunks,
     carrying BOTH profiles.
 
@@ -140,11 +144,12 @@ def make_round_fn_ab(mesh, n_bands: int, band: int, axis: str = "workers"):
     series' streams + seeds) are replicated — still O(n_a + n_b) traffic vs
     the O(n_a * n_b) rectangle.
     """
+    n_bands, band, reseed = plan.n_bands, plan.band, plan.reseed_every
 
     def per_worker(cross: CrossStats, running_a: ProfileState,
                    running_b: ProfileState, k0_local, k1_local):
         loc_a, loc_b = worker_chunk_ab(cross, k0_local[0], k1_local[0],
-                                       n_bands, band)
+                                       n_bands, band, reseed)
         return (pmax_profile(running_a.merge(loc_a), axis),
                 pmax_profile(running_b.merge(loc_b), axis))
 

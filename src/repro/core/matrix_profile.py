@@ -350,20 +350,24 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
                    ) -> tuple[jax.Array, jax.Array]:
     """Full exact matrix profile. Returns (distance_profile (l,), index (l,)).
 
-    Stream precompute happens host-side in f64 (see zstats.compute_stats_host
-    — f32 cancellation is catastrophic on offset data); the O(l^2) diagonal
-    engine runs on device in f32, touching each upper-triangle cell once and
-    harvesting both profile sides from it.
+    Thin entry: builds a `SweepPlan` (core.plan) and runs it through the
+    executor — the band-engine choice, exclusion default, and harvest wiring
+    all live in the planner. Stream precompute happens host-side in f64 (see
+    zstats.compute_stats_host — f32 cancellation is catastrophic on offset
+    data); the O(l^2) diagonal engine runs on device in f32, touching each
+    upper-triangle cell once and harvesting both profile sides from it.
     """
     import numpy as np
 
+    from repro.core import plan as plan_mod
     from repro.core.zstats import compute_stats_host
 
     m = int(window)
-    excl = default_exclusion(m) if exclusion is None else int(exclusion)
-    stats = compute_stats_host(np.asarray(ts), m)
-    merged = profile_from_stats(stats, excl, band, reseed_every)
-    return merged.to_distance(m), merged.index
+    arr = np.asarray(ts)
+    plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
+                               band=band, reseed_every=reseed_every)
+    res = plan_mod.execute(plan, compute_stats_host(arr, m))
+    return res.dist, res.index
 
 
 # -- AB join: rectangular diagonal space -------------------------------------
@@ -650,9 +654,9 @@ def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
 
 # How many rows the short side of a rectangle may have before the
 # row-streamed AB sweep (sequential lax.scan over rows) stops paying off and
-# `ab_join` falls back to the band-diagonal engine: per-step dispatch
-# overhead is ~microseconds, so a few thousand steps is noise while the
-# vectorized per-row work stays wide.
+# the planner (core.plan.plan_sweep) falls back to the band-diagonal engine:
+# per-step dispatch overhead is ~microseconds, so a few thousand steps is
+# noise while the vectorized per-row work stays wide.
 AB_ROWSTREAM_MAX_ROWS = 4096
 
 
@@ -678,10 +682,10 @@ def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
     most min(l_a, l_b) deltas, so `ab_reseed` skips that machinery when the
     seeds alone already bound drift tighter.
 
-    `ab_join` dispatches here (orienting the SHORT side onto rows) when the
-    row count is at most AB_ROWSTREAM_MAX_ROWS; the band-diagonal engine
-    remains the path for huge near-square rectangles and for every
-    partitioned/anytime/distributed schedule.
+    The planner dispatches here (orienting the SHORT side onto rows via
+    `swap_ab`) when the row count is at most AB_ROWSTREAM_MAX_ROWS; the
+    band-diagonal engine remains the path for huge near-square rectangles
+    and for every partitioned/anytime/distributed schedule.
     """
     sa, sb = cross.a, cross.b
     la, lb = cross.l_a, cross.l_b
@@ -735,8 +739,7 @@ def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
 def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
             band: int = DEFAULT_BAND,
             reseed_every: int | None = DEFAULT_RESEED,
-            normalize: bool = True, return_b: bool = False,
-            clamp_rows: bool = True):
+            normalize: bool = True, return_b: bool = False):
     """AB join: for every subsequence of A, its nearest neighbour in B.
 
     Returns (distance_profile (l_a,), index (l_a,)); index[i] is the matching
@@ -748,42 +751,31 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     ab_join(ts, ts, m, exclusion=e) == matrix_profile(ts, m, exclusion=e).
     Stream precompute is host-side f64, the O(l_a*l_b) engine device f32.
 
-    Scheduling: the rectangle is swept with its SHORT side on rows — the
-    orientation with the fewest streamed cells — via `ab_join_rowstream`
+    Scheduling lives in the planner (core.plan.plan_sweep): the rectangle is
+    swept with its SHORT side on rows (`swap_ab`) via `ab_join_rowstream`
     whenever that side fits AB_ROWSTREAM_MAX_ROWS; huge near-square joins
-    take the band-diagonal engine (`ab_join_from_stats`), whose tiles are
-    row-clamped to the rectangle. `clamp_rows=False` forces the pre-clamp
-    full-height band sweep (A/B comparison only — same answer, l_a cells per
-    diagonal).
+    and nonnorm sweeps take the band-diagonal engine, whose tiles are
+    row-clamped to the rectangle. The pre-clamp full-height sweep survives
+    only as an A/B-comparison plan (`plan_sweep(..., clamp_rows=False)`).
     """
     import numpy as np
 
-    from repro.core.zstats import compute_cross_stats_host
+    from repro.core import plan as plan_mod
 
     m = int(window)
-    excl = 0 if exclusion is None else int(exclusion)
-    if not normalize:
-        out = ab_join_nonnorm(
-            jnp.asarray(np.asarray(ts_a), jnp.float32),
-            jnp.asarray(np.asarray(ts_b), jnp.float32), m, excl, band,
-            two_sided=return_b, clamp_rows=clamp_rows)
-        return out if return_b else out[:2]
     a, b = np.asarray(ts_a), np.asarray(ts_b)
-    la_est, lb_est = a.shape[0] - m + 1, b.shape[0] - m + 1
-    if clamp_rows and min(la_est, lb_est) <= AB_ROWSTREAM_MAX_ROWS:
-        if lb_est < la_est:        # stream the short side as rows
-            cross = compute_cross_stats_host(b, a, m)
-            sb, sa = ab_join_rowstream(cross, excl, reseed_every)
-        else:
-            cross = compute_cross_stats_host(a, b, m)
-            sa, sb = ab_join_rowstream(cross, excl, reseed_every)
+    plan = plan_mod.plan_sweep(m, a.shape[0] - m + 1, b.shape[0] - m + 1,
+                               exclusion=exclusion, normalize=normalize,
+                               harvest="both" if return_b else "row",
+                               band=band, reseed_every=reseed_every)
+    if not normalize:
+        stats = (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
     else:
-        cross = compute_cross_stats_host(a, b, m)
-        sa, sb = ab_join_from_stats(cross, excl, band, reseed_every,
-                                    return_b, clamp_rows)
+        stats = plan_mod.cross_stats_for(plan, a, b)
+    res = plan_mod.execute(plan, stats)
     if return_b:
-        return sa.to_distance(m), sa.index, sb.to_distance(m), sb.index
-    return sa.to_distance(m), sa.index
+        return res.dist, res.index, res.dist_b, res.index_b
+    return res.dist, res.index
 
 
 def batch_profile(series, window: int, *, exclusion: int | None = None,
@@ -793,24 +785,27 @@ def batch_profile(series, window: int, *, exclusion: int | None = None,
     """Self-join matrix profiles for a (B, n) stack in ONE vmapped program.
 
     Per-series host f64 stream prep (forward only — the fused sweep needs no
-    reversed streams), then a single vmap of the jitted band engine — the
-    multi-tenant serving path (one dispatch, B profiles).
+    reversed streams), then a single vmap of the jitted band engine (a
+    batched plan — the planner pins the engine backend; rowstream/kernel
+    don't vmap) — the multi-tenant serving path (one dispatch, B profiles).
     Returns (distances (B, l), indices (B, l)).
     """
     import numpy as np
 
+    from repro.core import plan as plan_mod
     from repro.core.zstats import compute_stats_host
 
     arr = np.asarray(series)
     if arr.ndim != 2:
         raise ValueError(f"expected a (batch, n) stack, got shape {arr.shape}")
     m = int(window)
-    excl = default_exclusion(m) if exclusion is None else int(exclusion)
+    plan = plan_mod.plan_sweep(m, arr.shape[1] - m + 1, exclusion=exclusion,
+                               band=band, reseed_every=reseed_every,
+                               batch=arr.shape[0])
     stats = [compute_stats_host(s, m) for s in arr]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stats)
-    fn = jax.vmap(lambda s: profile_from_stats(s, excl, band, reseed_every))
-    merged = fn(stack)
-    return merged.to_distance(m), merged.index
+    res = plan_mod.execute(plan, stack)
+    return res.dist, res.index
 
 
 def batch_ab_join(stack_a, stack_b, window: int, *,
@@ -824,6 +819,7 @@ def batch_ab_join(stack_a, stack_b, window: int, *,
     """
     import numpy as np
 
+    from repro.core import plan as plan_mod
     from repro.core.zstats import compute_cross_stats_host
 
     a, b = np.asarray(stack_a), np.asarray(stack_b)
@@ -831,15 +827,17 @@ def batch_ab_join(stack_a, stack_b, window: int, *,
         raise ValueError(f"expected matching (batch, n) stacks, got "
                          f"{a.shape} vs {b.shape}")
     m = int(window)
-    excl = 0 if exclusion is None else int(exclusion)
+    plan = plan_mod.plan_sweep(m, a.shape[1] - m + 1, b.shape[1] - m + 1,
+                               exclusion=exclusion, band=band,
+                               reseed_every=reseed_every,
+                               harvest="both" if return_b else "row",
+                               batch=a.shape[0])
     crosses = [compute_cross_stats_host(ra, rb, m) for ra, rb in zip(a, b)]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *crosses)
-    fn = jax.vmap(
-        lambda c: ab_join_from_stats(c, excl, band, reseed_every, return_b))
-    sa, sb = fn(stack)
+    res = plan_mod.execute(plan, stack)
     if return_b:
-        return sa.to_distance(m), sa.index, sb.to_distance(m), sb.index
-    return sa.to_distance(m), sa.index
+        return res.dist, res.index, res.dist_b, res.index_b
+    return res.dist, res.index
 
 
 def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
@@ -888,17 +886,32 @@ def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
     return neg_best.astype(jnp.float32), idx, win, win_i
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3))
-def matrix_profile_nonnorm(ts: jax.Array, window: int,
-                           exclusion: int | None = None,
+def matrix_profile_nonnorm(ts, window: int, exclusion: int | None = None,
                            band: int = DEFAULT_BAND):
     """Exact non-normalized matrix profile -> (euclid distance (l,), idx).
 
-    One sweep of k in [excl, l); row and column harvests of each band tile
-    cover both triangles (no reversed-series pass).
+    Thin entry over a nonnorm self-join plan; the jitted sweep itself is
+    `nonnorm_profile_from_ts` (one pass of k in [excl, l); row and column
+    harvests of each band tile cover both triangles — no reversed pass).
     """
+    from repro.core import plan as plan_mod
+
+    ts = jnp.asarray(ts, jnp.float32)
     m = int(window)
-    excl = default_exclusion(m) if exclusion is None else int(exclusion)
+    plan = plan_mod.plan_sweep(m, ts.shape[0] - m + 1, exclusion=exclusion,
+                               normalize=False, band=band)
+    res = plan_mod.execute(plan, ts)
+    return res.dist, res.index
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def nonnorm_profile_from_ts(ts: jax.Array, window: int, exclusion: int,
+                            band: int = DEFAULT_BAND):
+    """Jitted nonnorm self-join core: one two-sided sweep of k in [excl, l).
+    Executor-facing (core.plan); `exclusion` is concrete here — defaults are
+    the planner's job."""
+    m = int(window)
+    excl = int(exclusion)
     ts = jnp.asarray(ts, jnp.float32)
     l = ts.shape[0] - m + 1
     span = l - excl

@@ -1,0 +1,338 @@
+"""Declarative sweep planning: ONE plan + executor behind every entry point.
+
+NATSA's architectural claim is a single specialized sweep primitive with all
+workload variation pushed into a thin planning layer. This module is that
+layer for the repro: every public way of asking for a matrix profile —
+`matrix_profile`, `ab_join`, the `batch_*` variants, the nonnorm variants,
+the Pallas kernel ops, the anytime/distributed scheduler rounds, and
+`StreamingProfile.query` — builds a frozen `SweepPlan` via `plan_sweep(...)`
+and hands it to `execute(...)` (or, for SPMD rounds, `round_executor(...)`).
+
+The executor functions here are the ONLY callers of the low-level sweeps
+(`profile_from_stats`, `ab_join_from_stats`, `ab_join_rowstream`, the
+nonnorm engines, `kernels.ops.*rowmax_from_stats`, and
+`distributed.make_round_fn*`). Entry points stay thin; geometry / tiling /
+harvest / reseed knobs live in exactly one dataclass instead of being
+threaded positionally through four layers; and per-backend equivalence is
+testable at one seam (tests/test_plan.py pins both the planner's choices and
+bit-equality of plan-built results against direct low-level calls).
+
+Planner heuristics centralized here (formerly scattered per entry point):
+  * AB orientation: sweep the rectangle with its SHORT side on rows
+    (`swap_ab`) — fewest streamed cells — for the rowstream and kernel
+    backends; the band engine's row clamp makes orientation moot there.
+  * rowstream choice: a normalized AB join whose short side fits
+    `AB_ROWSTREAM_MAX_ROWS` takes the row-streamed scan (the fastest exact
+    path on skewed shapes); huge near-square joins and every partitioned /
+    batched / nonnorm sweep take the band-diagonal engine.
+  * `auto_col_tile` banking: kernel self-joins resolve their column
+    accumulator policy AT PLAN TIME (col_tile pinned in the plan: 0 = one
+    flat bank, else the bank width); AB kernel spans resolve per span inside
+    `ops` (an exclusion gap splits the signed space into two spans with
+    different flat lengths) from the plan's `col_tile` policy value.
+  * band / exclusion defaults in one place (`DEFAULT_BAND`,
+    `default_exclusion`; AB joins default to NO exclusion zone).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# NOTE: names are imported from the module directly — `repro.core`'s package
+# namespace rebinds `matrix_profile` to the FUNCTION of the same name, so a
+# `from repro.core import matrix_profile` would grab the entry point, not
+# the module. The kernel (`repro.kernels.ops`, pulls in the Pallas stack)
+# and SPMD (`repro.core.distributed`, shard_map) backends are imported
+# lazily inside their executor branches so `import repro.core` stays light
+# for engine-only users.
+from repro.core.matrix_profile import (
+    AB_ROWSTREAM_MAX_ROWS, DEFAULT_BAND, DEFAULT_RESEED, ab_join_from_stats,
+    ab_join_nonnorm, ab_join_rowstream, default_exclusion,
+    nonnorm_profile_from_ts, profile_from_stats,
+)
+from repro.core.zstats import CrossStats, ZStats, corr_to_dist
+
+BACKENDS = ("engine", "rowstream", "kernel", "distributed")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Frozen description of one exact matrix-profile sweep.
+
+    Geometry is in the CALLER's orientation (`l_a` is the caller's A side);
+    `swap_ab` records that the executor streams the transposed rectangle
+    (short side on rows) and maps the outputs back, so callers never see the
+    orientation. `k_min/k_max` (derived) are the signed diagonal span the
+    sweep covers, also in caller orientation (self-joins: the upper triangle
+    `[exclusion, l_a)`; the executor removes the `|k| < exclusion` band of
+    AB spans itself).
+    """
+
+    # -- geometry ----------------------------------------------------------
+    kind: str                       # "self" | "ab"
+    l_a: int                        # subsequence count of A (rows)
+    l_b: int | None                 # AB: subsequence count of B; self: None
+    window: int
+    exclusion: int
+    # -- normalization -----------------------------------------------------
+    normalize: bool = True          # z-normalized corr vs raw euclidean
+    # -- harvest -----------------------------------------------------------
+    harvest: str = "both"           # "row" (A side only) | "both"
+    swap_ab: bool = False           # executor sweeps B-vs-A, un-swaps outputs
+    # -- tiling ------------------------------------------------------------
+    band: int = DEFAULT_BAND        # diagonals per band tile
+    clamp_rows: bool = True         # row-clamp AB band tiles to the rectangle
+    col_tile: int | None = None     # column-accumulator bank width policy
+    n_bands: int | None = None      # distributed: static bands per chunk
+    it: int = 256                   # kernel row-tile height
+    dt: int = 8                     # kernel diagonal-tile width
+    # -- reseed policy -----------------------------------------------------
+    reseed_every: int | None = DEFAULT_RESEED
+    # -- backend -----------------------------------------------------------
+    backend: str = "engine"         # engine | rowstream | kernel | distributed
+    interpret: bool = True          # kernel backend: Pallas interpret mode
+    batch: int | None = None        # vmapped stack size (engine backend only)
+
+    @property
+    def k_min(self) -> int:
+        """First signed diagonal of the sweep (caller orientation) — derived,
+        so it can never go stale against kind/exclusion/l_a."""
+        return self.exclusion if self.kind == "self" else -(self.l_a - 1)
+
+    @property
+    def k_max(self) -> int:
+        """One past the last signed diagonal (caller orientation)."""
+        return self.l_a if self.kind == "self" else self.l_b
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Distances + neighbour indices of an executed plan, in the caller's
+    orientation. `dist_b/index_b` are the B side of a two-sided AB harvest
+    (None for self-joins and `harvest="row"` plans)."""
+
+    dist: jax.Array
+    index: jax.Array
+    dist_b: jax.Array | None = None
+    index_b: jax.Array | None = None
+
+
+def _kernel_self_col_tile(l: int, excl: int, it: int, dt: int,
+                          col_tile: int | None) -> int:
+    """Resolve the self-join kernel's column-bank policy at plan time.
+
+    Mirrors `ops._pad_streams`' flat accumulator length exactly, then applies
+    `ops.auto_col_tile`. Encoding matches what `ops` accepts back: 0 forces
+    one flat full-length bank, any other int is the bank width — so a plan
+    always pins a CONCRETE choice (testable), never a deferred None.
+    """
+    from repro.kernels import ops
+
+    n_rows = -(-l // it)
+    n_diags = -(-max(l - excl, 1) // dt)
+    flat_len = n_rows * it + excl + n_diags * dt
+    ct = ops.auto_col_tile(flat_len, it, dt, col_tile)
+    return 0 if ct is None else ct
+
+
+def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
+               exclusion: int | None = None, normalize: bool = True,
+               harvest: str = "both", backend: str | None = None,
+               band: int = DEFAULT_BAND, clamp_rows: bool = True,
+               col_tile: int | None = None,
+               reseed_every: int | None = DEFAULT_RESEED,
+               it: int = 256, dt: int = 8, interpret: bool = True,
+               batch: int | None = None) -> SweepPlan:
+    """Heuristic planner: fill in every sweep decision an entry point used to
+    make inline. `l_a`/`l_b` are SUBSEQUENCE counts (n - window + 1);
+    `backend=None` lets the planner choose (entry points only force a backend
+    when the user asked for a specific engine, e.g. the Pallas kernel ops or
+    the scheduler's SPMD rounds)."""
+    m = int(window)
+    kind = "self" if l_b is None else "ab"
+    if exclusion is None:
+        excl = default_exclusion(m) if kind == "self" else 0
+    else:
+        excl = int(exclusion)
+
+    if backend is None:
+        if kind == "ab" and normalize and batch is None and clamp_rows \
+                and min(l_a, l_b) <= AB_ROWSTREAM_MAX_ROWS:
+            backend = "rowstream"
+        else:
+            backend = "engine"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if backend in ("rowstream", "kernel") and not normalize:
+        raise ValueError(f"backend {backend!r} is z-normalized only")
+    if backend == "rowstream" and kind != "ab":
+        raise ValueError("rowstream sweeps the AB rectangle; self-joins use "
+                         "the band engine (or the kernel)")
+    if batch is not None and backend != "engine":
+        raise ValueError("batched plans vmap the band engine; "
+                         f"backend {backend!r} cannot batch")
+    if batch is not None and not normalize:
+        raise ValueError("batched plans are z-normalized only: the nonnorm "
+                         "sweeps take raw series, which the executor does "
+                         "not vmap")
+
+    # short side onto rows for the backends whose row axis is streamed
+    swap_ab = (kind == "ab" and backend in ("rowstream", "kernel")
+               and l_b < l_a)
+
+    if backend == "kernel" and kind == "self":
+        col_tile = _kernel_self_col_tile(l_a, excl, it, dt, col_tile)
+
+    return SweepPlan(kind=kind, l_a=int(l_a),
+                     l_b=None if l_b is None else int(l_b),
+                     window=m, exclusion=excl,
+                     normalize=normalize, harvest=harvest, swap_ab=swap_ab,
+                     band=int(band), clamp_rows=clamp_rows, col_tile=col_tile,
+                     it=int(it), dt=int(dt), reseed_every=reseed_every,
+                     backend=backend, interpret=interpret, batch=batch)
+
+
+def cross_stats_for(plan: SweepPlan, ts_a, ts_b) -> CrossStats:
+    """Host-side stream prep for an AB plan, in the plan's SWEPT orientation
+    — the one place that honors `swap_ab`, so entry points never hand
+    `execute` a transposed rectangle by accident. (Callers with a cached
+    resident side, e.g. StreamingProfile.query, assemble via
+    `zstats.cross_stats_from_parts` and must branch on `plan.swap_ab`
+    themselves.)"""
+    from repro.core.zstats import compute_cross_stats_host
+
+    if plan.kind != "ab" or not plan.normalize:
+        raise ValueError("cross_stats_for prepares z-normalized AB plans; "
+                         f"got kind={plan.kind!r} "
+                         f"normalize={plan.normalize}")
+    m = plan.window
+    if plan.swap_ab:               # stream the short side as rows
+        return compute_cross_stats_host(ts_b, ts_a, m)
+    return compute_cross_stats_host(ts_a, ts_b, m)
+
+
+# -- executor -----------------------------------------------------------------
+
+
+def _kernel_dist(corr: jax.Array, m: int) -> jax.Array:
+    from repro.kernels import ops
+
+    return jnp.where(corr <= ops.NEG + 1e-6, jnp.inf,
+                     corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
+
+
+def _check_stats(plan: SweepPlan, stats) -> None:
+    if not plan.normalize:
+        ok = (isinstance(stats, tuple) if plan.kind == "ab"
+              else not isinstance(stats, (ZStats, CrossStats, tuple)))
+        what = "(ts_a, ts_b) raw series" if plan.kind == "ab" else "raw series"
+    elif plan.kind == "ab":
+        ok, what = isinstance(stats, CrossStats), "CrossStats"
+    else:
+        ok, what = isinstance(stats, ZStats), "ZStats"
+    if not ok:
+        raise TypeError(f"{plan.kind}/{'z-norm' if plan.normalize else 'raw'} "
+                        f"plan expects {what}, got {type(stats).__name__}")
+
+
+def execute(plan: SweepPlan, stats) -> SweepResult:
+    """Run a plan. `stats` is the device payload matching the plan:
+    `ZStats` (self, z-norm), `CrossStats` in the plan's SWEPT orientation
+    (AB, z-norm; build with the B/A sides exchanged when `plan.swap_ab`),
+    a raw series array (self, nonnorm), or an `(ts_a, ts_b)` tuple (AB,
+    nonnorm). Batched plans take the same payloads with a leading stack axis
+    (`jax.tree.map(jnp.stack, ...)`). Distributed plans run round-by-round —
+    build their SPMD step with `round_executor` instead."""
+    _check_stats(plan, stats)
+    if plan.backend == "distributed":
+        raise ValueError("distributed plans execute round-by-round: build "
+                         "the SPMD round fn with round_executor(plan, mesh) "
+                         "— AnytimeScheduler drives it")
+    if plan.kind == "self":
+        return _execute_self(plan, stats)
+    return _execute_ab(plan, stats)
+
+
+def _execute_self(plan: SweepPlan, stats) -> SweepResult:
+    m = plan.window
+    if not plan.normalize:
+        dist, idx = nonnorm_profile_from_ts(
+            jnp.asarray(stats, jnp.float32), m, plan.exclusion, plan.band)
+        return SweepResult(dist, idx)
+    if plan.backend == "kernel":
+        from repro.kernels import ops
+
+        corr_r, idx_r, corr_c, idx_c = ops.rowmax_from_stats(
+            stats, excl=plan.exclusion, it=plan.it, dt=plan.dt,
+            col_tile=plan.col_tile, interpret=plan.interpret)
+        corr, idx = ops._merge_corr(corr_r, idx_r, corr_c, idx_c)
+        return SweepResult(_kernel_dist(corr, m), idx)
+    fn = lambda s: profile_from_stats(                      # noqa: E731
+        s, plan.exclusion, plan.band, plan.reseed_every)
+    if plan.batch is not None:
+        fn = jax.vmap(fn)
+    merged = fn(stats)
+    return SweepResult(merged.to_distance(m), merged.index)
+
+
+def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
+    m = plan.window
+    two_sided = plan.harvest == "both"
+    if not plan.normalize:
+        ts_a, ts_b = stats
+        da, ia, db, ib = ab_join_nonnorm(
+            ts_a, ts_b, m, plan.exclusion, plan.band,
+            two_sided=two_sided, clamp_rows=plan.clamp_rows)
+        return SweepResult(da, ia, db, ib)
+    if plan.backend == "rowstream":
+        sa, sb = ab_join_rowstream(stats, plan.exclusion, plan.reseed_every)
+        if plan.swap_ab:
+            sa, sb = sb, sa
+        return SweepResult(sa.to_distance(m), sa.index,
+                           sb.to_distance(m) if two_sided else None,
+                           sb.index if two_sided else None)
+    if plan.backend == "kernel":
+        from repro.kernels import ops
+
+        corr, idx, corr_b, idx_b = ops.ab_rowmax_from_stats(
+            stats, exclusion=plan.exclusion, it=plan.it, dt=plan.dt,
+            col_tile=plan.col_tile, interpret=plan.interpret)
+        if plan.swap_ab:
+            corr, idx, corr_b, idx_b = corr_b, idx_b, corr, idx
+        return SweepResult(
+            _kernel_dist(corr, m), idx,
+            _kernel_dist(corr_b, m) if two_sided else None,
+            idx_b if two_sided else None)
+    # band-diagonal engine: row clamp makes orientation moot, never swapped
+    fn = lambda c: ab_join_from_stats(                      # noqa: E731
+        c, plan.exclusion, plan.band, plan.reseed_every, two_sided,
+        plan.clamp_rows, plan.col_tile)
+    if plan.batch is not None:
+        fn = jax.vmap(fn)
+    sa, sb = fn(stats)
+    return SweepResult(sa.to_distance(m), sa.index,
+                       sb.to_distance(m) if two_sided else None,
+                       sb.index if two_sided else None)
+
+
+def round_executor(plan: SweepPlan, mesh, axis: str = "workers"):
+    """Executor entry for distributed plans: the jitted SPMD round function
+    the AnytimeScheduler steps (the only caller of
+    `distributed.make_round_fn` / `make_round_fn_ab`). The plan must carry
+    `n_bands` — the static band count of the widest chunk — which the
+    scheduler knows only after partitioning (use `dataclasses.replace`)."""
+    if plan.backend != "distributed":
+        raise ValueError(f"round_executor needs a distributed plan, got "
+                         f"backend {plan.backend!r}")
+    if plan.n_bands is None:
+        raise ValueError("distributed plan lacks n_bands: "
+                         "dataclasses.replace(plan, n_bands=...) after "
+                         "partitioning")
+    from repro.core import distributed
+
+    if plan.kind == "ab":
+        return distributed.make_round_fn_ab(plan, mesh, axis)
+    return distributed.make_round_fn(plan, mesh, axis)

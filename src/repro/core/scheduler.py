@@ -1,11 +1,13 @@
 """Anytime distributed scheduler: rounds, progress, checkpoint, elasticity.
 
-Drives `distributed.make_round_fn` over an `AnytimePlan`:
+Builds a distributed-backend `SweepPlan` (core.plan) and steps the SPMD
+round function the plan executor provides (`plan.round_executor`) over an
+`AnytimePlan` of equal-work chunks:
 
   - every chunk is TWO-SIDED: each streamed cell updates both profile sides
     (row and column for self-joins; A's and B's profiles for AB joins), so a
     completed plan IS the exact answer — there is no reversed-series finish
-    phase (`finish_reverse` survives only as a deprecated no-op);
+    phase (the long-deprecated `finish_reverse` no-op is gone);
   - after every round the merged profile is a VALID interruptible answer
     (SCRIMP's anytime property, preserved by interleaved chunk order);
   - progress is a per-chunk done-bitmap; (profile, bitmap) checkpoints make
@@ -23,17 +25,16 @@ import dataclasses
 import json
 import os
 import tempfile
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import partition
+from repro.core import plan as plan_mod
 from repro.core.matrix_profile import ProfileState
 from repro.core.partition import AnytimePlan
 from repro.core.zstats import compute_cross_stats_host, compute_stats_host
-from repro.core.distributed import make_round_fn, make_round_fn_ab
 
 
 @dataclasses.dataclass
@@ -102,6 +103,9 @@ class AnytimeScheduler:
         # static band count = widest chunk in bands
         widths = [max(0, k1 - k0) for k0, k1 in self.plan.chunks]
         self.n_bands = max(1, -(-max(widths) // band)) if widths else 1
+        self.sweep_plan = plan_mod.plan_sweep(
+            self.window, self.l, self.l_b, exclusion=self.exclusion,
+            band=band, backend="distributed")
         self._round_fn = self._make_round_fn()
         self.state = SchedulerState(
             plan=self.plan,
@@ -112,10 +116,13 @@ class AnytimeScheduler:
         )
 
     def _make_round_fn(self):
-        if self.ab:
-            return make_round_fn_ab(self.mesh, self.n_bands, self.band,
-                                    self.axis)
-        return make_round_fn(self.mesh, self.n_bands, self.band, self.axis)
+        """One SPMD round step via the plan executor — the scheduler never
+        touches the low-level worker sweeps directly. `n_bands` (static band
+        count of the widest chunk) is only known post-partitioning, so it is
+        stamped into the plan here."""
+        self.sweep_plan = dataclasses.replace(self.sweep_plan,
+                                              n_bands=self.n_bands)
+        return plan_mod.round_executor(self.sweep_plan, self.mesh, self.axis)
 
     @property
     def _round_stats(self):
@@ -193,20 +200,6 @@ class AnytimeScheduler:
             self.step_round()
         return self.state
 
-    def finish_reverse(self) -> ProfileState:
-        """DEPRECATED no-op, kept for API compatibility.
-
-        Chunks are two-sided: every round already merges both the row and the
-        column half of its swept cells, so there is no reversed-series pass
-        left to run — `run()` alone produces the exact profile. Returns the
-        current merged profile unchanged.
-        """
-        warnings.warn(
-            "AnytimeScheduler.finish_reverse() is a deprecated no-op: fused "
-            "two-sided chunks complete both profile halves during run()",
-            DeprecationWarning, stacklevel=2)
-        return self.state.profile
-
     # -- fault tolerance / elasticity ---------------------------------------
 
     def checkpoint(self, path: str) -> None:
@@ -230,7 +223,8 @@ class AnytimeScheduler:
                                       # done-chunks carry BOTH profile
                                       # halves; pre-fusion checkpoints
                                       # (row half only, column half owed to
-                                      # finish_reverse) must not resume
+                                      # a reversed finish pass) must not
+                                      # resume
                                       fused=True)),
                  **extra)
         tmp.close()
@@ -246,8 +240,8 @@ class AnytimeScheduler:
         assert meta["l"] == self.l and meta["window"] == self.window
         assert meta.get("l_b") == self.l_b
         # refuse pre-fusion checkpoints: their done-chunks contributed only
-        # the row half (the column half was owed to finish_reverse, now a
-        # no-op), so resuming them would silently drop lower-triangle
+        # the row half (the column half was owed to the deleted reversed
+        # finish pass), so resuming them would silently drop lower-triangle
         # updates. ValueError, not assert — this must survive python -O.
         if not meta.get("fused"):
             raise ValueError(

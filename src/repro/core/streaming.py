@@ -35,7 +35,9 @@ class StreamingProfile:
         self._ts: list[float] = []
         self._profile = np.zeros((0,), np.float64)     # squared distance
         self._index = np.zeros((0,), np.int64)
-        self._ref_cache = None   # (n_points, windows-derived state) for query()
+        # query()'s resident corpus-side state: stats/windows + per-shape
+        # SweepPlans, keyed by (n_points, normalize) — see _ref_state()
+        self._ref_cache = None
 
     # -- internals -----------------------------------------------------------
 
@@ -45,31 +47,25 @@ class StreamingProfile:
         idx = np.arange(l)[:, None] + np.arange(self.m)[None, :]
         return t[idx]
 
-    def _sqdist_rows(self, wa: np.ndarray, wb: np.ndarray | None,
-                     bc=None, bn=None) -> np.ndarray:
-        """Squared distances between window matrices, (p, m) x (q, m) -> (p, q).
-
-        The single home of the degenerate-window conventions (flat windows
-        correlate with nothing; denominators floored) for BOTH the append
-        path and query(). The b side may come precomputed (bc/bn from the
-        query cache): centered windows + norms when normalizing, raw windows
-        + per-window sum-of-squares otherwise.
+    def _sqdist_rows(self, wa: np.ndarray, wb: np.ndarray) -> np.ndarray:
+        """Squared distances between window matrices, (p, m) x (q, m) -> (p, q)
+        — the APPEND path's block evaluator (query() runs through the sweep
+        executor instead, so the degenerate-window conventions live in
+        zstats/core.plan, not here twice). Flat windows correlate with
+        nothing; denominators floored.
         """
         if self.normalize:
             ac = wa - wa.mean(axis=1, keepdims=True)
             an = np.linalg.norm(ac, axis=1)
-            if bc is None:
-                bc = wb - wb.mean(axis=1, keepdims=True)
-                bn = np.linalg.norm(bc, axis=1)
+            bc = wb - wb.mean(axis=1, keepdims=True)
+            bn = np.linalg.norm(bc, axis=1)
             denom = np.maximum(an[:, None] * bn[None, :], 1e-300)
             corr = np.where((an[:, None] > 0) & (bn[None, :] > 0),
                             ac @ bc.T / denom, 0.0)
             return 2.0 * self.m * (1.0 - np.clip(corr, -1.0, 1.0))
         # ||a-b||^2 expansion — avoids the (p, q, m) intermediate
-        if bc is None:
-            bc, bn = wb, (wb * wb).sum(axis=1)
-        return ((wa * wa).sum(axis=1)[:, None] + bn[None, :]
-                - 2.0 * wa @ bc.T)
+        return ((wa * wa).sum(axis=1)[:, None]
+                + (wb * wb).sum(axis=1)[None, :] - 2.0 * wa @ wb.T)
 
     # -- public ---------------------------------------------------------------
 
@@ -115,17 +111,49 @@ class StreamingProfile:
         self._profile[:l_new][upd] = col_vals[upd]
         self._index[:l_new][upd] = l_old + col_best[upd]
 
+    def _ref_state(self) -> dict:
+        """Corpus-side sweep state, invariant between appends — cached keyed
+        by BOTH corpus length and distance mode (a `normalize` flip after a
+        query used to serve stale centered windows), with the per-query-shape
+        `SweepPlan`s cached alongside so repeated query() calls skip planning
+        entirely."""
+        import jax.numpy as jnp
+
+        from repro.core.zstats import compute_stats_host
+
+        n = len(self._ts)
+        cache = self._ref_cache
+        if (cache is None or cache["n"] != n
+                or cache["normalize"] != self.normalize):
+            t = np.asarray(self._ts, np.float64)
+            cache = dict(n=n, normalize=self.normalize, plans={})
+            if self.normalize:
+                cache["stats"], cache["windows"] = compute_stats_host(
+                    t, self.m, min_subsequences=1,
+                    return_centered_windows=True)
+            else:
+                cache["ts"] = jnp.asarray(t, jnp.float32)
+            self._ref_cache = cache
+        return cache
+
     def query(self, values) -> tuple[np.ndarray, np.ndarray]:
         """Score a query stream against the FIXED reference corpus — the
-        series appended so far — WITHOUT appending it: an AB join with the
-        streaming state as the B side (the serving primitive: reference
-        corpus stays resident, queries fly through).
+        series appended so far — WITHOUT appending it: an AB `SweepPlan`
+        with the streaming state as the resident B side (the serving
+        primitive: reference corpus stays cached, queries fly through the
+        plan executor, so the distance conventions are the engine's own —
+        zstats + core.plan — not a NumPy re-implementation).
 
         For each of the query's l_q = len(q) - m + 1 subsequences, returns
         its distance to the nearest reference subsequence and that
         reference's start index: (distances (l_q,), ref_indices (l_q,)).
         No exclusion zone — query and reference are different series.
         """
+        import jax.numpy as jnp
+
+        from repro.core import plan as plan_mod
+        from repro.core.zstats import compute_stats_host, cross_stats_from_parts
+
         q = np.atleast_1d(np.asarray(values, np.float64))
         if q.ndim != 1 or q.shape[0] < self.m:
             raise ValueError(f"query must be 1-D with >= {self.m} points, "
@@ -133,23 +161,28 @@ class StreamingProfile:
         if len(self._ts) < self.m:
             raise ValueError("reference corpus has no complete window yet")
         lq = q.shape[0] - self.m + 1
-        idx = np.arange(lq)[:, None] + np.arange(self.m)[None, :]
-        wq = q[idx]                                   # (l_q, m)
-        # reference-side state is invariant between appends — cache it
-        # (keyed by corpus length) so repeated queries reuse it
-        n = len(self._ts)
-        if self._ref_cache is None or self._ref_cache[0] != n:
-            w_ref = self._windows()                   # (l_ref, m)
-            if self.normalize:
-                rc = w_ref - w_ref.mean(axis=1, keepdims=True)
-                self._ref_cache = (n, rc, np.linalg.norm(rc, axis=1))
+        cache = self._ref_state()
+        l_ref = cache["n"] - self.m + 1
+        plan = cache["plans"].get(lq)
+        if plan is None:
+            plan = plan_mod.plan_sweep(self.m, lq, l_ref, exclusion=0,
+                                       normalize=self.normalize,
+                                       harvest="row")
+            cache["plans"][lq] = plan
+        if self.normalize:
+            s_q, w_q = compute_stats_host(q, self.m, min_subsequences=1,
+                                          return_centered_windows=True)
+            if plan.swap_ab:       # corpus shorter than the query: B on rows
+                stats = cross_stats_from_parts(cache["stats"],
+                                               cache["windows"], s_q, w_q)
             else:
-                self._ref_cache = (n, w_ref, (w_ref * w_ref).sum(axis=1))
-        _, bc, bn = self._ref_cache
-        d2 = self._sqdist_rows(wq, None, bc=bc, bn=bn)
-        best = np.argmin(d2, axis=1)
-        dist = np.sqrt(np.maximum(d2[np.arange(lq), best], 0.0))
-        return dist, best
+                stats = cross_stats_from_parts(s_q, w_q, cache["stats"],
+                                               cache["windows"])
+        else:
+            stats = (jnp.asarray(q, jnp.float32), cache["ts"])
+        res = plan_mod.execute(plan, stats)
+        return (np.asarray(res.dist, np.float64),
+                np.asarray(res.index, np.int64))
 
     @property
     def n_subsequences(self) -> int:

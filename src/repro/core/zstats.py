@@ -100,24 +100,41 @@ def self_cross(stats: ZStats) -> CrossStats:
     return CrossStats(a=stats, b=stats, cov0s=cov0s)
 
 
+def cross_stats_from_parts(stats_a: ZStats, wa, stats_b: ZStats, wb,
+                           out_dtype=None) -> CrossStats:
+    """Assemble a `CrossStats` from per-series parts — the `(stats, centered
+    windows)` pairs `compute_stats_host(..., return_centered_windows=True)`
+    yields. This is the seam that lets a RESIDENT side be computed once and
+    reused across joins (StreamingProfile.query caches its corpus side this
+    way); `compute_cross_stats_host` is the build-both-sides convenience.
+
+    The seeds are exact f64 centered-window dots, so the device recurrence
+    restarts from well-conditioned values on every diagonal. Each stats pass
+    centers its series around its own mean; the seeds are dot products of
+    PER-WINDOW-centered rows, which that global shift cannot change.
+    """
+    import numpy as np
+
+    neg = wa[1:] @ wb[0]            # k = -1 .. -(l_a-1), start cells (-k, 0)
+    pos = wb @ wa[0]                # k = 0 .. l_b-1,     start cells (0, k)
+    cov0s = np.concatenate([neg[::-1], pos]).astype(np.float32)
+    dt = jnp.float32 if out_dtype is None else out_dtype
+    return CrossStats(a=stats_a, b=stats_b, cov0s=jnp.asarray(cov0s, dt))
+
+
 def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None) -> CrossStats:
     """Build AB-join streams host-side in f64 (same rationale as
-    `compute_stats_host`); the seeds are exact centered dots, so the device
-    recurrence restarts from well-conditioned values on every diagonal.
+    `compute_stats_host`), then assemble via `cross_stats_from_parts`.
 
     The seed dots reuse the centered-window matrices the stats pass already
     built (`return_centered_windows=True`), so each series' (l, m) window
     matrix is materialized exactly ONCE — half the AB host-prep time and
-    peak memory of building it again for the seeds. Note the stats pass
-    centers each series around its own mean; the seeds are dot products of
-    PER-WINDOW-centered rows, which that global shift cannot change.
+    peak memory of building it again for the seeds.
 
     Either side may be as short as one window (n >= m): query-against-corpus
     joins legitimately use a short side in both orientations (short query vs
     corpus, long stream vs small reference set).
     """
-    import numpy as np
-
     m = int(window)
     sa, wa = compute_stats_host(ts_a, m, out_dtype=out_dtype,
                                 min_subsequences=1,
@@ -125,11 +142,7 @@ def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None) -> CrossSt
     sb, wb = compute_stats_host(ts_b, m, out_dtype=out_dtype,
                                 min_subsequences=1,
                                 return_centered_windows=True)
-    neg = wa[1:] @ wb[0]            # k = -1 .. -(l_a-1), start cells (-k, 0)
-    pos = wb @ wa[0]                # k = 0 .. l_b-1,     start cells (0, k)
-    cov0s = np.concatenate([neg[::-1], pos]).astype(np.float32)
-    dt = jnp.float32 if out_dtype is None else out_dtype
-    return CrossStats(a=sa, b=sb, cov0s=jnp.asarray(cov0s, dt))
+    return cross_stats_from_parts(sa, wa, sb, wb, out_dtype=out_dtype)
 
 
 def moving_mean_var(ts: jax.Array, m: int) -> tuple[jax.Array, jax.Array]:

@@ -22,10 +22,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.zstats import (
-    CrossStats, ZStats, compute_cross_stats_host, compute_stats_host,
-    corr_to_dist,
-)
+from repro.core.zstats import CrossStats, ZStats, compute_stats_host
 from repro.kernels import natsa_mp
 
 NEG = natsa_mp.NEG
@@ -97,22 +94,21 @@ def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
                          col_tile: int | None = None, interpret: bool = True):
     """Full matrix profile via the Pallas kernel. -> (distance (l,), idx (l,)).
 
-    One launch, one pass over the streams: no reversed-series stats, no
-    second launch. Matches core.matrix_profile / the brute-force oracle
-    (tests enforce it). Long series get a BANKED column accumulator
-    (col_tile-bounded VMEM block per grid step; `auto_col_tile` policy).
+    Thin entry: builds a kernel-backend `SweepPlan` (the planner pins the
+    `auto_col_tile` banking choice into the plan) and executes it — one
+    launch, one pass over the streams: no reversed-series stats, no second
+    launch. Matches core.matrix_profile / the brute-force oracle (tests
+    enforce it).
     """
-    m = int(window)
-    excl = max(1, -(-m // 4)) if exclusion is None else int(exclusion)
-    stats = compute_stats_host(np.asarray(ts), m)
+    from repro.core import plan as plan_mod
 
-    corr_r, idx_r, corr_c, idx_c = rowmax_from_stats(
-        stats, excl=excl, it=it, dt=dt, col_tile=col_tile,
-        interpret=interpret)
-    corr, idx = _merge_corr(corr_r, idx_r, corr_c, idx_c)
-    dist = jnp.where(corr <= NEG + 1e-6, jnp.inf,
-                     corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
-    return dist, idx
+    m = int(window)
+    arr = np.asarray(ts)
+    plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
+                               backend="kernel", it=it, dt=dt,
+                               col_tile=col_tile, interpret=interpret)
+    res = plan_mod.execute(plan, compute_stats_host(arr, m))
+    return res.dist, res.index
 
 
 # -- AB join through the kernel ----------------------------------------------
@@ -204,28 +200,21 @@ def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     computed tiles); outputs are mapped back, so callers never see the
     orientation.
     """
+    from repro.core import plan as plan_mod
+
     m = int(window)
-    excl = 0 if exclusion is None else int(exclusion)
     a, b = np.asarray(ts_a), np.asarray(ts_b)
-    if b.shape[0] < a.shape[0]:
-        # row tiles cover the SHORT side: an (l_a/it x (l_a+l_b)/dt) grid
-        # shrinks to (l_b/it x (l_a+l_b)/dt) — the kernel-side row clamp
-        d_b, i_b, d_a, i_a = natsa_ab_join(b, a, m, exclusion=excl, it=it,
-                                           dt=dt, col_tile=col_tile,
-                                           interpret=interpret, return_b=True)
-        return (d_a, i_a, d_b, i_b) if return_b else (d_a, i_a)
-    cross = compute_cross_stats_host(a, b, m)
-    corr, idx, corr_b, idx_b = ab_rowmax_from_stats(
-        cross, exclusion=excl, it=it, dt=dt, col_tile=col_tile,
-        interpret=interpret)
-
-    def dist(c):
-        return jnp.where(c <= NEG + 1e-6, jnp.inf,
-                         corr_to_dist(jnp.clip(c, -1.0, 1.0), m))
-
+    plan = plan_mod.plan_sweep(m, a.shape[0] - m + 1, b.shape[0] - m + 1,
+                               exclusion=exclusion, backend="kernel",
+                               harvest="both" if return_b else "row",
+                               it=it, dt=dt, col_tile=col_tile,
+                               interpret=interpret)
+    # swap_ab: row tiles cover the SHORT side — an (l_a/it x (l_a+l_b)/dt)
+    # grid shrinks to (l_b/it x (l_a+l_b)/dt), the kernel-side row clamp
+    res = plan_mod.execute(plan, plan_mod.cross_stats_for(plan, a, b))
     if return_b:
-        return dist(corr), idx, dist(corr_b), idx_b
-    return dist(corr), idx
+        return res.dist, res.index, res.dist_b, res.index_b
+    return res.dist, res.index
 
 
 VMEM_BYTES = 128 * 2**20 // 8   # ~16 MiB/core, keep ~50% headroom

@@ -38,8 +38,8 @@ def test_ab_rounds_monotone_and_exact(mesh):
             assert (d <= prev + 1e-5).all(), "anytime merge must be monotone"
         prev = d
         fracs.append(st.fraction_done)
-    with pytest.warns(DeprecationWarning):
-        assert sch.finish_reverse() is sch.state.profile   # deprecated no-op
+    # the deprecated finish_reverse no-op is gone: run() alone is the answer
+    assert not hasattr(sch, "finish_reverse")
     p, idx = sch.distance_profile()
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)

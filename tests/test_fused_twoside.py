@@ -199,8 +199,8 @@ def test_no_reversed_stats_in_production_paths():
         assert "[::-1]" not in src, fn.__name__
     src = inspect.getsource(scheduler.AnytimeScheduler)
     assert "stats_rev" not in src
-    # finish_reverse survives only as a deprecated no-op
-    assert "deprecated" in scheduler.AnytimeScheduler.finish_reverse.__doc__.lower()
+    # the deprecated finish_reverse no-op has been deleted outright
+    assert not hasattr(scheduler.AnytimeScheduler, "finish_reverse")
 
 
 def test_batch_profile_single_sweep_matches_loop():
@@ -241,7 +241,7 @@ def _mesh1():
 
 
 def test_scheduler_run_alone_is_exact():
-    """No finish_reverse: run() by itself must hit the oracle."""
+    """No reverse finish phase: run() by itself must hit the oracle."""
     ts = _series(420, seed=21)
     m = 16
     sch = __import__("repro.core.scheduler", fromlist=["AnytimeScheduler"]) \
@@ -252,9 +252,7 @@ def test_scheduler_run_alone_is_exact():
     p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), m, exclusion=4)
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)
-    with pytest.warns(DeprecationWarning):
-        out = sch.finish_reverse()
-    assert out is sch.state.profile
+    assert not hasattr(sch, "finish_reverse")
 
 
 def test_scheduler_checkpoint_resume_mid_fused_round(tmp_path):

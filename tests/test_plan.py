@@ -1,0 +1,309 @@
+"""SweepPlan planner + executor seam tests.
+
+Two guarantees:
+  1. EQUIVALENCE — every public entry point now builds a `SweepPlan` and runs
+     it through `plan.execute`; the results must be BITWISE-equal to calling
+     the low-level sweeps directly with the same knobs (the pre-refactor
+     entry bodies), and oracle-correct (fixtures reused from test_ab_join).
+  2. PLANNER CHOICES — `plan_sweep`'s backend / orientation / col_tile
+     decisions are pinned table-driven across the shapes that motivated them
+     (skewed a4096/b512 AB joins, the n=16384 banked-column regime, batch).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from test_ab_join import _series, oracle_ab
+
+from repro.core import plan as plan_mod
+from repro.core.matrix_profile import (
+    DEFAULT_BAND, DEFAULT_RESEED, ab_join, ab_join_from_stats,
+    ab_join_rowstream, batch_ab_join, batch_profile, matrix_profile,
+    matrix_profile_nonnorm, nonnorm_profile_from_ts, profile_from_stats,
+)
+from repro.core.zstats import (
+    compute_cross_stats_host, compute_stats_host, corr_to_dist,
+)
+from repro.kernels import ops
+
+
+# -- 1. plan-built results == direct low-level calls (bitwise) ----------------
+
+
+def test_matrix_profile_equals_direct_engine_call():
+    ts = _series(400, seed=1)
+    m, excl = 16, 4
+    p, i = matrix_profile(ts, m, excl)
+    stats = compute_stats_host(ts, m)
+    merged = profile_from_stats(stats, excl, DEFAULT_BAND, DEFAULT_RESEED)
+    np.testing.assert_array_equal(np.asarray(p),
+                                  np.asarray(merged.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(merged.index))
+
+
+def test_matrix_profile_nonnorm_equals_direct_engine_call():
+    ts = _series(300, seed=2, kind="noise")
+    m, excl = 16, 4
+    p, i = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
+    pd, idd = nonnorm_profile_from_ts(jnp.asarray(ts, jnp.float32), m, excl)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pd))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(idd))
+
+
+def test_ab_join_equals_direct_rowstream_call():
+    """Skewed shape below AB_ROWSTREAM_MAX_ROWS: the planner must pick the
+    row-streamed scan with the short side on rows, bit-for-bit what the
+    pre-refactor dispatch produced."""
+    a = _series(500, seed=3)
+    b = _series(120, seed=4)
+    m = 12
+    da, ia, db, ib = ab_join(a, b, m, return_b=True)
+    cross = compute_cross_stats_host(b, a, m)        # short side on rows
+    sb, sa = ab_join_rowstream(cross, 0, DEFAULT_RESEED)
+    np.testing.assert_array_equal(np.asarray(da),
+                                  np.asarray(sa.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(sa.index))
+    np.testing.assert_array_equal(np.asarray(db),
+                                  np.asarray(sb.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(ib), np.asarray(sb.index))
+
+
+def test_engine_backend_plan_equals_direct_banded_call():
+    """Forcing the band-diagonal engine through a plan == ab_join_from_stats
+    direct (the path huge near-square joins and the scheduler use)."""
+    a = _series(420, seed=5)
+    b = _series(200, seed=6)
+    m = 14
+    cross = compute_cross_stats_host(a, b, m)
+    plan = plan_mod.plan_sweep(m, 420 - m + 1, 200 - m + 1, backend="engine")
+    res = plan_mod.execute(plan, cross)
+    sa, sb = ab_join_from_stats(cross, 0, DEFAULT_BAND, DEFAULT_RESEED,
+                                True, True, None)
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  np.asarray(sa.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(res.dist_b),
+                                  np.asarray(sb.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(res.index_b),
+                                  np.asarray(sb.index))
+
+
+def test_batch_entries_equal_direct_vmap():
+    import jax
+
+    stack = np.stack([_series(260, seed=i, kind=k)
+                      for i, k in enumerate(["walk", "noise", "sine"])])
+    m, excl = 14, 3
+    bp, bi = batch_profile(stack, m, exclusion=excl)
+    stats = [compute_stats_host(s, m) for s in stack]
+    st_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stats)
+    merged = jax.vmap(
+        lambda s: profile_from_stats(s, excl, DEFAULT_BAND, DEFAULT_RESEED)
+    )(st_stack)
+    np.testing.assert_array_equal(np.asarray(bp),
+                                  np.asarray(merged.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(merged.index))
+
+    b = np.stack([_series(90, seed=10 + i, kind="sine") for i in range(3)])
+    dab, iab = batch_ab_join(stack, b, m)
+    crosses = [compute_cross_stats_host(ra, rb, m)
+               for ra, rb in zip(stack, b)]
+    c_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *crosses)
+    sa, _ = jax.vmap(
+        lambda c: ab_join_from_stats(c, 0, DEFAULT_BAND, DEFAULT_RESEED,
+                                     False, True, None))(c_stack)
+    np.testing.assert_array_equal(np.asarray(dab),
+                                  np.asarray(sa.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(iab), np.asarray(sa.index))
+
+
+def test_kernel_entries_equal_direct_kernel_calls():
+    ts = _series(360, seed=7)
+    m, excl = 16, 4
+    p, i = ops.natsa_matrix_profile(ts, m, exclusion=excl, it=128, dt=8)
+    stats = compute_stats_host(ts, m)
+    cr, ir, cc, ic = ops.rowmax_from_stats(stats, excl=excl, it=128, dt=8)
+    corr, idx = ops._merge_corr(cr, ir, cc, ic)
+    dist = jnp.where(corr <= ops.NEG + 1e-6, jnp.inf,
+                     corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(idx))
+
+    b = _series(140, seed=8, kind="sine")
+    da, ia, db, ib = ops.natsa_ab_join(ts, b, m, it=64, dt=8, return_b=True)
+    cross = compute_cross_stats_host(b, ts, m)       # short side on rows
+    cb, ixb, ca, ixa = ops.ab_rowmax_from_stats(cross, exclusion=0,
+                                                it=64, dt=8)
+
+    def d(c):
+        return jnp.where(c <= ops.NEG + 1e-6, jnp.inf,
+                         corr_to_dist(jnp.clip(c, -1.0, 1.0), m))
+
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(d(ca)))
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ixa))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(d(cb)))
+    np.testing.assert_array_equal(np.asarray(ib), np.asarray(ixb))
+
+
+def test_streaming_query_equals_direct_rowstream():
+    from repro.core.streaming import StreamingProfile
+
+    rng = np.random.default_rng(9)
+    ref = np.cumsum(rng.normal(size=240))
+    q = np.cumsum(rng.normal(size=70))
+    m = 12
+    sp = StreamingProfile(m, 3)
+    sp.append(ref)
+    d, idx = sp.query(q)
+    cross = compute_cross_stats_host(q, ref, m)      # query side is shorter
+    sa, _ = ab_join_rowstream(cross, 0, DEFAULT_RESEED)
+    np.testing.assert_array_equal(d, np.asarray(sa.to_distance(m), np.float64))
+    np.testing.assert_array_equal(idx, np.asarray(sa.index, np.int64))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 16, 25]),
+       st.sampled_from(["walk", "noise", "sine", "flat"]))
+def test_property_entry_equals_plan_execute_and_oracle(seed, m, kind):
+    """For random shapes/kinds: the public entry == an explicitly planned
+    execute (same plan the entry builds) == the numpy oracle."""
+    na, nb = 180, 110
+    a = _series(na, seed=seed, kind=kind)
+    b = _series(nb, seed=seed + 1, kind=kind)
+    p, idx = ab_join(a, b, m)
+    plan = plan_mod.plan_sweep(m, na - m + 1, nb - m + 1, harvest="row")
+    stats = (compute_cross_stats_host(b, a, m) if plan.swap_ab
+             else compute_cross_stats_host(a, b, m))
+    res = plan_mod.execute(plan, stats)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(res.dist))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(res.index))
+    p_ref, _ = oracle_ab(a, b, m)
+    np.testing.assert_allclose(np.asarray(p), p_ref, rtol=2e-3, atol=2e-3)
+
+
+# -- 2. planner choices, table-driven -----------------------------------------
+
+
+@pytest.mark.parametrize("kwargs,expect", [
+    # skewed a4096/b512 AB join (l = n - m + 1, m = 128): rowstream, short
+    # side (B) onto rows
+    (dict(window=128, l_a=3969, l_b=385),
+     dict(backend="rowstream", swap_ab=True, exclusion=0)),
+    # mirrored skew: still rowstream, no swap needed
+    (dict(window=128, l_a=385, l_b=3969),
+     dict(backend="rowstream", swap_ab=False)),
+    # huge near-square rectangle: band engine (row clamp handles orientation)
+    (dict(window=128, l_a=8000, l_b=6000),
+     dict(backend="engine", swap_ab=False)),
+    # batch pins the engine even on rowstream-eligible skew (vmap path)
+    (dict(window=64, l_a=961, l_b=449, batch=8),
+     dict(backend="engine", batch=8)),
+    # nonnorm is engine-only
+    (dict(window=16, l_a=391, l_b=81, normalize=False),
+     dict(backend="engine", swap_ab=False)),
+    # unclamped A/B-comparison plan falls back to the band engine
+    (dict(window=16, l_a=391, l_b=81, clamp_rows=False),
+     dict(backend="engine", clamp_rows=False)),
+    # self-join defaults: engine, default exclusion, default band
+    (dict(window=128, l_a=16257),
+     dict(backend="engine", exclusion=32, band=DEFAULT_BAND, kind="self")),
+    # n=16384 self-join through the kernel: column accumulator BANKED at
+    # plan time (auto_col_tile policy pinned into the plan)
+    (dict(window=128, l_a=16257, backend="kernel"),
+     dict(backend="kernel", col_tile=4096)),
+    (dict(window=128, l_a=16257, backend="kernel", it=2048, dt=64),
+     dict(col_tile=2 * (2048 + 64))),
+    # short self-join through the kernel: flat single bank (pinned as 0)
+    (dict(window=16, l_a=500, backend="kernel"),
+     dict(col_tile=0)),
+    # kernel AB: orientation chosen at plan time, banking per span in ops
+    (dict(window=128, l_a=3969, l_b=385, backend="kernel"),
+     dict(backend="kernel", swap_ab=True, col_tile=None)),
+])
+def test_plan_sweep_choices(kwargs, expect):
+    kwargs = dict(kwargs)
+    window, l_a = kwargs.pop("window"), kwargs.pop("l_a")
+    l_b = kwargs.pop("l_b", None)
+    plan = plan_mod.plan_sweep(window, l_a, l_b, **kwargs)
+    for field, want in expect.items():
+        assert getattr(plan, field) == want, (field, getattr(plan, field))
+
+
+def test_plan_geometry_spans():
+    p = plan_mod.plan_sweep(16, 300, exclusion=4)
+    assert (p.k_min, p.k_max) == (4, 300)
+    q = plan_mod.plan_sweep(16, 300, 100)
+    assert (q.k_min, q.k_max) == (-299, 100)
+
+
+def test_scheduler_builds_distributed_plan():
+    from repro.core.scheduler import AnytimeScheduler
+    from repro.launch.mesh import make_worker_mesh
+
+    ts = _series(300, seed=11)
+    sch = AnytimeScheduler(ts, 16, make_worker_mesh(1), chunks_per_worker=2,
+                           band=16, exclusion=4)
+    p = sch.sweep_plan
+    assert p.backend == "distributed" and p.kind == "self"
+    assert p.band == 16 and p.exclusion == 4 and p.n_bands == sch.n_bands
+    ab = AnytimeScheduler(ts, 16, make_worker_mesh(1), ts_b=_series(150, 12),
+                          chunks_per_worker=2, band=16)
+    assert ab.sweep_plan.kind == "ab" and ab.sweep_plan.l_b == 150 - 16 + 1
+
+
+def test_streaming_query_cache_and_plan_reuse():
+    """Satellite: the corpus cache must invalidate on a `normalize` flip and
+    must memoize the plan per query shape."""
+    from repro.core.streaming import StreamingProfile
+
+    rng = np.random.default_rng(13)
+    sp = StreamingProfile(8, 2)
+    sp.append(rng.normal(size=80))
+    q = rng.normal(size=30)
+    sp.query(q)
+    cache = sp._ref_cache
+    assert cache["normalize"] is True and 23 in cache["plans"]
+    sp.query(q)
+    assert sp._ref_cache is cache            # cache + plan reused
+    d_norm, _ = sp.query(q)
+    sp.normalize = False                     # mode flip must invalidate
+    d_raw, _ = sp.query(q)
+    assert sp._ref_cache is not cache
+    assert sp._ref_cache["normalize"] is False
+    assert not np.allclose(d_norm, d_raw)    # raw vs z-norm really differ
+    sp.normalize = True
+    sp.query(q)
+    assert sp._ref_cache["normalize"] is True
+
+
+# -- guard rails --------------------------------------------------------------
+
+
+def test_planner_and_executor_reject_invalid_combinations():
+    with pytest.raises(ValueError, match="backend"):
+        plan_mod.plan_sweep(16, 100, backend="warp")
+    with pytest.raises(ValueError, match="z-normalized"):
+        plan_mod.plan_sweep(16, 100, 50, normalize=False, backend="kernel")
+    with pytest.raises(ValueError, match="rectangle"):
+        plan_mod.plan_sweep(16, 100, backend="rowstream")
+    with pytest.raises(ValueError, match="batch"):
+        plan_mod.plan_sweep(16, 100, 50, batch=4, backend="kernel")
+    with pytest.raises(ValueError, match="z-normalized only"):
+        plan_mod.plan_sweep(16, 100, batch=4, normalize=False)
+    with pytest.raises(ValueError, match="cross_stats_for"):
+        plan_mod.cross_stats_for(plan_mod.plan_sweep(16, 100), None, None)
+    ts = _series(100, seed=14)
+    stats = compute_stats_host(ts, 16)
+    with pytest.raises(TypeError, match="CrossStats"):
+        plan_mod.execute(plan_mod.plan_sweep(16, 50, 50), stats)
+    dist_plan = plan_mod.plan_sweep(16, 85, backend="distributed")
+    with pytest.raises(ValueError, match="round"):
+        plan_mod.execute(dist_plan, stats)
+    with pytest.raises(ValueError, match="n_bands"):
+        plan_mod.round_executor(dist_plan, mesh=None)
+    with pytest.raises(ValueError, match="distributed"):
+        plan_mod.round_executor(plan_mod.plan_sweep(16, 85), mesh=None)
+    assert dataclasses.replace(dist_plan, n_bands=4).n_bands == 4

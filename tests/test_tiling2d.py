@@ -104,12 +104,20 @@ def test_ab_row_tile_bounds():
 
 
 def test_nonnorm_clamped_equals_unclamped():
+    """The unclamped full-height sweep survives only as an A/B-comparison
+    PLAN (`plan_sweep(..., clamp_rows=False)`); `ab_join` itself no longer
+    threads the legacy knob."""
+    from repro.core import plan as plan_mod
+
     a = _series(400, seed=1, kind="noise")
     b = _series(90, seed=2, kind="noise")
     m = 10
     da_c, ia_c, db_c, ib_c = ab_join(a, b, m, normalize=False, return_b=True)
-    da_u, ia_u, db_u, ib_u = ab_join(a, b, m, normalize=False, return_b=True,
-                                     clamp_rows=False)
+    plan_u = plan_mod.plan_sweep(m, 400 - m + 1, 90 - m + 1, normalize=False,
+                                 clamp_rows=False)
+    res_u = plan_mod.execute(
+        plan_u, (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)))
+    da_u, db_u = res_u.dist, res_u.dist_b
     # agreement to f32 cumsum reassociation (tile lengths differ)
     np.testing.assert_allclose(np.asarray(da_c), np.asarray(da_u), atol=1e-4)
     np.testing.assert_allclose(np.asarray(db_c), np.asarray(db_u), atol=1e-4)
