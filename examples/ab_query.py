@@ -1,10 +1,12 @@
 """AB-join quickstart: query a reference corpus, batch a fleet of series.
 
-Three serving-shaped workloads on synthetic telemetry:
+Three serving-shaped workloads on synthetic telemetry, all through the
+`ProfileResult` API:
 
   1. `ab_join`     — which part of the reference corpus does each piece of
                      the query stream resemble most? (cross-series join,
-                     no exclusion zone)
+                     no exclusion zone; `return_b=True` rides B's profile
+                     and `k=3` exact top-k neighbor sets on the same sweep)
   2. `StreamingProfile.query` — same question against an append-only
                      reference that keeps growing between queries
   3. `batch_profile` — self-join profiles for a whole fleet of series in
@@ -48,41 +50,48 @@ def main():
     print(f"reference n={n_ref}, query n={n_q}, window m={m}")
 
     # 1. AB join via the band engine — ONE sweep yields both directions
-    dist, idx, db, ib = ab_join(query, ref, m, return_b=True)
-    best_q = int(np.argmin(np.asarray(dist)))
+    #    plus exact top-3 neighbor sets per query window
+    res = ab_join(query, ref, m, return_b=True, k=3)
+    dist, idx = np.asarray(res.p), np.asarray(res.i)
+    best_q = int(np.argmin(dist))
     print(f"[ab_join] best query window starts at {best_q} "
           f"(chirp planted at 400), matches reference position "
           f"{int(idx[best_q])} (planted at 3000), "
           f"dist={float(dist[best_q]):.3f}")
     assert abs(best_q - 400) <= 3 and abs(int(idx[best_q]) - 3000) <= 3
+    print(f"[ab_join k=3] its top-3 reference matches: "
+          f"{np.asarray(res.topk_i[best_q]).tolist()} at distances "
+          f"{np.round(np.asarray(res.topk_p[best_q]), 3).tolist()}")
 
     # the SAME sweep also harvested the reference's profile against the
     # query (the column side of each band tile) — no second join needed
-    best_r = int(np.argmin(np.asarray(db)))
-    print(f"[ab_join return_b] best reference window {best_r} "
+    db = np.asarray(res.b_p)
+    best_r = int(np.argmin(db))
+    print(f"[ab_join .b_p] best reference window {best_r} "
           f"(chirp planted at 3000) matches query position "
-          f"{int(ib[best_r])}, dist={float(db[best_r]):.3f} — "
+          f"{int(res.b_i[best_r])}, dist={float(db[best_r]):.3f} — "
           f"B-side profile for free from the one-pass engine")
     assert abs(best_r - 3000) <= 3
 
     # same join through the Pallas kernel wrapper (interpret mode on CPU)
-    kdist, kidx = ops.natsa_ab_join(query, ref, m, it=256, dt=16)
-    err = np.abs(np.asarray(kdist) - np.asarray(dist))
+    kres = ops.natsa_ab_join(query, ref, m, it=256, dt=16)
+    err = np.abs(np.asarray(kres.p) - dist)
     print(f"[pallas kernel, interpret] max |Δ| vs engine: "
           f"{err[np.isfinite(err)].max():.2e}")
 
     # 2. streaming corpus + query scoring
     sp = StreamingProfile(m, exclusion=m // 4)
     sp.append(ref[:4000])
-    d1, i1 = sp.query(query)
+    q1 = sp.query(query)
     sp.append(ref[4000:])            # corpus grows, queries re-scored
-    d2, i2 = sp.query(query)
+    q2 = sp.query(query)
+    d1, d2 = q1.p, q2.p
     # a larger corpus minimizes over a superset, so scores only improve —
     # up to f32 engine jitter: query() runs the sweep executor, and the
     # grown corpus re-centers its streams (compute_stats_host shifts by the
     # global mean), so re-scored prefix distances wobble at f32 scale
     print(f"[streaming.query] best match {float(d2.min()):.3f} at query "
-          f"{int(np.argmin(d2))} -> ref {int(i2[np.argmin(d2)])}; "
+          f"{int(np.argmin(d2))} -> ref {int(q2.i[np.argmin(d2)])}; "
           f"growing the corpus only improves: "
           f"{bool((d2 <= d1 + 2e-3).all())}")
     assert (d2 <= d1 + 2e-3).all()
@@ -95,8 +104,8 @@ def main():
         for _ in range(6)
     ]).astype(np.float32)
     fleet[4, 600:632] = 0.5 * rng.normal(size=32)   # noise burst in series 4
-    bdist, _ = batch_profile(fleet, 32)
-    discord_scores = np.asarray(bdist).max(axis=1)
+    bres = batch_profile(fleet, 32)
+    discord_scores = np.asarray(bres.p).max(axis=1)
     worst = int(np.argmax(discord_scores))
     print(f"[batch_profile] fleet discord scores: "
           f"{np.round(discord_scores, 2)} -> series {worst} flagged "

@@ -2,6 +2,11 @@
 anomaly with matrix-profile discord discovery (threshold alarms miss it
 because the trace also drifts and oscillates).
 
+Profile API v2: the non-normalized profile comes back as a `ProfileResult`
+and `analytics.discords` ranks the anomalies straight off it — the
+`TelemetryMonitor` convenience wrapper (same machinery + z-score alarm
+gating) is shown alongside.
+
     PYTHONPATH=src python examples/anomaly_monitor.py
 """
 
@@ -12,6 +17,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro.core import analytics
+from repro.core.matrix_profile import matrix_profile_nonnorm
 from repro.core.monitor import TelemetryMonitor
 
 
@@ -26,15 +33,27 @@ def main():
     # silent data corruption: a small shape/level anomaly
     loss[400:424] += 0.12 * np.sin(t[400:424] * 2.1)
 
-    mon = TelemetryMonitor(window=24, min_history=128, zscore_alarm=3.0)
-    mon.extend(loss)
-    hits = mon.scan(top_k=3)
-    print(f"scanned {steps} steps of loss telemetry")
+    window = 24
+    # telemetry anomalies are amplitude/level changes -> NON-normalized
+    # profile (z-norm factors exactly those out)
+    result = matrix_profile_nonnorm(loss.astype(np.float32), window)
+    hits = analytics.discords(result, n=3)
+    print(f"scanned {steps} steps of loss telemetry "
+          f"(analytics.discords over a {result.kind}-join ProfileResult)")
     for h in hits:
-        print(f"  DISCORD at step {h.position} (z={h.zscore:.1f}, "
-              f"dist={h.score:.3f})")
+        print(f"  DISCORD at step {h.position} (dist={h.score:.3f}, "
+              f"nearest neighbour at step {h.neighbor})")
     assert hits and min(abs(h.position - 400) for h in hits) < 30, hits
     print("OK — corruption window (planted at step 400) flagged.")
+
+    # the TelemetryMonitor wrapper adds z-score alarm gating on top of the
+    # same analytics.discords call
+    mon = TelemetryMonitor(window=window, min_history=128, zscore_alarm=3.0)
+    mon.extend(loss)
+    alarms = mon.scan(top_k=3)
+    print(f"[TelemetryMonitor] alarmed: "
+          f"{[(h.position, round(h.zscore, 1)) for h in alarms]}")
+    assert alarms and min(abs(h.position - 400) for h in alarms) < 30
 
     mot = mon.motif()
     print(f"most-repeated telemetry pattern at steps {mot} "

@@ -1,7 +1,10 @@
 """Quickstart: exact matrix profile on a synthetic ECG-like series.
 
-Finds the planted motif pair and the planted discord using both the
-vectorized JAX engine and the NATSA Pallas kernel (interpret mode on CPU).
+Profile API v2: `matrix_profile` returns a rich `ProfileResult` — merged
+profile (`.p`/`.i`), LEFT/RIGHT split profiles, and (with `k > 1`) exact
+top-k neighbor sets — and the `analytics` layer turns it into motifs and
+discords without re-sweeping. The NATSA Pallas kernel (interpret mode on
+CPU) returns the same object.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,8 +16,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.matrix_profile import matrix_profile, top_discords, top_motif
-from repro.data import pipeline
+from repro.core import analytics
+from repro.core.matrix_profile import matrix_profile
 from repro.kernels import ops
 
 
@@ -36,24 +39,31 @@ def main():
 
     print(f"series n={n}, window m={m}")
 
-    profile, index = matrix_profile(ts, m)
-    i, j = top_motif(profile, index)
-    print(f"[engine] top motif pair: ({int(i)}, {int(j)})  "
-          f"(planted at 800 / 4200)")
-    disc = top_discords(profile, index, 3, exclusion=m)
-    print(f"[engine] top-3 discords: {[int(d) for d in disc]}  "
+    result = matrix_profile(ts, m, k=4)
+    motifs = analytics.top_motifs(result, max_motifs=1)
+    i, j = motifs[0].a, motifs[0].b
+    print(f"[engine] top motif pair: ({i}, {j})  (planted at 800 / 4200)")
+    discords = analytics.discords(result, n=3, exclusion=m)
+    print(f"[engine] top-3 discords: {[d.position for d in discords]}  "
           f"(noise window planted at ~2600)")
+    # the same sweep also harvested the split profiles and top-k sets
+    lp, rp = np.asarray(result.left_p), np.asarray(result.right_p)
+    assert (np.minimum(lp, rp) == np.asarray(result.p)).all()
+    print(f"[engine] left/right split: e.g. position {i} has left neighbor "
+          f"{int(result.left_i[i])} and right neighbor "
+          f"{int(result.right_i[i])}; top-{result.k} neighbors of {i}: "
+          f"{np.asarray(result.topk_i[i]).tolist()}")
 
-    kp, ki = ops.natsa_matrix_profile(ts, m, it=256, dt=16)
-    err = np.abs(np.asarray(kp) - np.asarray(profile))
+    kres = ops.natsa_matrix_profile(ts, m, it=256, dt=16)
+    err = np.abs(np.asarray(kres.p) - np.asarray(result.p))
     err = err[np.isfinite(err)]
     print(f"[pallas kernel, interpret] max |Δ| vs engine: {err.max():.2e}")
 
-    a, b = top_motif(kp, ki)
-    print(f"[pallas kernel] top motif pair: ({int(a)}, {int(b)})")
-    pair = sorted((int(i), int(j)))
+    kmot = analytics.top_motifs(kres, max_motifs=1)[0]
+    print(f"[pallas kernel] top motif pair: ({kmot.a}, {kmot.b})")
+    pair = sorted((i, j))
     assert abs(pair[0] - 800) < 40 and abs(pair[1] - 4200) < 40, pair
-    assert any(abs(int(d) - 2600) < m for d in disc), [int(d) for d in disc]
+    assert any(abs(d.position - 2600) < m for d in discords), discords
     print("OK — motif and discord recovered.")
 
 

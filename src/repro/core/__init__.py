@@ -1,13 +1,44 @@
-"""Core NATSA engine: matrix profile, planning, partitioning, scheduling."""
+"""Core NATSA engine: matrix profile, planning, results, analytics,
+partitioning, scheduling."""
 
+from repro.core import analytics  # noqa: F401
 from repro.core.matrix_profile import (  # noqa: F401
-    ProfileState, ab_join, batch_ab_join, batch_profile, matrix_profile,
-    top_discords, top_motif,
+    ProfileState, TopKState, ab_join, batch_ab_join, batch_profile,
+    matrix_profile, matrix_profile_nonnorm, top_discords, top_motif,
 )
 from repro.core.plan import (  # noqa: F401
     SweepPlan, SweepResult, execute, plan_sweep, round_executor,
 )
+from repro.core.result import HarvestSpec, ProfileResult  # noqa: F401
 from repro.core.zstats import (  # noqa: F401
     CrossStats, ZStats, compute_cross_stats_host, compute_stats, corr_to_dist,
     self_cross,
 )
+
+# The public surface, pinned by tests/test_api_surface.py: additions are
+# deliberate (extend the snapshot), removals/renames are breaking.
+__all__ = [
+    "CrossStats",
+    "HarvestSpec",
+    "ProfileResult",
+    "ProfileState",
+    "SweepPlan",
+    "SweepResult",
+    "TopKState",
+    "ZStats",
+    "ab_join",
+    "analytics",
+    "batch_ab_join",
+    "batch_profile",
+    "compute_cross_stats_host",
+    "compute_stats",
+    "corr_to_dist",
+    "execute",
+    "matrix_profile",
+    "matrix_profile_nonnorm",
+    "plan_sweep",
+    "round_executor",
+    "self_cross",
+    "top_discords",
+    "top_motif",
+]

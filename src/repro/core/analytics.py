@@ -1,0 +1,201 @@
+"""First analytics layer over `ProfileResult`: motifs, discords, regimes.
+
+The paper's framing (and the matrix-profile literature it builds on) is
+that ONE profile computation opens a whole family of mining tasks. This
+module is that family's first tier, consuming the rich `ProfileResult`
+every entry point now returns — no re-sweeps, host-side numpy only:
+
+  * `top_motifs`     — repeated-pattern discovery: the best-matching pairs,
+                       each grown into a motif GROUP via the result's top-k
+                       neighbor sets when present;
+  * `discords`       — anomaly detection: the positions most unlike
+                       everything else, greedily non-overlapping;
+  * `regimes`        — semantic segmentation: FLUSS-style corrected arc
+                       curve over the profile index pointers (Gharghabi et
+                       al., ICDM'17), valleys = regime boundaries.
+
+All three tolerate inf entries (positions whose exclusion zone covered the
+whole series) and operate on the merged profile; `regimes` prefers the
+nearest-neighbor pointers in `result.i`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.result import ProfileResult
+
+
+@dataclasses.dataclass(frozen=True)
+class Motif:
+    """One repeated pattern: the pair (a, b) realizing distance `d`, plus
+    the motif's wider neighbor group (start positions, best-first — from
+    the top-k neighbor sets when the result carries them)."""
+
+    a: int
+    b: int
+    d: float
+    neighbors: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Discord:
+    """One anomaly: the subsequence at `position` whose nearest neighbor is
+    `score` away (the larger, the more isolated); `neighbor` is that
+    nearest neighbor's start position (-1 if none)."""
+
+    position: int
+    score: float
+    neighbor: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Regimes:
+    """Segmentation output: `boundaries` (regime-change positions,
+    best-first) and the full corrected arc curve `cac` (low = likely
+    boundary; edges are pinned to 1)."""
+
+    boundaries: tuple[int, ...]
+    cac: np.ndarray
+
+
+def _check_self_1d(result: ProfileResult, what: str) -> np.ndarray:
+    p = np.asarray(result.p, np.float64)
+    if p.ndim != 1:
+        raise ValueError(f"{what} expects a single-series result; got a "
+                         f"stacked profile of shape {p.shape} — index one "
+                         f"batch row first")
+    return p
+
+
+def _default_exclusion(result: ProfileResult) -> int:
+    # the profile's own trivial-match zone is the natural non-overlap
+    # radius; fall back to the window when the result carries excl = 0
+    # (AB-style geometry)
+    return int(result.exclusion) if result.exclusion > 0 \
+        else max(1, int(result.window))
+
+
+def top_motifs(result: ProfileResult, max_motifs: int = 3,
+               exclusion: int | None = None,
+               radius: float = 2.0) -> list[Motif]:
+    """The `max_motifs` best-matching subsequence pairs, non-overlapping.
+
+    Each pick takes the global profile minimum (a, b = i[a]), then
+    suppresses the exclusion zone around BOTH occurrences before the next
+    pick. When the result carries top-k neighbor sets, each motif is grown
+    into a group: a's further neighbors within `radius` times the pair
+    distance (the classic motif-radius rule) join `neighbors`.
+    """
+    p = _check_self_1d(result, "top_motifs").copy()
+    idx = np.asarray(result.i)
+    excl = _default_exclusion(result) if exclusion is None else int(exclusion)
+    out: list[Motif] = []
+    pos = np.arange(p.shape[0])
+    for _ in range(int(max_motifs)):
+        if not np.isfinite(p).any():
+            break
+        a = int(np.nanargmin(np.where(np.isfinite(p), p, np.nan)))
+        b = int(idx[a])
+        if b < 0:
+            break
+        d = float(np.asarray(result.p)[a])
+        neighbors: tuple[int, ...] = ()
+        if result.has_topk():
+            tk_p = np.asarray(result.topk_p[a], np.float64)
+            tk_i = np.asarray(result.topk_i[a])
+            cut = radius * max(d, np.finfo(np.float64).tiny)
+            keep = [int(j) for j, dj in zip(tk_i, tk_p)
+                    if j >= 0 and j != b and np.isfinite(dj) and dj <= cut]
+            neighbors = tuple(keep)
+        out.append(Motif(a=a, b=b, d=d, neighbors=neighbors))
+        # suppress every occurrence — but b/neighbors index the B side of
+        # an AB join, which is a different series than the profile axis
+        occ = (a, b, *neighbors) if result.kind == "self" else (a,)
+        for c in occ:
+            p[np.abs(pos - c) < excl] = np.inf
+    return out
+
+
+def discords(result: ProfileResult, n: int = 3,
+             exclusion: int | None = None) -> list[Discord]:
+    """The `n` most isolated subsequences (largest profile entries),
+    greedily non-overlapping — the anomaly-detection workload. Positions
+    with no admissible neighbor (inf entries) are skipped: they are
+    geometry artifacts, not anomalies."""
+    p = _check_self_1d(result, "discords").copy()
+    idx = np.asarray(result.i)
+    excl = _default_exclusion(result) if exclusion is None else int(exclusion)
+    pos = np.arange(p.shape[0])
+    p[~np.isfinite(p)] = -np.inf
+    out: list[Discord] = []
+    for _ in range(int(n)):
+        if not np.isfinite(p).any():
+            break
+        a = int(np.argmax(p))
+        out.append(Discord(position=a, score=float(p[a]),
+                           neighbor=int(idx[a])))
+        p[np.abs(pos - a) < excl] = -np.inf
+    return out
+
+
+def corrected_arc_curve(result: ProfileResult) -> np.ndarray:
+    """FLUSS corrected arc curve from the result's 1-NN pointers.
+
+    Every position i contributes one ARC to its nearest neighbor i[i];
+    `ac[t]` counts arcs crossing position t. Within one semantic regime
+    arcs stay local, so few arcs cross a regime BOUNDARY. Normalizing by
+    the idealized curve of uniformly random pointers — the parabola
+    `iac[t] = 2 t (l - t) / l` — and clipping to [0, 1] gives the CAC:
+    valleys mark boundaries. The first/last `window` positions are pinned
+    to 1 (edge arcs are structurally sparse — the standard FLUSS guard).
+    """
+    p = _check_self_1d(result, "corrected_arc_curve")
+    if result.kind != "self":
+        raise ValueError("arc-curve segmentation needs a SELF-join result: "
+                         "AB pointers cross into the other series, so arcs "
+                         "over one axis are undefined")
+    l = p.shape[0]
+    idx = np.asarray(result.i, np.int64)
+    pos = np.arange(l)
+    ok = (idx >= 0) & (idx < l)
+    lo = np.minimum(pos[ok], idx[ok])
+    hi = np.maximum(pos[ok], idx[ok])
+    # diff-trick arc counting: +1 where an arc opens, -1 where it closes
+    mark = np.zeros(l + 1, np.float64)
+    np.add.at(mark, lo, 1.0)
+    np.add.at(mark, hi, -1.0)
+    ac = np.cumsum(mark)[:l]
+    t = pos.astype(np.float64)
+    iac = 2.0 * t * (l - t) / max(l, 1)
+    cac = np.ones(l, np.float64)
+    inner = iac > 0
+    cac[inner] = np.minimum(ac[inner] / iac[inner], 1.0)
+    m = max(1, int(result.window))
+    edge = min(m, l)
+    cac[:edge] = 1.0
+    cac[l - edge:] = 1.0
+    return cac
+
+
+def regimes(result: ProfileResult, n_regimes: int = 2,
+            exclusion: int | None = None) -> Regimes:
+    """Semantic segmentation: the `n_regimes - 1` best regime boundaries
+    (valleys of the corrected arc curve, greedily non-overlapping within
+    `exclusion` — default 5 windows, the FLUSS heuristic that keeps
+    boundaries from crowding one transition)."""
+    cac = corrected_arc_curve(result)
+    excl = (5 * max(1, int(result.window)) if exclusion is None
+            else int(exclusion))
+    work = cac.copy()
+    pos = np.arange(work.shape[0])
+    bounds: list[int] = []
+    for _ in range(max(0, int(n_regimes) - 1)):
+        t = int(np.argmin(work))
+        if work[t] >= 1.0:
+            break                   # no valley left — fewer regimes exist
+        bounds.append(t)
+        work[np.abs(pos - t) < excl] = 1.0
+    return Regimes(boundaries=tuple(bounds), cac=cac)

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.matrix_profile import (
-    ColState, DEFAULT_RESEED, NEG, ProfileState, _ab_padded_streams,
-    ab_reseed, ab_row_tile, band_rowmax, band_rowmax_ab, centered_windows,
+    ColState, DEFAULT_RESEED, NEG, ProfileState, TopKState,
+    _ab_padded_streams, ab_reseed, ab_row_tile, band_rowmax, band_rowmax_ab,
+    band_topk, band_topk_ab, centered_windows,
 )
 from repro.core.zstats import CrossStats, ZStats
 from repro.utils.compat import shard_map_compat
@@ -39,6 +40,23 @@ def pmax_profile(state: ProfileState, axis: str) -> ProfileState:
     cand = jnp.where(state.corr >= gmax, state.index, -1)
     gidx = jax.lax.pmax(cand, axis)
     return ProfileState(corr=gmax, index=gidx)
+
+
+def allreduce_topk(state: TopKState, axis: str) -> TopKState:
+    """All-reduce a TopKState across `axis`: gather every worker's (l, k)
+    best-first set and take the exact union top-k. O(P·l·k) traffic — still
+    independent of the O(l^2/P) compute per chunk, the same cheap
+    merge-local-profiles step as `pmax_profile`, widened. Workers' candidate
+    sets are disjoint (each diagonal belongs to exactly one chunk), so the
+    union stays an exact top-k."""
+    k = state.corr.shape[-1]
+    c = jax.lax.all_gather(state.corr, axis)     # (P, l, k)
+    i = jax.lax.all_gather(state.index, axis)
+    l = state.corr.shape[0]
+    c = jnp.moveaxis(c, 0, -1).reshape(l, -1)    # (l, k*P)
+    i = jnp.moveaxis(i, 0, -1).reshape(l, -1)
+    vals, pos = jax.lax.top_k(c, k)
+    return TopKState(corr=vals, index=jnp.take_along_axis(i, pos, axis=-1))
 
 
 def worker_chunk(stats: ZStats, k0: jax.Array, k1: jax.Array,
@@ -108,6 +126,63 @@ def worker_chunk_ab(cross: CrossStats, k0: jax.Array, k1: jax.Array,
     return rows.to_profile(0, la), col.to_profile(pad_l, lb)
 
 
+def worker_chunk_topk(stats: ZStats, k0: jax.Array, k1: jax.Array,
+                      n_bands: int, band: int, k: int,
+                      reseed_every: int | None = DEFAULT_RESEED) -> TopKState:
+    """`worker_chunk` widened to exact top-k: the merged (l, k) best-first
+    set of every row AND column update the chunk's cells imply."""
+    l = stats.n_subsequences
+    wc = centered_windows(stats) if reseed_every is not None else None
+
+    def body(carry, b):
+        rows, col = carry
+        start = k0 + b * band
+        rc, ri, win, wi = band_topk(stats, start, band, k,
+                                    reseed_every=reseed_every, windows_c=wc)
+        live = start < k1            # bands past the chunk end contribute 0
+        rc = jnp.where(live, rc, NEG)
+        win = jnp.where(live, win, NEG)
+        rows = rows.merge(TopKState(rc, ri))
+        col = col.merge_window(win, wi, start)
+        return (rows, col), None
+
+    init = (TopKState.empty(l, k), TopKState.empty(2 * l + band, k))
+    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return rows.merge(col.to_state(0, l))
+
+
+def worker_chunk_ab_topk(cross: CrossStats, k0: jax.Array, k1: jax.Array,
+                         n_bands: int, band: int, k: int,
+                         reseed_every: int | None = DEFAULT_RESEED
+                         ) -> tuple[TopKState, TopKState]:
+    """`worker_chunk_ab` widened to exact top-k on both sides."""
+    la, lb = cross.l_a, cross.l_b
+    reseed_every = ab_reseed(la, lb, reseed_every)
+    wa = centered_windows(cross.a) if reseed_every is not None else None
+    wb = centered_windows(cross.b) if reseed_every is not None else None
+    li = ab_row_tile(la, lb, band)
+    padded = _ab_padded_streams(cross, band, li)
+    pad_l = la - 1                 # most negative valid diagonal start
+
+    def body(carry, b):
+        rows, col = carry
+        start = k0 + b * band
+        ra, ia, win, wi, i0 = band_topk_ab(cross, start, band, k, k_hi=k1,
+                                           reseed_every=reseed_every,
+                                           wa=wa, wb=wb, padded=padded)
+        live = start < k1
+        ra = jnp.where(live, ra, NEG)
+        win = jnp.where(live, win, NEG)
+        rows = rows.merge_window(ra, ia, i0)
+        col = col.merge_window(win, wi, start + i0 + pad_l)
+        return (rows, col), None
+
+    init = (TopKState.empty(la + li, k),
+            TopKState.empty(pad_l + lb + li + 2 * band, k))
+    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return rows.to_state(0, la), col.to_state(pad_l, lb)
+
+
 def make_round_fn(plan, mesh, axis: str = "workers"):
     """SPMD function for one anytime round of a distributed `SweepPlan`
     (core.plan.round_executor is the only caller — tiling and reseed knobs
@@ -119,10 +194,24 @@ def make_round_fn(plan, mesh, axis: str = "workers"):
     to every worker instead of partitioning the matrix is the NDP move. A
     full set of rounds yields the EXACT profile (two-sided chunks — no
     reversed finish phase).
+
+    Plans with `harvest.k > 1` run the widened top-k chunks: the running
+    state is a `TopKState` (the scheduler sizes it) and the merge step is
+    the gather + union-top-k all-reduce (`allreduce_topk`).
     """
     n_bands, band, reseed = plan.n_bands, plan.band, plan.reseed_every
+    k = plan.harvest.k
 
-    def per_worker(stats: ZStats, running: ProfileState, k0_local, k1_local):
+    def per_worker(stats: ZStats, running, k0_local, k1_local):
+        if k > 1:
+            local = worker_chunk_topk(stats, k0_local[0], k1_local[0],
+                                      n_bands, band, k, reseed)
+            # all-reduce the LOCALS first, then merge into the replicated
+            # running state ONCE: gathering running.merge(local) instead
+            # would hand lax.top_k P copies of every prior winner, and the
+            # duplicates would evict true top-k entries (max-merge is
+            # idempotent under that duplication; top-k union is not)
+            return running.merge(allreduce_topk(local, axis))
         local = worker_chunk(stats, k0_local[0], k1_local[0], n_bands, band,
                              reseed)
         return pmax_profile(running.merge(local), axis)
@@ -142,12 +231,20 @@ def make_round_fn_ab(plan, mesh, axis: str = "workers"):
     Signature: (cross, running_a, running_b, k0s (P,), k1s (P,))
     -> (merged_a, merged_b). Idle workers pass k0 == k1. CrossStats (both
     series' streams + seeds) are replicated — still O(n_a + n_b) traffic vs
-    the O(n_a * n_b) rectangle.
+    the O(n_a * n_b) rectangle. `harvest.k > 1` plans run the widened
+    top-k chunks and union-top-k all-reduce, both sides.
     """
     n_bands, band, reseed = plan.n_bands, plan.band, plan.reseed_every
+    k = plan.harvest.k
 
-    def per_worker(cross: CrossStats, running_a: ProfileState,
-                   running_b: ProfileState, k0_local, k1_local):
+    def per_worker(cross: CrossStats, running_a, running_b,
+                   k0_local, k1_local):
+        if k > 1:
+            loc_a, loc_b = worker_chunk_ab_topk(
+                cross, k0_local[0], k1_local[0], n_bands, band, k, reseed)
+            # locals first, running once — see make_round_fn
+            return (running_a.merge(allreduce_topk(loc_a, axis)),
+                    running_b.merge(allreduce_topk(loc_b, axis)))
         loc_a, loc_b = worker_chunk_ab(cross, k0_local[0], k1_local[0],
                                        n_bands, band, reseed)
         return (pmax_profile(running_a.merge(loc_a), axis),

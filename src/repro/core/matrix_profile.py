@@ -64,6 +64,90 @@ class ProfileState:
         return jnp.where(self.corr <= NEG + 1e-6, jnp.inf, d)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SplitProfile:
+    """A self-join sweep's harvest with the two sides kept SEPARATE.
+
+    The row harvest of the upper-triangle sweep covers exactly the cells
+    j > i — it IS the RIGHT profile (nearest neighbor strictly after each
+    position); the column harvest covers j < i — the LEFT profile. The old
+    entry points merged them into one array and threw the split away;
+    `ProfileResult` (core.result) now carries all three. `merged` is
+    computed as `right.merge(left)` — the exact reduction order the
+    pre-split engine used, so the classic profile is bit-identical.
+    """
+
+    merged: ProfileState
+    right: ProfileState   # row harvest: nearest neighbor at j > t
+    left: ProfileState    # column harvest: nearest neighbor at j < t
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TopKState:
+    """Running exact top-k profile: `(L, k)` best-first corr + neighbor.
+
+    The k > 1 analogue of `ProfileState`/`ColState` in one class: `merge`
+    is the insertion-merge of two best-first sets (concat + `lax.top_k` —
+    exact for the UNION because every sweep evaluates each cell exactly
+    once, so no neighbor is ever offered twice), and `merge_window` is the
+    scatter-free windowed variant over a padded index space (one 2-D
+    dynamic slice, same alignment rules as `ColState.merge_window`).
+    Unfilled slots are (NEG, -1); ties resolve to the accumulator side, so
+    masked all-NEG windows merge as no-ops.
+    """
+
+    corr: jax.Array    # (L, k) f32, best-first along the last axis
+    index: jax.Array   # (L, k) i32 neighbor (or -1)
+
+    @classmethod
+    def empty(cls, l: int, k: int, fill: float = NEG) -> "TopKState":
+        return cls(corr=jnp.full((l, k), fill, jnp.float32),
+                   index=jnp.full((l, k), -1, jnp.int32))
+
+    @property
+    def k(self) -> int:
+        return self.corr.shape[-1]
+
+    def merge(self, other: "TopKState") -> "TopKState":
+        c, i = _topk_union(self.corr, self.index, other.corr, other.index,
+                           self.k)
+        return TopKState(c, i)
+
+    def merge_window(self, win: jax.Array, win_i: jax.Array,
+                     start) -> "TopKState":
+        w = win.shape[0]
+        seg_c = jax.lax.dynamic_slice(self.corr, (start, 0), (w, self.k))
+        seg_i = jax.lax.dynamic_slice(self.index, (start, 0), (w, self.k))
+        c, i = _topk_union(seg_c, seg_i, win, win_i, self.k)
+        return TopKState(
+            corr=jax.lax.dynamic_update_slice(self.corr, c, (start, 0)),
+            index=jax.lax.dynamic_update_slice(self.index, i, (start, 0)))
+
+    def to_state(self, pad_left: int, l_out: int) -> "TopKState":
+        return TopKState(corr=self.corr[pad_left:pad_left + l_out],
+                         index=self.index[pad_left:pad_left + l_out])
+
+    @property
+    def best(self) -> ProfileState:
+        """Slot 0 — identical VALUES to the k = 1 profile (max == top-1)."""
+        return ProfileState(corr=self.corr[..., 0], index=self.index[..., 0])
+
+    def to_distance(self, window: int) -> jax.Array:
+        d = corr_to_dist(jnp.clip(self.corr, -1.0, 1.0), window)
+        return jnp.where(self.corr <= NEG + 1e-6, jnp.inf, d)
+
+
+def _topk_union(c1: jax.Array, i1: jax.Array, c2: jax.Array, i2: jax.Array,
+                k: int) -> tuple[jax.Array, jax.Array]:
+    """Exact best-first union of two neighbor sets along the last axis."""
+    c = jnp.concatenate([c1, c2], axis=-1)
+    i = jnp.concatenate([i1, i2], axis=-1)
+    vals, pos = jax.lax.top_k(c, k)
+    return vals, jnp.take_along_axis(i, pos, axis=-1)
+
+
 def default_exclusion(window: int) -> int:
     return max(1, -(-int(window) // 4))
 
@@ -229,19 +313,12 @@ jax.tree_util.register_dataclass(BankedColState,
                                  meta_fields=["stride"])
 
 
-def band_rowmax(stats: ZStats, k0, band: int, *,
-                reseed_every: int | None = None,
-                windows_c: jax.Array | None = None
-                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Two-sided harvest of the diagonal band [k0, k0+band).
-
-    Returns (row_corr (l,), row_idx, win (l+band,), win_i): row entries are
-    the best correlation STARTING at row i (index = matching j); (win, win_i)
-    is the band's column-profile WINDOW — entry t is the best value ENDING at
-    column j = k0 + t with its winning row — read off the same (D, l)
-    correlation tile, so every cell is computed exactly once (see
-    `_col_window` / `ColState` for the scatter-free merge). `k0` may be
-    traced (dynamic), `band` is static. Diagonals >= l contribute nothing.
+def _band_corr(stats: ZStats, k0, band: int,
+               reseed_every: int | None = None,
+               windows_c: jax.Array | None = None) -> jax.Array:
+    """The (D, l) correlation tile of the diagonal band [k0, k0+band) —
+    the shared substrate of `band_rowmax` (k = 1 harvest) and `band_topk`
+    (top-k harvest). Invalid cells (j >= l) are masked to NEG.
 
     `reseed_every=R` bounds f32 drift of the cumulative-sum recurrence: the
     covariance is recomputed EXACTLY (direct centered dot via `windows_c`)
@@ -281,13 +358,72 @@ def band_rowmax(stats: ZStats, k0, band: int, *,
         cov = cov + jnp.take(drift, seg, axis=1)
 
     corr = cov * stats.invn[None, :] * invnj
-    corr = jnp.where(valid, corr, NEG)
+    return jnp.where(valid, corr, NEG)
 
+
+def band_rowmax(stats: ZStats, k0, band: int, *,
+                reseed_every: int | None = None,
+                windows_c: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Two-sided harvest of the diagonal band [k0, k0+band).
+
+    Returns (row_corr (l,), row_idx, win (l+band,), win_i): row entries are
+    the best correlation STARTING at row i (index = matching j); (win, win_i)
+    is the band's column-profile WINDOW — entry t is the best value ENDING at
+    column j = k0 + t with its winning row — read off the same (D, l)
+    correlation tile (`_band_corr`), so every cell is computed exactly once
+    (see `_col_window` / `ColState` for the scatter-free merge). `k0` may be
+    traced (dynamic), `band` is static. Diagonals >= l contribute nothing.
+    """
+    l = stats.n_subsequences
+    corr = _band_corr(stats, k0, band, reseed_every, windows_c)
+    i = jnp.arange(l)
     corr_best, d_win = _row_harvest(corr)
     idx_best = (i + k0 + d_win).astype(jnp.int32)
     idx_best = jnp.where(corr_best > NEG, idx_best, -1)
     win, win_i = _col_window(corr, NEG)
     return corr_best.astype(jnp.float32), idx_best, win, win_i
+
+
+def _topk_rows(tile: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k reduce of a (D, L) band tile over the band axis: `(L, k)`
+    best-first values and winning band offsets d. Requires k <= D (the
+    planner enforces k <= band)."""
+    vals, d = jax.lax.top_k(tile.T, k)
+    return vals, d.astype(jnp.int32)
+
+
+def _topk_col_window(corr: jax.Array, k: int,
+                     fill: float = NEG) -> tuple[jax.Array, jax.Array]:
+    """Top-k column-side harvest of one band tile — `_col_window`'s skew
+    (pad + reshape, scatter-free) followed by a top-k instead of a max.
+    Returns ((li+D, k) win, win_i): entry t is the best-k set ENDING at
+    column j = k0 + t with the winning row indices i = t - d (or -1)."""
+    D, li = corr.shape
+    W = li + D
+    p = jnp.pad(corr, ((0, 0), (0, D + 1)), constant_values=fill)
+    skew = p.reshape(-1)[:-D].reshape(D, W)          # skew[d, t] = corr[d, t-d]
+    win, d_win = _topk_rows(skew, k)
+    win_i = (jnp.arange(W)[:, None] - d_win).astype(jnp.int32)
+    win_i = jnp.where(win > fill, win_i, -1)
+    return win.astype(jnp.float32), win_i
+
+
+def band_topk(stats: ZStats, k0, band: int, k: int, *,
+              reseed_every: int | None = None,
+              windows_c: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """`band_rowmax` widened to exact top-k: (row (l, k), row_idx, win
+    ((l+band, k)), win_i) off the same correlation tile. Within one tile a
+    position's candidates live on distinct diagonals, so the per-tile top-k
+    is exact and the cross-band `TopKState` union stays exact."""
+    l = stats.n_subsequences
+    corr = _band_corr(stats, k0, band, reseed_every, windows_c)
+    vals, d = _topk_rows(corr, k)
+    idx = (jnp.arange(l)[:, None] + k0 + d).astype(jnp.int32)
+    idx = jnp.where(vals > NEG, idx, -1)
+    win, win_i = _topk_col_window(corr, k)
+    return vals.astype(jnp.float32), idx, win, win_i
 
 
 DEFAULT_RESEED = 512
@@ -297,15 +433,18 @@ DEFAULT_RESEED = 512
 DEFAULT_BAND = 256
 
 
-def chunk_rowmax(stats: ZStats, k0, k1_static: int, band: int,
-                 reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
-    """Two-sided profile over diagonals [k0, k1) — k1-k0 <= n_bands*band.
+def chunk_rowmax_split(stats: ZStats, k0, k1_static: int, band: int,
+                       reseed_every: int | None = DEFAULT_RESEED
+                       ) -> tuple[ProfileState, ProfileState]:
+    """Two-sided harvest over diagonals [k0, k1) with the sides kept
+    SEPARATE — (row_state, col_profile): the row harvest is the RIGHT
+    profile of the swept span, the column harvest the LEFT profile.
 
     Iterates `band`-wide sub-bands with lax.scan so the working set stays
     (band, l) regardless of chunk size; each sub-band merges BOTH its row
     harvest (into the row state) and its column window (into a padded
-    running `ColState`), so the returned state holds every profile update
-    the chunk's cells imply (no reversed pass owed).
+    running `ColState`), so together the returned states hold every profile
+    update the chunk's cells imply (no reversed pass owed).
     """
     l = stats.n_subsequences
     n_bands = -(-k1_static // band)
@@ -325,30 +464,92 @@ def chunk_rowmax(stats: ZStats, k0, k1_static: int, band: int,
 
     init = (ProfileState.empty(l), ColState.empty(0, l, pad_r))
     (state, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
-    return state.merge(col.to_profile(0, l))
+    return state, col.to_profile(0, l)
+
+
+def chunk_rowmax(stats: ZStats, k0, k1_static: int, band: int,
+                 reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+    """Merged two-sided profile over diagonals [k0, k1) — the anytime unit
+    of work (`chunk_rowmax_split` with the sides folded back together)."""
+    rows, col = chunk_rowmax_split(stats, k0, k1_static, band, reseed_every)
+    return rows.merge(col)
+
+
+def chunk_topk(stats: ZStats, k0, k1_static: int, band: int, k: int,
+               reseed_every: int | None = DEFAULT_RESEED
+               ) -> tuple[TopKState, TopKState]:
+    """Top-k analogue of `chunk_rowmax_split`: (right (l, k), left (l, k))
+    exact best-first neighbor sets over diagonals [k0, k1)."""
+    l = stats.n_subsequences
+    n_bands = -(-k1_static // band)
+    wc = centered_windows(stats) if reseed_every is not None else None
+
+    def body(carry, b):
+        rows, col = carry
+        start = k0 + b * band
+        rc, ri, win, wi = band_topk(stats, start, band, k,
+                                    reseed_every=reseed_every, windows_c=wc)
+        rows = rows.merge(TopKState(rc, ri))
+        col = col.merge_window(win, wi, start)
+        return (rows, col), None
+
+    init = (TopKState.empty(l, k), TopKState.empty(2 * l + band, k))
+    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return rows, col.to_state(0, l)
 
 
 @partial(jax.jit, static_argnums=(1, 2, 3))
 def profile_from_stats(stats: ZStats, exclusion: int,
                        band: int = DEFAULT_BAND,
-                       reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+                       reseed_every: int | None = DEFAULT_RESEED) -> SplitProfile:
     """Jitted exact-profile core: ONE streamed sweep of k in [excl, l).
 
     Each cell (i, j) of the upper triangle updates both P[i] (row harvest)
     and P[j] (column harvest), so no reversed-series second pass exists —
     half the streamed bytes, FLOPs, and stats precompute of the old
-    forward+reversed scheme for the identical answer.
+    forward+reversed scheme for the identical answer. The two sides are no
+    longer thrown away after merging: the returned `SplitProfile` carries
+    `merged` (== the old return, bit-identical — same reduction order) plus
+    `right` (row harvest) and `left` (column harvest).
     """
     l = stats.n_subsequences
     span = l - exclusion
-    return chunk_rowmax(stats, jnp.int32(exclusion), span, band, reseed_every)
+    rows, col = chunk_rowmax_split(stats, jnp.int32(exclusion), span, band,
+                                   reseed_every)
+    return SplitProfile(merged=rows.merge(col), right=rows, left=col)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def profile_topk_from_stats(stats: ZStats, exclusion: int,
+                            band: int = DEFAULT_BAND,
+                            reseed_every: int | None = DEFAULT_RESEED,
+                            k: int = 4) -> tuple[TopKState, TopKState, TopKState]:
+    """Jitted exact top-k self-join core -> (merged, right, left) `(l, k)`
+    best-first neighbor sets from the same single sweep. Slot 0 of `merged`
+    carries the same VALUES as the k = 1 profile (max == top-1); with
+    `exclusion >= 1` (the planner rejects 0 for top-k) the row and column
+    candidate sets are disjoint (j > i vs j < i) and each cell is evaluated
+    once, so the union is an exact top-k — at exclusion 0 the diagonal's
+    self-match would sit in BOTH sides and the union would double-count
+    it."""
+    l = stats.n_subsequences
+    span = l - exclusion
+    rows, col = chunk_topk(stats, jnp.int32(exclusion), span, band, k,
+                           reseed_every)
+    return rows.merge(col), rows, col
 
 
 def matrix_profile(ts, window: int, exclusion: int | None = None,
                    band: int = DEFAULT_BAND,
-                   reseed_every: int | None = DEFAULT_RESEED,
-                   ) -> tuple[jax.Array, jax.Array]:
-    """Full exact matrix profile. Returns (distance_profile (l,), index (l,)).
+                   reseed_every: int | None = DEFAULT_RESEED, *,
+                   k: int = 1) -> "ProfileResult":
+    """Full exact matrix profile -> `ProfileResult`.
+
+    `result.p` / `result.i` are the classic merged profile (bit-identical
+    to the old tuple's arrays); the result also carries the LEFT/RIGHT
+    split profiles the sweep harvested anyway (column/row side), and with
+    `k > 1` exact `(l, k)` top-k neighbor sets. Tuple unpacking still works
+    for one release (DeprecationWarning).
 
     Thin entry: builds a `SweepPlan` (core.plan) and runs it through the
     executor — the band-engine choice, exclusion default, and harvest wiring
@@ -360,14 +561,16 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
     import numpy as np
 
     from repro.core import plan as plan_mod
+    from repro.core.result import build_result
+
     from repro.core.zstats import compute_stats_host
 
     m = int(window)
     arr = np.asarray(ts)
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
-                               band=band, reseed_every=reseed_every)
+                               band=band, reseed_every=reseed_every, k=k)
     res = plan_mod.execute(plan, compute_stats_host(arr, m))
-    return res.dist, res.index
+    return build_result(plan, res)
 
 
 # -- AB join: rectangular diagonal space -------------------------------------
@@ -449,30 +652,14 @@ def ab_reseed(l_a: int, l_b: int, reseed_every: int | None) -> int | None:
     return reseed_every
 
 
-def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
-                   k_hi=None, reseed_every: int | None = None,
-                   wa: jax.Array | None = None,
-                   wb: jax.Array | None = None, harvest_cols: bool = True,
-                   clamp_rows: bool = True, padded=None
-                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                              jax.Array]:
-    """Two-sided harvest of A vs B over signed diagonals [k0, k0+band).
-
-    Returns (row_win (li,), row_idx, win (li+band,), win_i, i0): the row
-    harvest is a WINDOW over rows [i0, i0+li) of A (entry t = best corr of
-    row i0+t, row_idx its j in B), with li = `ab_row_tile(l_a, l_b, band)`
-    and i0 = max(0, -(k0+band-1)) — the row clamp that keeps a skewed join
-    from computing l_a cells per diagonal. (win, win_i) is B's column-profile
-    window (entry t = best value ending at B's column j = i0 + k0 + t, win_i
-    the winning row i in A), read off the same (D, li) correlation tile.
-    `k0` may be traced and NEGATIVE; `band` is static. `k_hi` additionally
-    masks diagonals >= k_hi (chunk ends that are not band-aligned).
-    `harvest_cols=False` skips the column window when B's profile is not
-    wanted (win, win_i come back None); `clamp_rows=False` forces i0 = 0 and
-    li = l_a — the pre-clamp full-height sweep, kept for A/B tests and
-    benches. Stream loads are dynamic slices + static skews (`_unskew`), not
-    2-D gathers.
-    """
+def _band_corr_ab(cross: CrossStats, k0, band: int, *,
+                  k_hi=None, reseed_every: int | None = None,
+                  wa: jax.Array | None = None,
+                  wb: jax.Array | None = None, clamp_rows: bool = True,
+                  padded=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The (D, li) correlation tile of signed diagonals [k0, k0+band) of the
+    AB rectangle, row-clamped — the shared substrate of `band_rowmax_ab`
+    and `band_topk_ab`. Returns (corr, i (li,) absolute A rows, i0)."""
     sa, sb = cross.a, cross.b
     la, lb = sa.n_subsequences, sb.n_subsequences
     li = ab_row_tile(la, lb, band) if clamp_rows else la
@@ -535,8 +722,37 @@ def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
         cov = cov + jnp.take(drift, seg, axis=1)
 
     corr = cov * invni[None, :] * invnj
-    corr = jnp.where(valid, corr, NEG)
+    return jnp.where(valid, corr, NEG), i, i0
 
+
+def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
+                   k_hi=None, reseed_every: int | None = None,
+                   wa: jax.Array | None = None,
+                   wb: jax.Array | None = None, harvest_cols: bool = True,
+                   clamp_rows: bool = True, padded=None
+                   ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                              jax.Array]:
+    """Two-sided harvest of A vs B over signed diagonals [k0, k0+band).
+
+    Returns (row_win (li,), row_idx, win (li+band,), win_i, i0): the row
+    harvest is a WINDOW over rows [i0, i0+li) of A (entry t = best corr of
+    row i0+t, row_idx its j in B), with li = `ab_row_tile(l_a, l_b, band)`
+    and i0 = max(0, -(k0+band-1)) — the row clamp that keeps a skewed join
+    from computing l_a cells per diagonal. (win, win_i) is B's column-profile
+    window (entry t = best value ending at B's column j = i0 + k0 + t, win_i
+    the winning row i in A), read off the same (D, li) correlation tile
+    (`_band_corr_ab`).
+    `k0` may be traced and NEGATIVE; `band` is static. `k_hi` additionally
+    masks diagonals >= k_hi (chunk ends that are not band-aligned).
+    `harvest_cols=False` skips the column window when B's profile is not
+    wanted (win, win_i come back None); `clamp_rows=False` forces i0 = 0 and
+    li = l_a — the pre-clamp full-height sweep, kept for A/B tests and
+    benches. Stream loads are dynamic slices + static skews (`_unskew`), not
+    2-D gathers.
+    """
+    corr, i, i0 = _band_corr_ab(cross, k0, band, k_hi=k_hi,
+                                reseed_every=reseed_every, wa=wa, wb=wb,
+                                clamp_rows=clamp_rows, padded=padded)
     corr_best, d_win = _row_harvest(corr)
     idx_best = (i + k0 + d_win).astype(jnp.int32)
     idx_best = jnp.where(corr_best > NEG, idx_best, -1)
@@ -545,6 +761,28 @@ def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
         win, win_i = _col_window(corr, NEG)
         win_i = jnp.where(win > NEG, win_i + i0, -1)  # local row -> absolute
     return corr_best.astype(jnp.float32), idx_best, win, win_i, i0
+
+
+def band_topk_ab(cross: CrossStats, k0, band: int, k: int, *,
+                 k_hi=None, reseed_every: int | None = None,
+                 wa: jax.Array | None = None,
+                 wb: jax.Array | None = None, harvest_cols: bool = True,
+                 clamp_rows: bool = True, padded=None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                            jax.Array]:
+    """`band_rowmax_ab` widened to exact top-k — ((li, k) row window,
+    row_idx, (li+band, k) col window, win_i, i0) off the same tile."""
+    corr, i, i0 = _band_corr_ab(cross, k0, band, k_hi=k_hi,
+                                reseed_every=reseed_every, wa=wa, wb=wb,
+                                clamp_rows=clamp_rows, padded=padded)
+    vals, d = _topk_rows(corr, k)
+    idx = (i[:, None] + k0 + d).astype(jnp.int32)
+    idx = jnp.where(vals > NEG, idx, -1)
+    win = win_i = None
+    if harvest_cols:
+        win, win_i = _topk_col_window(corr, k)
+        win_i = jnp.where(win > NEG, win_i + i0, -1)
+    return vals.astype(jnp.float32), idx, win, win_i, i0
 
 
 def chunk_rowmax_ab(cross: CrossStats, k0, width_static: int, band: int,
@@ -652,6 +890,85 @@ def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
     return state_a, state_b
 
 
+def chunk_topk_ab(cross: CrossStats, k0, width_static: int, band: int, k: int,
+                  reseed_every: int | None = DEFAULT_RESEED,
+                  k_hi=None, two_sided: bool = True
+                  ) -> tuple[TopKState, TopKState | None]:
+    """Top-k analogue of `chunk_rowmax_ab`: (state_a (l_a, k), state_b
+    (l_b, k)) exact best-first neighbor sets over signed diagonals
+    [k0, k0+width), band-scanned with row-clamped tiles. Both sides
+    accumulate as bounded `(w, k)` windows in padded `TopKState`s (the
+    banked column accumulator stays k = 1-only, so `col_tile` has no
+    top-k variant — the planner pins flat accumulation for k > 1)."""
+    la, lb = cross.l_a, cross.l_b
+    n_bands = -(-width_static // band)
+    reseed_every = ab_reseed(la, lb, reseed_every)
+    wa = centered_windows(cross.a) if reseed_every is not None else None
+    wb = centered_windows(cross.b) if reseed_every is not None else None
+    li = ab_row_tile(la, lb, band)
+    padded = _ab_padded_streams(cross, band, li)
+    pad_l = la - 1                 # most negative valid diagonal start
+
+    def body(carry, b):
+        rows, col = carry
+        start = k0 + b * band
+        ra, ia, win, wi, i0 = band_topk_ab(cross, start, band, k, k_hi=k_hi,
+                                           reseed_every=reseed_every,
+                                           wa=wa, wb=wb,
+                                           harvest_cols=two_sided,
+                                           padded=padded)
+        rows = rows.merge_window(ra, ia, i0)
+        if two_sided:
+            col = col.merge_window(win, wi, start + i0 + pad_l)
+        return (rows, col), None
+
+    init = (TopKState.empty(la + li, k),
+            TopKState.empty(pad_l + lb + li + 2 * band, k)
+            if two_sided else None)
+    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    return (rows.to_state(0, la),
+            col.to_state(pad_l, lb) if two_sided else None)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
+def ab_join_topk_from_stats(cross: CrossStats, exclusion: int = 0,
+                            band: int = DEFAULT_BAND,
+                            reseed_every: int | None = DEFAULT_RESEED,
+                            two_sided: bool = True, k: int = 4
+                            ) -> tuple[TopKState, TopKState | None]:
+    """Jitted exact top-k AB-join core: `(l_a, k)` (and `(l_b, k)` with
+    `two_sided`) best-first neighbor sets from one signed-diagonal sweep.
+    Same span structure as `ab_join_from_stats` (an exclusion band splits
+    the signed space in two; with exclusion == 0 diagonal k = 0 is
+    evaluated exactly once, keeping the union top-k exact)."""
+    la, lb = cross.l_a, cross.l_b
+    excl = int(exclusion)
+    state_a = TopKState.empty(la, k)
+    state_b = TopKState.empty(lb, k) if two_sided else None
+
+    def merge(sa, sb):
+        nonlocal state_a, state_b
+        state_a = state_a.merge(sa)
+        if two_sided:
+            state_b = state_b.merge(sb)
+
+    if excl == 0:
+        merge(*chunk_topk_ab(cross, jnp.int32(-(la - 1)), la - 1 + lb,
+                             band, k, reseed_every, k_hi=lb,
+                             two_sided=two_sided))
+        return state_a, state_b
+    neg_width = la - excl          # diagonals [-(l_a-1), -excl]
+    pos_width = lb - excl          # diagonals [excl, l_b)
+    if neg_width > 0:
+        merge(*chunk_topk_ab(cross, jnp.int32(-(la - 1)), neg_width, band, k,
+                             reseed_every, k_hi=-excl + 1,
+                             two_sided=two_sided))
+    if pos_width > 0:
+        merge(*chunk_topk_ab(cross, jnp.int32(excl), pos_width, band, k,
+                             reseed_every, k_hi=lb, two_sided=two_sided))
+    return state_a, state_b
+
+
 # How many rows the short side of a rectangle may have before the
 # row-streamed AB sweep (sequential lax.scan over rows) stops paying off and
 # the planner (core.plan.plan_sweep) falls back to the band-diagonal engine:
@@ -736,18 +1053,78 @@ def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
             ProfileState(pb, ib))
 
 
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def ab_join_rowstream_topk(cross: CrossStats, exclusion: int = 0,
+                           reseed_every: int | None = DEFAULT_RESEED,
+                           k: int = 4) -> tuple[TopKState, TopKState]:
+    """Row-streamed AB join with exact top-k on BOTH sides — the same ONE
+    lax.scan over A's rows as `ab_join_rowstream` (identical carried
+    covariance recurrence and reseeds), but each row keeps its k best
+    columns (`lax.top_k` of the full-width row — exact, every candidate of
+    that row is present) and the B side runs the `(l_b, k)` insertion
+    merge: each row offers every column exactly one new candidate, so
+    union-with-one-candidate per step is an exact running top-k."""
+    sa, sb = cross.a, cross.b
+    la, lb = cross.l_a, cross.l_b
+    excl = int(exclusion)
+    R = ab_reseed(la, lb, reseed_every)
+    dfb, dgb, invnb = sb.df, sb.dg, sb.invn
+    row0 = cross.cov0s[la - 1:]                        # cov(0, j), (l_b,)
+    seeds_neg = cross.cov0s[:la][::-1]                 # cov(i, 0), (l_a,)
+    if R is not None:
+        wa = centered_windows(sa)
+        wb = centered_windows(sb)
+        import numpy as np
+        rows = np.arange(0, la, int(R))                # static row ids
+        exact = jnp.einsum("sm,lm->sl", wa[rows], wb)  # (S, l_b) reseed rows
+    jj = jnp.arange(lb)
+
+    def step(carry, xs):
+        qt, pbc, pbi = carry
+        dfi, dgi, invni, seed0, i = xs
+        delta = dfi * dgb + dfb * dgi
+        qt = jnp.concatenate([seed0[None], qt[:-1] + delta[1:]])
+        if R is not None:
+            qt = jnp.where(i % R == 0,
+                           jax.lax.dynamic_index_in_dim(exact, i // R, 0,
+                                                        keepdims=False), qt)
+        else:
+            qt = jnp.where(i == 0, row0, qt)
+        corr = qt * invnb * invni
+        if excl > 0:
+            corr = jnp.where(jnp.abs(jj - i) >= excl, corr, NEG)
+        # B side: one new candidate per column, insertion-merged
+        cand_i = jnp.where(corr > NEG, i, -1).astype(jnp.int32)
+        pbc, pbi = _topk_union(pbc, pbi, corr[:, None], cand_i[:, None], k)
+        # A side: the row's k best columns
+        vals, pos = jax.lax.top_k(corr, k)
+        ja = jnp.where(vals > NEG, pos, -1).astype(jnp.int32)
+        return (qt, pbc, pbi), (vals, ja)
+
+    init = (jnp.zeros((lb,), jnp.float32),
+            jnp.full((lb, k), NEG, jnp.float32),
+            jnp.full((lb, k), -1, jnp.int32))
+    xs = (sa.df, sa.dg, sa.invn, seeds_neg,
+          jnp.arange(la, dtype=jnp.int32))
+    (_, pbc, pbi), (pa, ja) = jax.lax.scan(step, init, xs)
+    return (TopKState(pa.astype(jnp.float32), ja), TopKState(pbc, pbi))
+
+
 def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
             band: int = DEFAULT_BAND,
             reseed_every: int | None = DEFAULT_RESEED,
-            normalize: bool = True, return_b: bool = False):
+            normalize: bool = True, return_b: bool = False,
+            k: int = 1) -> "ProfileResult":
     """AB join: for every subsequence of A, its nearest neighbour in B.
 
-    Returns (distance_profile (l_a,), index (l_a,)); index[i] is the matching
-    start position in B. With `return_b=True` additionally returns B's
-    profile against A — (dist_a, idx_a, dist_b (l_b,), idx_b) — harvested
-    from the SAME single sweep, not a second join. No exclusion zone by
-    default (cross-series matches at equal offsets are legitimate);
-    `exclusion` exists so that
+    Returns a `ProfileResult`: `result.p[i]` the distance, `result.i[i]`
+    the matching start position in B. With `return_b=True` the sweep also
+    harvests B's profile against A (`result.b_p` / `result.b_i`) from the
+    SAME single sweep, not a second join — and legacy 4-tuple unpacking
+    `(da, ia, db, ib)` keeps working for one release; `k > 1` adds exact
+    top-k neighbor sets (`result.topk_p`, and `result.b_topk_p` with
+    `return_b`). No exclusion zone by default (cross-series matches at
+    equal offsets are legitimate); `exclusion` exists so that
     ab_join(ts, ts, m, exclusion=e) == matrix_profile(ts, m, exclusion=e).
     Stream precompute is host-side f64, the O(l_a*l_b) engine device f32.
 
@@ -761,38 +1138,38 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     import numpy as np
 
     from repro.core import plan as plan_mod
+    from repro.core.result import build_result
 
     m = int(window)
     a, b = np.asarray(ts_a), np.asarray(ts_b)
     plan = plan_mod.plan_sweep(m, a.shape[0] - m + 1, b.shape[0] - m + 1,
                                exclusion=exclusion, normalize=normalize,
                                harvest="both" if return_b else "row",
-                               band=band, reseed_every=reseed_every)
+                               band=band, reseed_every=reseed_every, k=k)
     if not normalize:
         stats = (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
     else:
         stats = plan_mod.cross_stats_for(plan, a, b)
     res = plan_mod.execute(plan, stats)
-    if return_b:
-        return res.dist, res.index, res.dist_b, res.index_b
-    return res.dist, res.index
+    return build_result(plan, res, legacy_arity=4 if return_b else 2)
 
 
 def batch_profile(series, window: int, *, exclusion: int | None = None,
                   band: int = DEFAULT_BAND,
                   reseed_every: int | None = DEFAULT_RESEED,
-                  ) -> tuple[jax.Array, jax.Array]:
+                  k: int = 1) -> "ProfileResult":
     """Self-join matrix profiles for a (B, n) stack in ONE vmapped program.
 
     Per-series host f64 stream prep (forward only — the fused sweep needs no
     reversed streams), then a single vmap of the jitted band engine (a
     batched plan — the planner pins the engine backend; rowstream/kernel
     don't vmap) — the multi-tenant serving path (one dispatch, B profiles).
-    Returns (distances (B, l), indices (B, l)).
+    Returns a `ProfileResult` whose every field is stacked (B, l[, k]).
     """
     import numpy as np
 
     from repro.core import plan as plan_mod
+    from repro.core.result import build_result
     from repro.core.zstats import compute_stats_host
 
     arr = np.asarray(series)
@@ -801,25 +1178,26 @@ def batch_profile(series, window: int, *, exclusion: int | None = None,
     m = int(window)
     plan = plan_mod.plan_sweep(m, arr.shape[1] - m + 1, exclusion=exclusion,
                                band=band, reseed_every=reseed_every,
-                               batch=arr.shape[0])
+                               batch=arr.shape[0], k=k)
     stats = [compute_stats_host(s, m) for s in arr]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stats)
     res = plan_mod.execute(plan, stack)
-    return res.dist, res.index
+    return build_result(plan, res)
 
 
 def batch_ab_join(stack_a, stack_b, window: int, *,
                   exclusion: int | None = None, band: int = DEFAULT_BAND,
                   reseed_every: int | None = DEFAULT_RESEED,
-                  return_b: bool = False):
+                  return_b: bool = False, k: int = 1) -> "ProfileResult":
     """Vmapped AB joins: row b of (B, n_a) against row b of (B, n_b).
 
-    With `return_b=True` also returns the (B, l_b) B-side profiles from the
-    same sweep.
+    Returns a stacked `ProfileResult`; with `return_b=True` the (B, l_b)
+    B-side profiles from the same sweep ride along in `.b_p`/`.b_i`.
     """
     import numpy as np
 
     from repro.core import plan as plan_mod
+    from repro.core.result import build_result
     from repro.core.zstats import compute_cross_stats_host
 
     a, b = np.asarray(stack_a), np.asarray(stack_b)
@@ -831,13 +1209,11 @@ def batch_ab_join(stack_a, stack_b, window: int, *,
                                exclusion=exclusion, band=band,
                                reseed_every=reseed_every,
                                harvest="both" if return_b else "row",
-                               batch=a.shape[0])
+                               batch=a.shape[0], k=k)
     crosses = [compute_cross_stats_host(ra, rb, m) for ra, rb in zip(a, b)]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *crosses)
     res = plan_mod.execute(plan, stack)
-    if return_b:
-        return res.dist, res.index, res.dist_b, res.index_b
-    return res.dist, res.index
+    return build_result(plan, res, legacy_arity=4 if return_b else 2)
 
 
 def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
@@ -887,29 +1263,40 @@ def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
 
 
 def matrix_profile_nonnorm(ts, window: int, exclusion: int | None = None,
-                           band: int = DEFAULT_BAND):
-    """Exact non-normalized matrix profile -> (euclid distance (l,), idx).
+                           band: int = DEFAULT_BAND) -> "ProfileResult":
+    """Exact non-normalized matrix profile -> `ProfileResult` (euclid
+    distances; left/right split carried like the z-normalized entry).
 
     Thin entry over a nonnorm self-join plan; the jitted sweep itself is
     `nonnorm_profile_from_ts` (one pass of k in [excl, l); row and column
     harvests of each band tile cover both triangles — no reversed pass).
     """
     from repro.core import plan as plan_mod
+    from repro.core.result import build_result
 
     ts = jnp.asarray(ts, jnp.float32)
     m = int(window)
     plan = plan_mod.plan_sweep(m, ts.shape[0] - m + 1, exclusion=exclusion,
                                normalize=False, band=band)
     res = plan_mod.execute(plan, ts)
-    return res.dist, res.index
+    return build_result(plan, res)
+
+
+def nonnorm_to_distance(state: ProfileState) -> jax.Array:
+    """Finish a nonnorm state (corr = negated squared distance) to euclid
+    distance — inf where the side never saw a cell."""
+    dist = jnp.sqrt(jnp.maximum(-state.corr, 0.0))
+    return jnp.where(jnp.isfinite(state.corr), dist, jnp.inf)
 
 
 @partial(jax.jit, static_argnums=(1, 2, 3))
 def nonnorm_profile_from_ts(ts: jax.Array, window: int, exclusion: int,
-                            band: int = DEFAULT_BAND):
+                            band: int = DEFAULT_BAND) -> SplitProfile:
     """Jitted nonnorm self-join core: one two-sided sweep of k in [excl, l).
     Executor-facing (core.plan); `exclusion` is concrete here — defaults are
-    the planner's job."""
+    the planner's job. Returns a `SplitProfile` of states in NEGATED
+    squared-distance space (merge max-semantics); finish each side with
+    `nonnorm_to_distance`."""
     m = int(window)
     excl = int(exclusion)
     ts = jnp.asarray(ts, jnp.float32)
@@ -927,11 +1314,9 @@ def nonnorm_profile_from_ts(ts: jax.Array, window: int, exclusion: int,
 
     init = (ProfileState.empty(l, -jnp.inf),
             ColState.empty(0, l, l + band, -jnp.inf))
-    (merged, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
-    merged = merged.merge(col.to_profile(0, l))
-    dist = jnp.sqrt(jnp.maximum(-merged.corr, 0.0))
-    dist = jnp.where(jnp.isfinite(merged.corr), dist, jnp.inf)
-    return dist, merged.index
+    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    left = col.to_profile(0, l)
+    return SplitProfile(merged=rows.merge(left), right=rows, left=left)
 
 
 def band_rowmin_nonnorm_ab(ts_a: jax.Array, ts_b: jax.Array, d20s: jax.Array,

@@ -17,9 +17,8 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.matrix_profile import (matrix_profile,
-                                       matrix_profile_nonnorm,
-                                       top_discords)
+from repro.core import analytics
+from repro.core.matrix_profile import matrix_profile, matrix_profile_nonnorm
 
 
 @dataclasses.dataclass
@@ -63,24 +62,21 @@ class TelemetryMonitor:
             return []
         ts = jnp.asarray(np.asarray(self._trace, np.float32))
         if self.normalize:
-            profile, index = matrix_profile(ts, self.window)
+            result = matrix_profile(ts, self.window)
         else:
-            profile, index = matrix_profile_nonnorm(ts, self.window)
-        p = np.asarray(profile)
+            result = matrix_profile_nonnorm(ts, self.window)
+        p = np.asarray(result.p)
         finite = p[np.isfinite(p)]
         if finite.size < 8:
             return []
         mean, std = float(finite.mean()), float(finite.std() + 1e-12)
         excl = max(1, self.window // 4)
-        picks = np.asarray(top_discords(jnp.asarray(p), index, top_k, excl))
         out = []
-        for pos in picks:
-            score = float(p[pos])
-            if not np.isfinite(score):
-                continue
-            z = (score - mean) / std
+        for d in analytics.discords(result, n=top_k, exclusion=excl):
+            z = (d.score - mean) / std
             if z >= self.zscore_alarm:
-                out.append(Discord(position=int(pos), score=score, zscore=z))
+                out.append(Discord(position=d.position, score=d.score,
+                                   zscore=z))
         return out
 
     def motif(self) -> tuple[int, int] | None:
@@ -88,6 +84,6 @@ class TelemetryMonitor:
         if not self.ready:
             return None
         ts = jnp.asarray(np.asarray(self._trace, np.float32))
-        profile, index = matrix_profile(ts, self.window)
-        i = int(jnp.argmin(jnp.where(jnp.isfinite(profile), profile, jnp.inf)))
-        return i, int(index[i])
+        result = matrix_profile(ts, self.window)
+        motifs = analytics.top_motifs(result, max_motifs=1)
+        return (motifs[0].a, motifs[0].b) if motifs else None

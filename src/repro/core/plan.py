@@ -50,9 +50,11 @@ import jax.numpy as jnp
 # for engine-only users.
 from repro.core.matrix_profile import (
     AB_ROWSTREAM_MAX_ROWS, DEFAULT_BAND, DEFAULT_RESEED, ab_join_from_stats,
-    ab_join_nonnorm, ab_join_rowstream, default_exclusion,
-    nonnorm_profile_from_ts, profile_from_stats,
+    ab_join_nonnorm, ab_join_rowstream, ab_join_rowstream_topk,
+    ab_join_topk_from_stats, default_exclusion, nonnorm_profile_from_ts,
+    nonnorm_to_distance, profile_from_stats, profile_topk_from_stats,
 )
+from repro.core.result import HarvestSpec
 from repro.core.zstats import CrossStats, ZStats, corr_to_dist
 
 BACKENDS = ("engine", "rowstream", "kernel", "distributed")
@@ -80,7 +82,8 @@ class SweepPlan:
     # -- normalization -----------------------------------------------------
     normalize: bool = True          # z-normalized corr vs raw euclidean
     # -- harvest -----------------------------------------------------------
-    harvest: str = "both"           # "row" (A side only) | "both"
+    # sides "row" (A side only) | "both"; k > 1 = exact top-k accumulators
+    harvest: HarvestSpec = HarvestSpec()
     swap_ab: bool = False           # executor sweeps B-vs-A, un-swaps outputs
     # -- tiling ------------------------------------------------------------
     band: int = DEFAULT_BAND        # diagonals per band tile
@@ -110,14 +113,28 @@ class SweepPlan:
 
 @dataclasses.dataclass
 class SweepResult:
-    """Distances + neighbour indices of an executed plan, in the caller's
-    orientation. `dist_b/index_b` are the B side of a two-sided AB harvest
-    (None for self-joins and `harvest="row"` plans)."""
+    """Everything an executed plan harvested, in the caller's orientation.
+
+    `dist/index` are the classic merged profile. `dist_b/index_b` are the B
+    side of a two-sided AB harvest (None for self-joins and sides="row"
+    plans). Self-join plans also carry the LEFT/RIGHT split the sweep
+    computed anyway (column/row harvest; None for AB). Plans with
+    `harvest.k > 1` fill the `(l, k)` top-k fields (best-first; slot 0 ==
+    the merged profile's values). `core.result.build_result` wraps this
+    into the public `ProfileResult`."""
 
     dist: jax.Array
     index: jax.Array
     dist_b: jax.Array | None = None
     index_b: jax.Array | None = None
+    left_dist: jax.Array | None = None
+    left_index: jax.Array | None = None
+    right_dist: jax.Array | None = None
+    right_index: jax.Array | None = None
+    topk_dist: jax.Array | None = None
+    topk_index: jax.Array | None = None
+    topk_dist_b: jax.Array | None = None
+    topk_index_b: jax.Array | None = None
 
 
 def _kernel_self_col_tile(l: int, excl: int, it: int, dt: int,
@@ -140,7 +157,8 @@ def _kernel_self_col_tile(l: int, excl: int, it: int, dt: int,
 
 def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
                exclusion: int | None = None, normalize: bool = True,
-               harvest: str = "both", backend: str | None = None,
+               harvest: str | HarvestSpec = "both", k: int = 1,
+               backend: str | None = None,
                band: int = DEFAULT_BAND, clamp_rows: bool = True,
                col_tile: int | None = None,
                reseed_every: int | None = DEFAULT_RESEED,
@@ -150,17 +168,61 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
     make inline. `l_a`/`l_b` are SUBSEQUENCE counts (n - window + 1);
     `backend=None` lets the planner choose (entry points only force a backend
     when the user asked for a specific engine, e.g. the Pallas kernel ops or
-    the scheduler's SPMD rounds)."""
+    the scheduler's SPMD rounds).
+
+    `harvest` is the sides string ("row" | "both") or a full `HarvestSpec`;
+    `k` (> 1 = exact top-k accumulators) overrides the spec's k. Top-k
+    planning rules, all pinned here:
+      * the kernel backend's VMEM accumulator layout is k = 1-only — a
+        kernel request with k > 1 PLANS A FALLBACK to the band engine
+        (same answer, same single sweep, no kernel launch);
+      * likewise the banked column accumulator (`col_tile`) stays k = 1 —
+        top-k plans pin flat accumulation;
+      * rowstream's per-row `lax.top_k` needs k neighbours to exist on the
+        full-width side, and the band engines reduce top-k over the band
+        axis — so k must fit min(l_a, l_b) resp. `band`;
+      * the nonnorm recurrence has no top-k harvest (nobody asked for
+        amplitude-anomaly k-NN yet) — explicit ValueError.
+    """
     m = int(window)
     kind = "self" if l_b is None else "ab"
     if exclusion is None:
         excl = default_exclusion(m) if kind == "self" else 0
     else:
         excl = int(exclusion)
+    if isinstance(harvest, HarvestSpec):
+        spec = harvest if int(k) == 1 else dataclasses.replace(harvest,
+                                                               k=int(k))
+    else:
+        spec = HarvestSpec(sides=harvest, k=int(k))
+    topk = spec.k > 1
+
+    if topk and not normalize:
+        raise ValueError("top-k (k > 1) harvests are z-normalized only: the "
+                         "nonnorm engines carry no top-k accumulator")
+    if topk and backend == "kernel":
+        # planful fallback: the kernel's banked VMEM accumulators are k=1;
+        # the band engine answers the same plan from the same single sweep.
+        # col_tile rides along only as the kernel's banking knob, so it is
+        # dropped with the backend (otherwise the generic topk+col_tile
+        # guard below would reject a fallback the caller was promised)
+        backend = "engine"
+        col_tile = None
+    if topk and kind == "self" and excl == 0:
+        raise ValueError(
+            "self-join top-k needs exclusion >= 1: with exclusion=0 every "
+            "cell (i, i) is harvested by BOTH the row and column sides, so "
+            "the union would hold the self-match twice (and slot 0 would "
+            "be the trivial zero-distance self-match anyway)")
+    if topk and spec.k > int(band):
+        raise ValueError(f"k={spec.k} exceeds band={band}: the band engines "
+                         "reduce top-k over the band axis — raise band or "
+                         "lower k")
 
     if backend is None:
         if kind == "ab" and normalize and batch is None and clamp_rows \
-                and min(l_a, l_b) <= AB_ROWSTREAM_MAX_ROWS:
+                and min(l_a, l_b) <= AB_ROWSTREAM_MAX_ROWS \
+                and spec.k <= min(l_a, l_b):
             backend = "rowstream"
         else:
             backend = "engine"
@@ -171,6 +233,9 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
     if backend == "rowstream" and kind != "ab":
         raise ValueError("rowstream sweeps the AB rectangle; self-joins use "
                          "the band engine (or the kernel)")
+    if backend == "rowstream" and spec.k > min(l_a, l_b):
+        raise ValueError(f"rowstream top-k needs k <= min(l_a, l_b) = "
+                         f"{min(l_a, l_b)}, got k={spec.k}")
     if batch is not None and backend != "engine":
         raise ValueError("batched plans vmap the band engine; "
                          f"backend {backend!r} cannot batch")
@@ -178,6 +243,12 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
         raise ValueError("batched plans are z-normalized only: the nonnorm "
                          "sweeps take raw series, which the executor does "
                          "not vmap")
+    if topk and col_tile is not None:
+        raise ValueError("the banked column accumulator (col_tile) is "
+                         "k=1-only; top-k plans accumulate flat")
+    if topk and not clamp_rows:
+        raise ValueError("clamp_rows=False is the k=1 A/B-comparison sweep; "
+                         "top-k plans always row-clamp")
 
     # short side onto rows for the backends whose row axis is streamed
     swap_ab = (kind == "ab" and backend in ("rowstream", "kernel")
@@ -189,7 +260,7 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
     return SweepPlan(kind=kind, l_a=int(l_a),
                      l_b=None if l_b is None else int(l_b),
                      window=m, exclusion=excl,
-                     normalize=normalize, harvest=harvest, swap_ab=swap_ab,
+                     normalize=normalize, harvest=spec, swap_ab=swap_ab,
                      band=int(band), clamp_rows=clamp_rows, col_tile=col_tile,
                      it=int(it), dt=int(dt), reseed_every=reseed_every,
                      backend=backend, interpret=interpret, batch=batch)
@@ -259,34 +330,63 @@ def execute(plan: SweepPlan, stats) -> SweepResult:
 def _execute_self(plan: SweepPlan, stats) -> SweepResult:
     m = plan.window
     if not plan.normalize:
-        dist, idx = nonnorm_profile_from_ts(
+        split = nonnorm_profile_from_ts(
             jnp.asarray(stats, jnp.float32), m, plan.exclusion, plan.band)
-        return SweepResult(dist, idx)
+        return SweepResult(
+            nonnorm_to_distance(split.merged), split.merged.index,
+            left_dist=nonnorm_to_distance(split.left),
+            left_index=split.left.index,
+            right_dist=nonnorm_to_distance(split.right),
+            right_index=split.right.index)
     if plan.backend == "kernel":
         from repro.kernels import ops
 
+        # the kernel's two halves ARE the split: row half = right profile
+        # (j > i), column half = left profile (i < j)
         corr_r, idx_r, corr_c, idx_c = ops.rowmax_from_stats(
             stats, excl=plan.exclusion, it=plan.it, dt=plan.dt,
             col_tile=plan.col_tile, interpret=plan.interpret)
         corr, idx = ops._merge_corr(corr_r, idx_r, corr_c, idx_c)
-        return SweepResult(_kernel_dist(corr, m), idx)
+        return SweepResult(
+            _kernel_dist(corr, m), idx,
+            left_dist=_kernel_dist(corr_c, m), left_index=idx_c,
+            right_dist=_kernel_dist(corr_r, m), right_index=idx_r)
+    if plan.harvest.k > 1:
+        fn = lambda s: profile_topk_from_stats(             # noqa: E731
+            s, plan.exclusion, plan.band, plan.reseed_every, plan.harvest.k)
+        if plan.batch is not None:
+            fn = jax.vmap(fn)
+        merged, rows, col = fn(stats)
+        dk = merged.to_distance(m)
+        return SweepResult(
+            dk[..., 0], merged.index[..., 0],
+            left_dist=col.to_distance(m)[..., 0],
+            left_index=col.index[..., 0],
+            right_dist=rows.to_distance(m)[..., 0],
+            right_index=rows.index[..., 0],
+            topk_dist=dk, topk_index=merged.index)
     fn = lambda s: profile_from_stats(                      # noqa: E731
         s, plan.exclusion, plan.band, plan.reseed_every)
     if plan.batch is not None:
         fn = jax.vmap(fn)
-    merged = fn(stats)
-    return SweepResult(merged.to_distance(m), merged.index)
+    split = fn(stats)
+    return SweepResult(
+        split.merged.to_distance(m), split.merged.index,
+        left_dist=split.left.to_distance(m), left_index=split.left.index,
+        right_dist=split.right.to_distance(m), right_index=split.right.index)
 
 
 def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
     m = plan.window
-    two_sided = plan.harvest == "both"
+    two_sided = plan.harvest.sides == "both"
     if not plan.normalize:
         ts_a, ts_b = stats
         da, ia, db, ib = ab_join_nonnorm(
             ts_a, ts_b, m, plan.exclusion, plan.band,
             two_sided=two_sided, clamp_rows=plan.clamp_rows)
         return SweepResult(da, ia, db, ib)
+    if plan.harvest.k > 1:
+        return _execute_ab_topk(plan, stats, two_sided)
     if plan.backend == "rowstream":
         sa, sb = ab_join_rowstream(stats, plan.exclusion, plan.reseed_every)
         if plan.swap_ab:
@@ -316,6 +416,34 @@ def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
     return SweepResult(sa.to_distance(m), sa.index,
                        sb.to_distance(m) if two_sided else None,
                        sb.index if two_sided else None)
+
+
+def _execute_ab_topk(plan: SweepPlan, stats, two_sided: bool) -> SweepResult:
+    """k > 1 AB plans: rowstream's per-row/insertion top-k or the band
+    engine's widened `(l, k)` accumulators — one sweep either way. The
+    rowstream sweep always carries both sides (B's set IS its running
+    accumulator); a sides="row" plan simply drops the B side here."""
+    m = plan.window
+    k = plan.harvest.k
+    if plan.backend == "rowstream":
+        ta, tb = ab_join_rowstream_topk(stats, plan.exclusion,
+                                        plan.reseed_every, k)
+        if plan.swap_ab:
+            ta, tb = tb, ta
+    else:
+        fn = lambda c: ab_join_topk_from_stats(             # noqa: E731
+            c, plan.exclusion, plan.band, plan.reseed_every, two_sided, k)
+        if plan.batch is not None:
+            fn = jax.vmap(fn)
+        ta, tb = fn(stats)
+    da = ta.to_distance(m)
+    res = SweepResult(da[..., 0], ta.index[..., 0],
+                      topk_dist=da, topk_index=ta.index)
+    if two_sided and tb is not None:
+        db = tb.to_distance(m)
+        res.dist_b, res.index_b = db[..., 0], tb.index[..., 0]
+        res.topk_dist_b, res.topk_index_b = db, tb.index
+    return res
 
 
 def round_executor(plan: SweepPlan, mesh, axis: str = "workers"):

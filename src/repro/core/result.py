@@ -1,0 +1,163 @@
+"""Profile API v2: the rich result object every entry point returns.
+
+The paper positions the matrix profile as the substrate for a family of
+time-series data-mining tasks — motif discovery, discord (anomaly)
+detection, segmentation — and those tasks need MORE than the bare
+nearest-neighbor vector the old `(P, I)` tuples carried:
+
+  * top-k neighbor sets (motif groups, k-NN discords),
+  * LEFT/RIGHT split profiles (nearest neighbor strictly before / strictly
+    after each position — streaming discords, arc-curve segmentation),
+  * the B side of an AB join,
+  * the geometry/normalize metadata needed to interpret any of it.
+
+The sweep engines were already HARVESTING this structure and throwing it
+away: the band engine's row harvest of a self-join covers exactly the
+cells j > i (the RIGHT profile) and its column harvest exactly j < i (the
+LEFT profile) — the old entry points merged them into one array and
+discarded the split. `ProfileResult` keeps every side the executed
+`SweepPlan` produced; `repro.core.analytics` consumes it.
+
+Tuple compatibility: for one release, iterating or indexing a
+`ProfileResult` reproduces the legacy tuple — `p, i = matrix_profile(...)`
+and `matrix_profile(...)[0]` keep working, with a `DeprecationWarning`.
+The legacy arity is 4 for calls that used `return_b=True`, 2 otherwise,
+matching what each old call site unpacked.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class HarvestSpec:
+    """What a sweep should harvest, beyond touching every cell.
+
+    `sides`: "row" harvests only the row side (AB: A's profile — the cheap
+    path when B's is not wanted); "both" harvests row AND column sides
+    (self-join: merged profile + left/right split; AB: A's and B's
+    profiles) from the same streamed cells.
+
+    `k`: neighbors kept per position. k == 1 is the classic profile and
+    runs the unchanged (bitwise-pinned) engine paths; k > 1 widens the
+    accumulators to exact (l, k) insertion-merged top-k sets through the
+    engine, rowstream, and distributed/scheduler backends (the kernel
+    backend plans a fallback to the engine — its VMEM accumulator layout
+    stays k = 1).
+    """
+
+    sides: str = "both"           # "row" | "both"
+    k: int = 1
+
+    def __post_init__(self):
+        if self.sides not in ("row", "both"):
+            raise ValueError(f"harvest sides must be 'row' or 'both', "
+                             f"got {self.sides!r}")
+        if int(self.k) < 1:
+            raise ValueError(f"harvest k must be >= 1, got {self.k}")
+
+
+_DEPRECATION_MSG = (
+    "unpacking a ProfileResult like a tuple is deprecated and will be "
+    "removed next release; use result.p / result.i (and .b_p/.b_i, "
+    ".left_p/.right_p, .topk_p/.topk_i) instead")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileResult:
+    """Everything one executed sweep learned, in the caller's orientation.
+
+    `p`/`i` are the classic merged profile: `p[t]` the distance from
+    subsequence t to its nearest admissible neighbor, `i[t]` that
+    neighbor's start position (-1 where none exists). Batched entry points
+    return stacked `(B, l)` arrays in every field.
+
+    Self-joins additionally carry the SPLIT profiles — `left_p/left_i`
+    restrict the neighbor to j < t, `right_p/right_i` to j > t; these are
+    the row/column harvests of the same sweep, so
+    `min(left_p, right_p) == p` elementwise (inf where a side is empty).
+    AB joins instead carry B's profile against A (`b_p/b_i`) when the
+    harvest asked for both sides.
+
+    With `k > 1`, `topk_p/topk_i` are exact `(l, k)` best-first neighbor
+    sets (slot 0 == the k = 1 profile; unfilled slots are inf/-1), and
+    `b_topk_p/b_topk_i` the B-side sets for a two-sided AB harvest.
+    """
+
+    p: Any                                # (l,) merged distance profile
+    i: Any                                # (l,) i32 neighbor index (-1: none)
+    # -- self-join split sides (None for AB joins / "row" harvests) --------
+    left_p: Any = None                    # nearest neighbor at j < t
+    left_i: Any = None
+    right_p: Any = None                   # nearest neighbor at j > t
+    right_i: Any = None
+    # -- AB join B side (None for self-joins / "row" harvests) -------------
+    b_p: Any = None                       # (l_b,) B's profile against A
+    b_i: Any = None
+    # -- top-k neighbor sets (None unless k > 1) ---------------------------
+    topk_p: Any = None                    # (l, k) best-first distances
+    topk_i: Any = None
+    b_topk_p: Any = None
+    b_topk_i: Any = None
+    # -- metadata ----------------------------------------------------------
+    kind: str = "self"                    # "self" | "ab"
+    window: int = 0
+    exclusion: int = 0
+    normalize: bool = True
+    k: int = 1
+    backend: str = "engine"
+    # legacy tuple arity (2, or 4 for old `return_b=True` call sites)
+    legacy_arity: int = 2
+
+    # -- convenience -------------------------------------------------------
+
+    @property
+    def n_subsequences(self) -> int:
+        return self.p.shape[-1]
+
+    def has_split(self) -> bool:
+        return self.left_p is not None
+
+    def has_topk(self) -> bool:
+        return self.topk_p is not None
+
+    # -- one-release tuple-unpacking deprecation shim ----------------------
+
+    def _legacy_tuple(self):
+        if self.legacy_arity == 4:
+            return (self.p, self.i, self.b_p, self.b_i)
+        return (self.p, self.i)
+
+    def __iter__(self):
+        warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=2)
+        return iter(self._legacy_tuple())
+
+    def __getitem__(self, item):
+        warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=2)
+        return self._legacy_tuple()[item]
+
+    def __len__(self) -> int:
+        return self.legacy_arity
+
+
+def build_result(plan, res, *, legacy_arity: int = 2) -> ProfileResult:
+    """Wrap an executed plan's `SweepResult` into the public `ProfileResult`.
+
+    `plan` is the `SweepPlan` that produced `res` — geometry metadata and
+    the harvest spec are read off it (duck-typed here; `core.plan` imports
+    this module, not the other way round).
+    """
+    spec = plan.harvest
+    return ProfileResult(
+        p=res.dist, i=res.index,
+        left_p=res.left_dist, left_i=res.left_index,
+        right_p=res.right_dist, right_i=res.right_index,
+        b_p=res.dist_b, b_i=res.index_b,
+        topk_p=res.topk_dist, topk_i=res.topk_index,
+        b_topk_p=res.topk_dist_b, b_topk_i=res.topk_index_b,
+        kind=plan.kind, window=plan.window, exclusion=plan.exclusion,
+        normalize=plan.normalize, k=spec.k, backend=plan.backend,
+        legacy_arity=legacy_arity)

@@ -32,8 +32,9 @@ import numpy as np
 
 from repro.core import partition
 from repro.core import plan as plan_mod
-from repro.core.matrix_profile import ProfileState
+from repro.core.matrix_profile import ProfileState, TopKState
 from repro.core.partition import AnytimePlan
+from repro.core.result import ProfileResult
 from repro.core.zstats import compute_cross_stats_host, compute_stats_host
 
 
@@ -41,9 +42,12 @@ from repro.core.zstats import compute_cross_stats_host, compute_stats_host
 class SchedulerState:
     plan: AnytimePlan
     done: np.ndarray            # (C,) bool
-    profile: ProfileState       # merged (A side), lives on device(s)
+    # merged running state (A side), lives on device(s): a ProfileState for
+    # k == 1, a (l, k) TopKState for top-k schedules
+    profile: ProfileState | TopKState
     rounds_completed: int
-    profile_b: ProfileState | None = None   # AB joins: B side of the sweep
+    # AB joins: B side of the sweep
+    profile_b: ProfileState | TopKState | None = None
 
     @property
     def fraction_done(self) -> float:
@@ -72,11 +76,12 @@ class AnytimeScheduler:
 
     def __init__(self, ts, window: int, mesh, *, axis: str = "workers",
                  band: int = 64, chunks_per_worker: int = 8,
-                 exclusion: int | None = None, ts_b=None):
+                 exclusion: int | None = None, ts_b=None, k: int = 1):
         self.window = int(window)
         self.mesh = mesh
         self.axis = axis
         self.band = band
+        self.k = int(k)
         self.ab = ts_b is not None
         ts = np.asarray(ts, np.float32)
         n_workers = mesh.shape[axis]
@@ -105,15 +110,19 @@ class AnytimeScheduler:
         self.n_bands = max(1, -(-max(widths) // band)) if widths else 1
         self.sweep_plan = plan_mod.plan_sweep(
             self.window, self.l, self.l_b, exclusion=self.exclusion,
-            band=band, backend="distributed")
+            band=band, backend="distributed", k=self.k)
         self._round_fn = self._make_round_fn()
         self.state = SchedulerState(
             plan=self.plan,
             done=np.zeros(len(self.plan.chunks), bool),
-            profile=ProfileState.empty(self.l),
+            profile=self._empty_state(self.l),
             rounds_completed=0,
-            profile_b=ProfileState.empty(self.l_b) if self.ab else None,
+            profile_b=self._empty_state(self.l_b) if self.ab else None,
         )
+
+    def _empty_state(self, l: int):
+        return (TopKState.empty(l, self.k) if self.k > 1
+                else ProfileState.empty(l))
 
     def _make_round_fn(self):
         """One SPMD round step via the plan executor — the scheduler never
@@ -218,7 +227,7 @@ class AnytimeScheduler:
                  meta=json.dumps(dict(l=self.l, l_b=self.l_b,
                                       window=self.window,
                                       exclusion=self.exclusion,
-                                      band=self.band,
+                                      band=self.band, k=self.k,
                                       chunks=list(self.plan.chunks),
                                       # done-chunks carry BOTH profile
                                       # halves; pre-fusion checkpoints
@@ -248,14 +257,21 @@ class AnytimeScheduler:
                 "checkpoint predates the fused two-sided engine; its "
                 "completed chunks lack column-half updates — recompute "
                 "from scratch")
+        # a top-k checkpoint's done-chunks carry (l, k) neighbour sets; a
+        # k-mismatched resume would silently truncate or pad them
+        ck = int(meta.get("k", 1))
+        if ck != self.k:
+            raise ValueError(f"checkpoint carries k={ck} neighbour sets but "
+                             f"this scheduler was built with k={self.k}")
         done = z["done"]
-        profile = ProfileState(jnp.asarray(z["corr"]), jnp.asarray(z["index"]))
+        state_cls = TopKState if self.k > 1 else ProfileState
+        profile = state_cls(jnp.asarray(z["corr"]), jnp.asarray(z["index"]))
         profile_b = None
         if self.ab:
             if "corr_b" not in z:
                 raise ValueError("AB checkpoint must carry the B-side state")
-            profile_b = ProfileState(jnp.asarray(z["corr_b"]),
-                                     jnp.asarray(z["index_b"]))
+            profile_b = state_cls(jnp.asarray(z["corr_b"]),
+                                  jnp.asarray(z["index_b"]))
         workers = n_workers or self.mesh.shape[self.axis]
         base = AnytimePlan(l=self.l, exclusion=self.exclusion,
                            n_workers=workers,
@@ -271,9 +287,45 @@ class AnytimeScheduler:
 
     # -- results -------------------------------------------------------------
 
-    def distance_profile(self) -> tuple[jax.Array, jax.Array]:
-        return (self.state.profile.to_distance(self.window),
-                self.state.profile.index)
+    def _side(self, state) -> tuple[jax.Array, jax.Array]:
+        """(dist, index) of one running state — slot 0 for top-k."""
+        d = state.to_distance(self.window)
+        if self.k > 1:
+            return d[..., 0], state.index[..., 0]
+        return d, state.index
+
+    def result(self) -> ProfileResult:
+        """The current merged anytime answer as a `ProfileResult` (exact
+        after `run()`; monotonically improving after any round). Top-k
+        schedules fill `topk_p/topk_i` (and the B side for AB joins); the
+        left/right split is not carried through distributed rounds — chunks
+        merge their sides before the all-reduce to keep round traffic at
+        one state per side."""
+        kw = dict(kind="ab" if self.ab else "self", window=self.window,
+                  exclusion=self.exclusion, k=self.k, backend="distributed")
+        if self.k > 1:
+            # convert the (l, k) state ONCE; slot 0 is then bitwise-
+            # consistent with topk_p[..., 0] by construction
+            dk = self.state.profile.to_distance(self.window)
+            p, i = dk[..., 0], self.state.profile.index[..., 0]
+            kw.update(topk_p=dk, topk_i=self.state.profile.index)
+        else:
+            p, i = self._side(self.state.profile)
+        if self.ab:
+            if self.k > 1:
+                dkb = self.state.profile_b.to_distance(self.window)
+                kw.update(b_p=dkb[..., 0],
+                          b_i=self.state.profile_b.index[..., 0],
+                          b_topk_p=dkb, b_topk_i=self.state.profile_b.index)
+            else:
+                bp, bi = self._side(self.state.profile_b)
+                kw.update(b_p=bp, b_i=bi)
+        return ProfileResult(p=p, i=i, **kw)
+
+    def distance_profile(self) -> ProfileResult:
+        """Legacy accessor — now the same `ProfileResult` as `result()`;
+        `p, i = sch.distance_profile()` keeps unpacking for one release."""
+        return self.result()
 
     def distance_profile_b(self) -> tuple[jax.Array, jax.Array]:
         """B's profile against A — the column harvest of the same rounds.
@@ -281,5 +333,4 @@ class AnytimeScheduler:
         if not self.ab:
             raise ValueError("distance_profile_b() requires an AB scheduler "
                              "(construct with ts_b=...)")
-        return (self.state.profile_b.to_distance(self.window),
-                self.state.profile_b.index)
+        return self._side(self.state.profile_b)

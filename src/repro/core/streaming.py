@@ -20,11 +20,23 @@ monitor can stream either mode.
 
 from __future__ import annotations
 
+from collections import OrderedDict
+
 import numpy as np
 
 
 class StreamingProfile:
     """Append-only exact matrix profile over a growing series."""
+
+    # LRU bounds for query()'s caches: the resident corpus-side states
+    # (keyed by (n_points, normalize) — a long-lived monitor that appends
+    # between queries, or flips distance modes, would otherwise accrete one
+    # O(n·m) window matrix per corpus shape it ever queried) and the
+    # per-query-shape SweepPlans inside each state (one per distinct query
+    # length ever seen). Both are tiny working sets in practice — the
+    # bounds exist so the degenerate access patterns stay O(1) memory.
+    REF_CACHE_MAX = 4
+    PLAN_CACHE_MAX = 8
 
     def __init__(self, window: int, exclusion: int | None = None,
                  normalize: bool = True, max_points: int | None = None):
@@ -35,9 +47,10 @@ class StreamingProfile:
         self._ts: list[float] = []
         self._profile = np.zeros((0,), np.float64)     # squared distance
         self._index = np.zeros((0,), np.int64)
-        # query()'s resident corpus-side state: stats/windows + per-shape
-        # SweepPlans, keyed by (n_points, normalize) — see _ref_state()
-        self._ref_cache = None
+        # query()'s resident corpus-side states: small LRU of
+        # (n_points, normalize) -> dict(stats/windows/ts + plans LRU) —
+        # see _ref_state()
+        self._ref_cache: OrderedDict = OrderedDict()
 
     # -- internals -----------------------------------------------------------
 
@@ -116,27 +129,52 @@ class StreamingProfile:
         by BOTH corpus length and distance mode (a `normalize` flip after a
         query used to serve stale centered windows), with the per-query-shape
         `SweepPlan`s cached alongside so repeated query() calls skip planning
-        entirely."""
+        entirely. Both layers are LRU-bounded (`REF_CACHE_MAX` states,
+        `PLAN_CACHE_MAX` plans each): corpus growth and mode flips retire
+        the least-recently-queried states instead of accreting them."""
         import jax.numpy as jnp
 
         from repro.core.zstats import compute_stats_host
 
         n = len(self._ts)
-        cache = self._ref_cache
-        if (cache is None or cache["n"] != n
-                or cache["normalize"] != self.normalize):
+        key = (n, self.normalize)
+        cache = self._ref_cache.get(key)
+        if cache is None:
             t = np.asarray(self._ts, np.float64)
-            cache = dict(n=n, normalize=self.normalize, plans={})
+            cache = dict(n=n, normalize=self.normalize, plans=OrderedDict())
             if self.normalize:
                 cache["stats"], cache["windows"] = compute_stats_host(
                     t, self.m, min_subsequences=1,
                     return_centered_windows=True)
             else:
                 cache["ts"] = jnp.asarray(t, jnp.float32)
-            self._ref_cache = cache
+            self._ref_cache[key] = cache
+            while len(self._ref_cache) > self.REF_CACHE_MAX:
+                self._ref_cache.popitem(last=False)
+        else:
+            self._ref_cache.move_to_end(key)
         return cache
 
-    def query(self, values) -> tuple[np.ndarray, np.ndarray]:
+    def _plan_for(self, cache: dict, lq: int):
+        """Per-query-shape plan off the state's LRU (evicting beyond
+        `PLAN_CACHE_MAX` distinct query lengths)."""
+        from repro.core import plan as plan_mod
+
+        plans = cache["plans"]
+        plan = plans.get(lq)
+        if plan is None:
+            l_ref = cache["n"] - self.m + 1
+            plan = plan_mod.plan_sweep(self.m, lq, l_ref, exclusion=0,
+                                       normalize=self.normalize,
+                                       harvest="row")
+            plans[lq] = plan
+            while len(plans) > self.PLAN_CACHE_MAX:
+                plans.popitem(last=False)
+        else:
+            plans.move_to_end(lq)
+        return plan
+
+    def query(self, values):
         """Score a query stream against the FIXED reference corpus — the
         series appended so far — WITHOUT appending it: an AB `SweepPlan`
         with the streaming state as the resident B side (the serving
@@ -144,14 +182,17 @@ class StreamingProfile:
         plan executor, so the distance conventions are the engine's own —
         zstats + core.plan — not a NumPy re-implementation).
 
-        For each of the query's l_q = len(q) - m + 1 subsequences, returns
-        its distance to the nearest reference subsequence and that
-        reference's start index: (distances (l_q,), ref_indices (l_q,)).
-        No exclusion zone — query and reference are different series.
+        Returns a `ProfileResult` (numpy-backed): for each of the query's
+        l_q = len(q) - m + 1 subsequences, `result.p` is its distance to
+        the nearest reference subsequence and `result.i` that reference's
+        start index. Legacy `d, idx = sp.query(q)` unpacking keeps working
+        for one release. No exclusion zone — query and reference are
+        different series.
         """
         import jax.numpy as jnp
 
         from repro.core import plan as plan_mod
+        from repro.core.result import ProfileResult
         from repro.core.zstats import compute_stats_host, cross_stats_from_parts
 
         q = np.atleast_1d(np.asarray(values, np.float64))
@@ -162,13 +203,7 @@ class StreamingProfile:
             raise ValueError("reference corpus has no complete window yet")
         lq = q.shape[0] - self.m + 1
         cache = self._ref_state()
-        l_ref = cache["n"] - self.m + 1
-        plan = cache["plans"].get(lq)
-        if plan is None:
-            plan = plan_mod.plan_sweep(self.m, lq, l_ref, exclusion=0,
-                                       normalize=self.normalize,
-                                       harvest="row")
-            cache["plans"][lq] = plan
+        plan = self._plan_for(cache, lq)
         if self.normalize:
             s_q, w_q = compute_stats_host(q, self.m, min_subsequences=1,
                                           return_centered_windows=True)
@@ -181,8 +216,11 @@ class StreamingProfile:
         else:
             stats = (jnp.asarray(q, jnp.float32), cache["ts"])
         res = plan_mod.execute(plan, stats)
-        return (np.asarray(res.dist, np.float64),
-                np.asarray(res.index, np.int64))
+        return ProfileResult(p=np.asarray(res.dist, np.float64),
+                             i=np.asarray(res.index, np.int64),
+                             kind="ab", window=self.m, exclusion=0,
+                             normalize=self.normalize,
+                             backend=plan.backend)
 
     @property
     def n_subsequences(self) -> int:

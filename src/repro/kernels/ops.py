@@ -91,24 +91,30 @@ def _merge_corr(corr_a, idx_a, corr_b, idx_b):
 
 def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
                          it: int = 256, dt: int = 8,
-                         col_tile: int | None = None, interpret: bool = True):
-    """Full matrix profile via the Pallas kernel. -> (distance (l,), idx (l,)).
+                         col_tile: int | None = None, interpret: bool = True,
+                         k: int = 1):
+    """Full matrix profile via the Pallas kernel -> `ProfileResult` (with
+    the left/right split — the kernel's column/row halves — for free; tuple
+    unpacking keeps working for one release).
 
     Thin entry: builds a kernel-backend `SweepPlan` (the planner pins the
     `auto_col_tile` banking choice into the plan) and executes it — one
     launch, one pass over the streams: no reversed-series stats, no second
     launch. Matches core.matrix_profile / the brute-force oracle (tests
-    enforce it).
+    enforce it). `k > 1` PLANS A FALLBACK to the band engine (the kernel's
+    banked VMEM accumulators are k = 1-only — gated in `plan_sweep`), so
+    top-k requests still answer exactly, just not through Pallas.
     """
     from repro.core import plan as plan_mod
+    from repro.core.result import build_result
 
     m = int(window)
     arr = np.asarray(ts)
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
                                backend="kernel", it=it, dt=dt,
-                               col_tile=col_tile, interpret=interpret)
+                               col_tile=col_tile, interpret=interpret, k=k)
     res = plan_mod.execute(plan, compute_stats_host(arr, m))
-    return res.dist, res.index
+    return build_result(plan, res)
 
 
 # -- AB join through the kernel ----------------------------------------------
@@ -188,19 +194,22 @@ def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
 
 def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
                   it: int = 256, dt: int = 8, col_tile: int | None = None,
-                  interpret: bool = True, return_b: bool = False):
-    """AB join via the Pallas kernel -> (distance (l_a,), idx (l_a,)).
+                  interpret: bool = True, return_b: bool = False,
+                  k: int = 1):
+    """AB join via the Pallas kernel -> `ProfileResult`.
 
-    With `return_b=True` additionally returns B's profile against A —
-    (dist_a, idx_a, dist_b (l_b,), idx_b) — the column harvest of the same
-    launch, not a second join. Matches core.matrix_profile.ab_join / the
-    brute-force oracle (tests enforce it). No exclusion zone by default —
-    pass one only to recover the self-join as the A == B special case.
-    The rectangle is swept with its SHORT side on the row axis (fewest
-    computed tiles); outputs are mapped back, so callers never see the
-    orientation.
+    With `return_b=True` the result additionally carries B's profile
+    against A (`.b_p`/`.b_i`) — the column harvest of the same launch, not
+    a second join — and legacy 4-tuple unpacking keeps working for one
+    release. Matches core.matrix_profile.ab_join / the brute-force oracle
+    (tests enforce it). No exclusion zone by default — pass one only to
+    recover the self-join as the A == B special case. The rectangle is
+    swept with its SHORT side on the row axis (fewest computed tiles);
+    outputs are mapped back, so callers never see the orientation. `k > 1`
+    plans the band-engine fallback (see `natsa_matrix_profile`).
     """
     from repro.core import plan as plan_mod
+    from repro.core.result import build_result
 
     m = int(window)
     a, b = np.asarray(ts_a), np.asarray(ts_b)
@@ -208,13 +217,11 @@ def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
                                exclusion=exclusion, backend="kernel",
                                harvest="both" if return_b else "row",
                                it=it, dt=dt, col_tile=col_tile,
-                               interpret=interpret)
+                               interpret=interpret, k=k)
     # swap_ab: row tiles cover the SHORT side — an (l_a/it x (l_a+l_b)/dt)
     # grid shrinks to (l_b/it x (l_a+l_b)/dt), the kernel-side row clamp
     res = plan_mod.execute(plan, plan_mod.cross_stats_for(plan, a, b))
-    if return_b:
-        return res.dist, res.index, res.dist_b, res.index_b
-    return res.dist, res.index
+    return build_result(plan, res, legacy_arity=4 if return_b else 2)
 
 
 VMEM_BYTES = 128 * 2**20 // 8   # ~16 MiB/core, keep ~50% headroom

@@ -1,0 +1,126 @@
+"""API-surface snapshot: the public `repro.core` namespace and the
+`ProfileResult` / `HarvestSpec` / `SweepPlan` field lists are PINNED.
+
+A failing test here means the public API changed. That is sometimes the
+point — then update the snapshot IN THE SAME change and say so in the PR —
+but it must never happen as a side effect. CI runs this with the
+plan-dispatch job on both supported jax versions, so an accidental rename,
+a lost re-export, or a dataclass-field drift cannot slip through while the
+behavioural suites still pass.
+"""
+
+import dataclasses
+
+import repro.core as core
+from repro.core.plan import SweepPlan
+from repro.core.result import HarvestSpec, ProfileResult
+
+CORE_ALL = [
+    "CrossStats",
+    "HarvestSpec",
+    "ProfileResult",
+    "ProfileState",
+    "SweepPlan",
+    "SweepResult",
+    "TopKState",
+    "ZStats",
+    "ab_join",
+    "analytics",
+    "batch_ab_join",
+    "batch_profile",
+    "compute_cross_stats_host",
+    "compute_stats",
+    "corr_to_dist",
+    "execute",
+    "matrix_profile",
+    "matrix_profile_nonnorm",
+    "plan_sweep",
+    "round_executor",
+    "self_cross",
+    "top_discords",
+    "top_motif",
+]
+
+PROFILE_RESULT_FIELDS = [
+    "p",
+    "i",
+    "left_p",
+    "left_i",
+    "right_p",
+    "right_i",
+    "b_p",
+    "b_i",
+    "topk_p",
+    "topk_i",
+    "b_topk_p",
+    "b_topk_i",
+    "kind",
+    "window",
+    "exclusion",
+    "normalize",
+    "k",
+    "backend",
+    "legacy_arity",
+]
+
+HARVEST_SPEC_FIELDS = ["sides", "k"]
+
+SWEEP_PLAN_FIELDS = [
+    "kind",
+    "l_a",
+    "l_b",
+    "window",
+    "exclusion",
+    "normalize",
+    "harvest",
+    "swap_ab",
+    "band",
+    "clamp_rows",
+    "col_tile",
+    "n_bands",
+    "it",
+    "dt",
+    "reseed_every",
+    "backend",
+    "interpret",
+    "batch",
+]
+
+
+def _fields(cls):
+    return [f.name for f in dataclasses.fields(cls)]
+
+
+def test_core_all_is_pinned():
+    assert core.__all__ == CORE_ALL
+    for name in CORE_ALL:
+        assert hasattr(core, name), name
+
+
+def test_profile_result_fields_are_pinned():
+    assert _fields(ProfileResult) == PROFILE_RESULT_FIELDS
+
+
+def test_harvest_spec_fields_are_pinned():
+    assert _fields(HarvestSpec) == HARVEST_SPEC_FIELDS
+
+
+def test_sweep_plan_fields_are_pinned():
+    assert _fields(SweepPlan) == SWEEP_PLAN_FIELDS
+
+
+def test_analytics_surface():
+    from repro.core import analytics
+
+    for name in ("top_motifs", "discords", "regimes", "corrected_arc_curve",
+                 "Motif", "Discord", "Regimes"):
+        assert hasattr(analytics, name), name
+
+
+def test_entry_points_return_profile_result():
+    """The v2 contract itself: every core entry point's return type."""
+    import inspect
+
+    assert "ProfileResult" in (inspect.signature(core.matrix_profile)
+                               .return_annotation)
+    assert "ProfileResult" in inspect.signature(core.ab_join).return_annotation

@@ -67,6 +67,29 @@ for r in range(ab.plan.n_rounds):
 pab, _ = ab.distance_profile()
 out["ab_monotone"] = ab_mono
 out["ab_err"] = float(np.abs(np.asarray(pab) - np.asarray(pab_ref)).max())
+
+# top-k across REAL multi-worker rounds: the union all-reduce must stay an
+# exact top-k when every round's gather carries 8 workers' candidate sets
+# (a 1-worker mesh cannot exercise the duplicate-eviction failure mode —
+# the running state must be merged once, not once per worker)
+from repro.core.ref import distance_matrix
+k = 4
+excl = 5
+dm = np.array(distance_matrix(jnp.asarray(ts), m))
+ii = np.arange(dm.shape[0])
+dm[np.abs(ii[:, None] - ii[None, :]) < excl] = np.inf
+ref_topk = np.sort(np.partition(dm, k - 1, axis=1)[:, :k], axis=1)
+sk = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16,
+                      exclusion=excl, k=k)
+sk.run()
+rk = sk.result()
+out["topk_err"] = float(np.abs(np.asarray(rk.topk_p) - ref_topk).max())
+dup = 0
+tki = np.asarray(rk.topk_i)
+for row in tki:
+    live = row[row >= 0]
+    dup = max(dup, len(live) - len(set(live.tolist())))
+out["topk_dup"] = dup
 print(json.dumps(out))
 """ % (SRC,)
 
@@ -95,3 +118,11 @@ def test_failure_and_elastic_resume_exact(results):
 def test_ab_join_multiworker_exact_and_monotone(results):
     assert results["ab_err"] < 2e-3
     assert results["ab_monotone"]
+
+
+def test_topk_multiworker_exact_no_duplicates(results):
+    """8-worker top-k schedule == np.partition oracle, and no position's
+    neighbour set contains duplicates (the symptom of all-reducing an
+    already-merged running state)."""
+    assert results["topk_err"] < 2e-3
+    assert results["topk_dup"] == 0

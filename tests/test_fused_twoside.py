@@ -66,7 +66,7 @@ def test_fused_matches_two_pass(n, m, kind):
     ts = _series(n, seed=n + m, kind=kind)
     excl = max(1, m // 4)
     stats = compute_stats_host(ts, m)
-    fused = profile_from_stats(stats, excl, 64, 512)
+    fused = profile_from_stats(stats, excl, 64, 512).merged
     two_pass = _two_pass_reference(ts, m, excl, band=64)
     # the fused column harvest accumulates along the FORWARD recurrence while
     # the reversed pass accumulated backwards, so agreement is to f32
@@ -93,7 +93,7 @@ def test_fused_row_half_matches_forward_pass_and_is_deterministic():
         rc, ri, _, _ = band_rowmax(stats, jnp.int32(excl + b * band), band,
                                    reseed_every=512)
         fwd = fwd.merge(ProfileState(rc, ri))
-    fused = profile_from_stats(stats, excl, band, 512)
+    fused = profile_from_stats(stats, excl, band, 512).merged
     # wherever the merged winner came from the row side (index > position),
     # it must match the reference forward pass
     pos = np.arange(l)
@@ -102,7 +102,7 @@ def test_fused_row_half_matches_forward_pass_and_is_deterministic():
     np.testing.assert_allclose(np.asarray(fused.corr)[from_row],
                                np.asarray(fwd.corr)[from_row], atol=2e-5)
     # determinism: identical inputs -> identical bits
-    again = profile_from_stats(stats, excl, band, 512)
+    again = profile_from_stats(stats, excl, band, 512).merged
     np.testing.assert_array_equal(np.asarray(fused.corr),
                                   np.asarray(again.corr))
     np.testing.assert_array_equal(np.asarray(fused.index),

@@ -23,7 +23,8 @@ from repro.core import plan as plan_mod
 from repro.core.matrix_profile import (
     DEFAULT_BAND, DEFAULT_RESEED, ab_join, ab_join_from_stats,
     ab_join_rowstream, batch_ab_join, batch_profile, matrix_profile,
-    matrix_profile_nonnorm, nonnorm_profile_from_ts, profile_from_stats,
+    matrix_profile_nonnorm, nonnorm_profile_from_ts, nonnorm_to_distance,
+    profile_from_stats,
 )
 from repro.core.zstats import (
     compute_cross_stats_host, compute_stats_host, corr_to_dist,
@@ -37,21 +38,35 @@ from repro.kernels import ops
 def test_matrix_profile_equals_direct_engine_call():
     ts = _series(400, seed=1)
     m, excl = 16, 4
-    p, i = matrix_profile(ts, m, excl)
+    res = matrix_profile(ts, m, excl)
     stats = compute_stats_host(ts, m)
-    merged = profile_from_stats(stats, excl, DEFAULT_BAND, DEFAULT_RESEED)
-    np.testing.assert_array_equal(np.asarray(p),
-                                  np.asarray(merged.to_distance(m)))
-    np.testing.assert_array_equal(np.asarray(i), np.asarray(merged.index))
+    split = profile_from_stats(stats, excl, DEFAULT_BAND, DEFAULT_RESEED)
+    np.testing.assert_array_equal(np.asarray(res.p),
+                                  np.asarray(split.merged.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(res.i),
+                                  np.asarray(split.merged.index))
+    # the entry's split sides are the core's row/column harvests verbatim
+    np.testing.assert_array_equal(np.asarray(res.right_p),
+                                  np.asarray(split.right.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(res.left_p),
+                                  np.asarray(split.left.to_distance(m)))
+    np.testing.assert_array_equal(
+        np.minimum(np.asarray(res.left_p), np.asarray(res.right_p)),
+        np.asarray(res.p))
 
 
 def test_matrix_profile_nonnorm_equals_direct_engine_call():
     ts = _series(300, seed=2, kind="noise")
     m, excl = 16, 4
-    p, i = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
-    pd, idd = nonnorm_profile_from_ts(jnp.asarray(ts, jnp.float32), m, excl)
-    np.testing.assert_array_equal(np.asarray(p), np.asarray(pd))
-    np.testing.assert_array_equal(np.asarray(i), np.asarray(idd))
+    res = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
+    split = nonnorm_profile_from_ts(jnp.asarray(ts, jnp.float32), m, excl)
+    np.testing.assert_array_equal(np.asarray(res.p),
+                                  np.asarray(nonnorm_to_distance(split.merged)))
+    np.testing.assert_array_equal(np.asarray(res.i),
+                                  np.asarray(split.merged.index))
+    np.testing.assert_array_equal(
+        np.minimum(np.asarray(res.left_p), np.asarray(res.right_p)),
+        np.asarray(res.p))
 
 
 def test_ab_join_equals_direct_rowstream_call():
@@ -61,15 +76,15 @@ def test_ab_join_equals_direct_rowstream_call():
     a = _series(500, seed=3)
     b = _series(120, seed=4)
     m = 12
-    da, ia, db, ib = ab_join(a, b, m, return_b=True)
+    res = ab_join(a, b, m, return_b=True)
     cross = compute_cross_stats_host(b, a, m)        # short side on rows
     sb, sa = ab_join_rowstream(cross, 0, DEFAULT_RESEED)
-    np.testing.assert_array_equal(np.asarray(da),
+    np.testing.assert_array_equal(np.asarray(res.p),
                                   np.asarray(sa.to_distance(m)))
-    np.testing.assert_array_equal(np.asarray(ia), np.asarray(sa.index))
-    np.testing.assert_array_equal(np.asarray(db),
+    np.testing.assert_array_equal(np.asarray(res.i), np.asarray(sa.index))
+    np.testing.assert_array_equal(np.asarray(res.b_p),
                                   np.asarray(sb.to_distance(m)))
-    np.testing.assert_array_equal(np.asarray(ib), np.asarray(sb.index))
+    np.testing.assert_array_equal(np.asarray(res.b_i), np.asarray(sb.index))
 
 
 def test_engine_backend_plan_equals_direct_banded_call():
@@ -97,43 +112,47 @@ def test_batch_entries_equal_direct_vmap():
     stack = np.stack([_series(260, seed=i, kind=k)
                       for i, k in enumerate(["walk", "noise", "sine"])])
     m, excl = 14, 3
-    bp, bi = batch_profile(stack, m, exclusion=excl)
+    bres = batch_profile(stack, m, exclusion=excl)
     stats = [compute_stats_host(s, m) for s in stack]
     st_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stats)
-    merged = jax.vmap(
+    split = jax.vmap(
         lambda s: profile_from_stats(s, excl, DEFAULT_BAND, DEFAULT_RESEED)
     )(st_stack)
-    np.testing.assert_array_equal(np.asarray(bp),
-                                  np.asarray(merged.to_distance(m)))
-    np.testing.assert_array_equal(np.asarray(bi), np.asarray(merged.index))
+    np.testing.assert_array_equal(np.asarray(bres.p),
+                                  np.asarray(split.merged.to_distance(m)))
+    np.testing.assert_array_equal(np.asarray(bres.i),
+                                  np.asarray(split.merged.index))
 
     b = np.stack([_series(90, seed=10 + i, kind="sine") for i in range(3)])
-    dab, iab = batch_ab_join(stack, b, m)
+    abres = batch_ab_join(stack, b, m)
     crosses = [compute_cross_stats_host(ra, rb, m)
                for ra, rb in zip(stack, b)]
     c_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *crosses)
     sa, _ = jax.vmap(
         lambda c: ab_join_from_stats(c, 0, DEFAULT_BAND, DEFAULT_RESEED,
                                      False, True, None))(c_stack)
-    np.testing.assert_array_equal(np.asarray(dab),
+    np.testing.assert_array_equal(np.asarray(abres.p),
                                   np.asarray(sa.to_distance(m)))
-    np.testing.assert_array_equal(np.asarray(iab), np.asarray(sa.index))
+    np.testing.assert_array_equal(np.asarray(abres.i), np.asarray(sa.index))
 
 
 def test_kernel_entries_equal_direct_kernel_calls():
     ts = _series(360, seed=7)
     m, excl = 16, 4
-    p, i = ops.natsa_matrix_profile(ts, m, exclusion=excl, it=128, dt=8)
+    res = ops.natsa_matrix_profile(ts, m, exclusion=excl, it=128, dt=8)
     stats = compute_stats_host(ts, m)
     cr, ir, cc, ic = ops.rowmax_from_stats(stats, excl=excl, it=128, dt=8)
     corr, idx = ops._merge_corr(cr, ir, cc, ic)
     dist = jnp.where(corr <= ops.NEG + 1e-6, jnp.inf,
                      corr_to_dist(jnp.clip(corr, -1.0, 1.0), m))
-    np.testing.assert_array_equal(np.asarray(p), np.asarray(dist))
-    np.testing.assert_array_equal(np.asarray(i), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(res.p), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(res.i), np.asarray(idx))
+    # the kernel's row/column halves surface as the right/left split
+    np.testing.assert_array_equal(np.asarray(res.right_i), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(res.left_i), np.asarray(ic))
 
     b = _series(140, seed=8, kind="sine")
-    da, ia, db, ib = ops.natsa_ab_join(ts, b, m, it=64, dt=8, return_b=True)
+    abres = ops.natsa_ab_join(ts, b, m, it=64, dt=8, return_b=True)
     cross = compute_cross_stats_host(b, ts, m)       # short side on rows
     cb, ixb, ca, ixa = ops.ab_rowmax_from_stats(cross, exclusion=0,
                                                 it=64, dt=8)
@@ -142,10 +161,10 @@ def test_kernel_entries_equal_direct_kernel_calls():
         return jnp.where(c <= ops.NEG + 1e-6, jnp.inf,
                          corr_to_dist(jnp.clip(c, -1.0, 1.0), m))
 
-    np.testing.assert_array_equal(np.asarray(da), np.asarray(d(ca)))
-    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ixa))
-    np.testing.assert_array_equal(np.asarray(db), np.asarray(d(cb)))
-    np.testing.assert_array_equal(np.asarray(ib), np.asarray(ixb))
+    np.testing.assert_array_equal(np.asarray(abres.p), np.asarray(d(ca)))
+    np.testing.assert_array_equal(np.asarray(abres.i), np.asarray(ixa))
+    np.testing.assert_array_equal(np.asarray(abres.b_p), np.asarray(d(cb)))
+    np.testing.assert_array_equal(np.asarray(abres.b_i), np.asarray(ixb))
 
 
 def test_streaming_query_equals_direct_rowstream():
@@ -157,11 +176,12 @@ def test_streaming_query_equals_direct_rowstream():
     m = 12
     sp = StreamingProfile(m, 3)
     sp.append(ref)
-    d, idx = sp.query(q)
+    qres = sp.query(q)
     cross = compute_cross_stats_host(q, ref, m)      # query side is shorter
     sa, _ = ab_join_rowstream(cross, 0, DEFAULT_RESEED)
-    np.testing.assert_array_equal(d, np.asarray(sa.to_distance(m), np.float64))
-    np.testing.assert_array_equal(idx, np.asarray(sa.index, np.int64))
+    np.testing.assert_array_equal(qres.p,
+                                  np.asarray(sa.to_distance(m), np.float64))
+    np.testing.assert_array_equal(qres.i, np.asarray(sa.index, np.int64))
 
 
 @settings(max_examples=10, deadline=None)
@@ -173,15 +193,16 @@ def test_property_entry_equals_plan_execute_and_oracle(seed, m, kind):
     na, nb = 180, 110
     a = _series(na, seed=seed, kind=kind)
     b = _series(nb, seed=seed + 1, kind=kind)
-    p, idx = ab_join(a, b, m)
+    entry = ab_join(a, b, m)
     plan = plan_mod.plan_sweep(m, na - m + 1, nb - m + 1, harvest="row")
     stats = (compute_cross_stats_host(b, a, m) if plan.swap_ab
              else compute_cross_stats_host(a, b, m))
     res = plan_mod.execute(plan, stats)
-    np.testing.assert_array_equal(np.asarray(p), np.asarray(res.dist))
-    np.testing.assert_array_equal(np.asarray(idx), np.asarray(res.index))
+    np.testing.assert_array_equal(np.asarray(entry.p), np.asarray(res.dist))
+    np.testing.assert_array_equal(np.asarray(entry.i), np.asarray(res.index))
     p_ref, _ = oracle_ab(a, b, m)
-    np.testing.assert_allclose(np.asarray(p), p_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(entry.p), p_ref,
+                               rtol=2e-3, atol=2e-3)
 
 
 # -- 2. planner choices, table-driven -----------------------------------------
@@ -222,6 +243,21 @@ def test_property_entry_equals_plan_execute_and_oracle(seed, m, kind):
     # kernel AB: orientation chosen at plan time, banking per span in ops
     (dict(window=128, l_a=3969, l_b=385, backend="kernel"),
      dict(backend="kernel", swap_ab=True, col_tile=None)),
+    # top-k: the kernel's VMEM accumulators are k=1-only — a kernel request
+    # with k > 1 plans the band-engine fallback (and skips kernel banking)
+    (dict(window=128, l_a=16257, backend="kernel", k=4),
+     dict(backend="engine", col_tile=None)),
+    # the fallback must also DROP an explicit kernel banking knob — a tuned
+    # kernel call (it/dt/col_tile) with k > 1 still falls back, not raises
+    (dict(window=128, l_a=16257, backend="kernel", k=4,
+          it=2048, dt=64, col_tile=4096),
+     dict(backend="engine", col_tile=None)),
+    # top-k rowstream-eligible skew still takes rowstream (k fits)
+    (dict(window=128, l_a=3969, l_b=385, k=4),
+     dict(backend="rowstream", swap_ab=True)),
+    # k wider than the short side: rowstream ineligible, engine instead
+    (dict(window=16, l_a=400, l_b=20, k=24),
+     dict(backend="engine")),
 ])
 def test_plan_sweep_choices(kwargs, expect):
     kwargs = dict(kwargs)
@@ -255,8 +291,9 @@ def test_scheduler_builds_distributed_plan():
 
 
 def test_streaming_query_cache_and_plan_reuse():
-    """Satellite: the corpus cache must invalidate on a `normalize` flip and
-    must memoize the plan per query shape."""
+    """Satellite: the corpus cache must key on the distance mode (a
+    `normalize` flip must not serve stale centered windows) and must
+    memoize the plan per query shape."""
     from repro.core.streaming import StreamingProfile
 
     rng = np.random.default_rng(13)
@@ -264,19 +301,18 @@ def test_streaming_query_cache_and_plan_reuse():
     sp.append(rng.normal(size=80))
     q = rng.normal(size=30)
     sp.query(q)
-    cache = sp._ref_cache
-    assert cache["normalize"] is True and 23 in cache["plans"]
+    state = sp._ref_cache[(80, True)]
+    assert state["normalize"] is True and 23 in state["plans"]
     sp.query(q)
-    assert sp._ref_cache is cache            # cache + plan reused
-    d_norm, _ = sp.query(q)
-    sp.normalize = False                     # mode flip must invalidate
-    d_raw, _ = sp.query(q)
-    assert sp._ref_cache is not cache
-    assert sp._ref_cache["normalize"] is False
+    assert sp._ref_cache[(80, True)] is state        # state + plan reused
+    d_norm = sp.query(q).p
+    sp.normalize = False                 # mode flip must miss the z-norm key
+    d_raw = sp.query(q).p
+    assert sp._ref_cache[(80, False)]["normalize"] is False
     assert not np.allclose(d_norm, d_raw)    # raw vs z-norm really differ
     sp.normalize = True
-    sp.query(q)
-    assert sp._ref_cache["normalize"] is True
+    np.testing.assert_array_equal(sp.query(q).p, d_norm)
+    assert sp._ref_cache[(80, True)] is state        # LRU kept both modes
 
 
 # -- guard rails --------------------------------------------------------------
@@ -307,3 +343,19 @@ def test_planner_and_executor_reject_invalid_combinations():
     with pytest.raises(ValueError, match="distributed"):
         plan_mod.round_executor(plan_mod.plan_sweep(16, 85), mesh=None)
     assert dataclasses.replace(dist_plan, n_bands=4).n_bands == 4
+    # top-k gates
+    with pytest.raises(ValueError, match="z-normalized"):
+        plan_mod.plan_sweep(16, 100, normalize=False, k=4)
+    with pytest.raises(ValueError, match="band"):
+        plan_mod.plan_sweep(16, 5000, k=300, band=256)
+    with pytest.raises(ValueError, match="rowstream"):
+        plan_mod.plan_sweep(16, 400, 20, backend="rowstream", k=24)
+    with pytest.raises(ValueError, match="col_tile"):
+        plan_mod.plan_sweep(16, 5000, k=4, col_tile=512)
+    with pytest.raises(ValueError, match="clamp_rows"):
+        plan_mod.plan_sweep(16, 400, 100, k=4, clamp_rows=False)
+    with pytest.raises(ValueError, match="k"):
+        plan_mod.plan_sweep(16, 100, k=0)
+    # exclusion=0 self-join top-k would double-count the diagonal self-match
+    with pytest.raises(ValueError, match="exclusion"):
+        plan_mod.plan_sweep(16, 100, exclusion=0, k=4)

@@ -1,0 +1,430 @@
+"""Profile API v2: `ProfileResult` left/right splits, exact top-k, the
+tuple-unpacking deprecation shim, the analytics layer, and the streaming
+LRU bounds — all oracle-backed from first principles (dense numpy distance
+matrices, `np.partition`/`np.sort` for top-k), no shared code with src/.
+"""
+
+import os
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from test_ab_join import _series
+
+from repro.core import analytics
+from repro.core import plan as plan_mod
+from repro.core.matrix_profile import ab_join, batch_profile, matrix_profile
+from repro.core.result import HarvestSpec, ProfileResult
+from repro.kernels import ops
+
+
+# -- dense numpy oracles ------------------------------------------------------
+
+
+def _dense_self(ts, m, excl):
+    """(l, l) z-norm distance matrix with the exclusion band at inf."""
+    t = np.asarray(ts, np.float64)
+    l = t.shape[0] - m + 1
+    w = np.stack([t[i:i + m] for i in range(l)])
+    w = w - w.mean(axis=1, keepdims=True)
+    n = np.linalg.norm(w, axis=1)
+    denom = np.maximum(n[:, None] * n[None, :], 1e-300)
+    c = np.where((n[:, None] > 0) & (n[None, :] > 0), w @ w.T / denom, 0.0)
+    d = np.sqrt(np.maximum(2 * m * (1 - np.clip(c, -1, 1)), 0.0))
+    ii = np.arange(l)
+    d[np.abs(ii[:, None] - ii[None, :]) < excl] = np.inf
+    return d
+
+
+def _dense_ab(a, b, m):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    la, lb = a.shape[0] - m + 1, b.shape[0] - m + 1
+    wa = np.stack([a[i:i + m] for i in range(la)])
+    wb = np.stack([b[j:j + m] for j in range(lb)])
+    wa = wa - wa.mean(axis=1, keepdims=True)
+    wb = wb - wb.mean(axis=1, keepdims=True)
+    na, nb = np.linalg.norm(wa, axis=1), np.linalg.norm(wb, axis=1)
+    denom = np.maximum(na[:, None] * nb[None, :], 1e-300)
+    c = np.where((na[:, None] > 0) & (nb[None, :] > 0),
+                 wa @ wb.T / denom, 0.0)
+    return np.sqrt(np.maximum(2 * m * (1 - np.clip(c, -1, 1)), 0.0))
+
+
+def _topk_oracle(d, k):
+    """Best-first top-k distances per row — np.partition then sort, the
+    straight-line reference for the engines' insertion-merged sets."""
+    part = np.partition(d, min(k, d.shape[1]) - 1, axis=1)[:, :k]
+    return np.sort(part, axis=1)
+
+
+# -- left/right split profiles ------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["walk", "noise", "sine"])
+def test_left_right_split_vs_dense_oracle(kind):
+    ts = _series(320, seed=3, kind=kind)
+    m, excl = 16, 4
+    res = matrix_profile(ts, m, excl)
+    d = _dense_self(ts, m, excl)
+    ii = np.arange(d.shape[0])
+    d_left = np.where(ii[None, :] < ii[:, None], d, np.inf)
+    d_right = np.where(ii[None, :] > ii[:, None], d, np.inf)
+    np.testing.assert_allclose(np.asarray(res.left_p), d_left.min(axis=1),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(res.right_p), d_right.min(axis=1),
+                               rtol=2e-3, atol=2e-3)
+    # split indices point the right way and realize their distances
+    li, ri = np.asarray(res.left_i), np.asarray(res.right_i)
+    assert (li[li >= 0] < ii[li >= 0]).all()
+    assert (ri[ri >= 0] > ii[ri >= 0]).all()
+    # acceptance: elementwise min(left, right) == merged profile, exactly
+    np.testing.assert_array_equal(
+        np.minimum(np.asarray(res.left_p), np.asarray(res.right_p)),
+        np.asarray(res.p))
+
+
+def test_kernel_split_matches_engine_split():
+    ts = _series(300, seed=5)
+    m, excl = 16, 4
+    ker = ops.natsa_matrix_profile(ts, m, exclusion=excl, it=64, dt=8)
+    eng = matrix_profile(ts, m, excl)
+    np.testing.assert_allclose(np.asarray(ker.left_p),
+                               np.asarray(eng.left_p), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(ker.right_p),
+                               np.asarray(eng.right_p), atol=2e-3)
+    np.testing.assert_array_equal(
+        np.minimum(np.asarray(ker.left_p), np.asarray(ker.right_p)),
+        np.asarray(ker.p))
+
+
+# -- exact top-k --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_topk_self_join_vs_partition_oracle(k):
+    ts = _series(300, seed=7)
+    m, excl = 16, 4
+    res = matrix_profile(ts, m, excl, k=k)
+    d = _dense_self(ts, m, excl)
+    np.testing.assert_allclose(np.asarray(res.topk_p), _topk_oracle(d, k),
+                               rtol=2e-3, atol=2e-3)
+    # slots are best-first and the indices realize their distances
+    tk_p, tk_i = np.asarray(res.topk_p), np.asarray(res.topk_i)
+    assert (np.diff(tk_p, axis=1) >= -1e-6).all()
+    for t in range(0, tk_p.shape[0], 37):
+        for s in range(k):
+            if tk_i[t, s] >= 0:
+                assert abs(d[t, tk_i[t, s]] - tk_p[t, s]) < 2e-3
+    # a position's top-k neighbours are distinct
+    for t in range(0, tk_p.shape[0], 23):
+        live = tk_i[t][tk_i[t] >= 0]
+        assert len(set(live.tolist())) == live.size
+
+
+def test_topk_slot0_equals_k1_profile_engine_and_rowstream():
+    """Acceptance: top-k slot 0 == the k=1 profile (values, exactly)."""
+    ts = _series(300, seed=9)
+    m, excl = 16, 4
+    r1 = matrix_profile(ts, m, excl)
+    rk = matrix_profile(ts, m, excl, k=4)
+    np.testing.assert_array_equal(np.asarray(rk.topk_p[:, 0]),
+                                  np.asarray(r1.p))
+    np.testing.assert_array_equal(np.asarray(rk.p), np.asarray(r1.p))
+
+    a = _series(400, seed=10)
+    b = _series(90, seed=11)
+    ab1 = ab_join(a, b, 12, return_b=True)
+    abk = ab_join(a, b, 12, return_b=True, k=3)
+    assert abk.backend == "rowstream"
+    np.testing.assert_array_equal(np.asarray(abk.topk_p[:, 0]),
+                                  np.asarray(ab1.p))
+    np.testing.assert_array_equal(np.asarray(abk.b_topk_p[:, 0]),
+                                  np.asarray(ab1.b_p))
+
+
+@pytest.mark.parametrize("backend", ["engine", "rowstream"])
+def test_topk_ab_both_sides_vs_partition_oracle(backend):
+    a = _series(260, seed=13)
+    b = _series(120, seed=14, kind="sine")
+    m, k = 12, 3
+    la, lb = 260 - m + 1, 120 - m + 1
+    plan = plan_mod.plan_sweep(m, la, lb, backend=backend, k=k)
+    res = plan_mod.execute(plan, plan_mod.cross_stats_for(plan, a, b))
+    d = _dense_ab(a, b, m)
+    np.testing.assert_allclose(np.asarray(res.topk_dist), _topk_oracle(d, k),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(res.topk_dist_b),
+                               _topk_oracle(d.T, k), rtol=2e-3, atol=2e-3)
+
+
+def test_topk_exclusion_edge_rows():
+    """Self-as-AB with an exclusion band: edge rows have FEWER than k
+    admissible neighbours — unfilled slots must come back inf/-1, filled
+    ones must match the oracle."""
+    ts = _series(120, seed=15)
+    m, excl, k = 16, 51, 6   # huge exclusion: middle rows see < k neighbours
+    res = ab_join(ts, ts, m, exclusion=excl, return_b=True, k=k)
+    d = _dense_self(ts, m, excl)
+    ref = _topk_oracle(d, k)
+    tk = np.asarray(res.topk_p)
+    fin = np.isfinite(ref)
+    assert (~fin).any()               # the starvation case really occurs
+    np.testing.assert_allclose(tk[fin], ref[fin], rtol=2e-3, atol=2e-3)
+    assert np.isinf(tk[~fin]).all()
+    assert (np.asarray(res.topk_i)[~fin] == -1).all()
+    # self-as-AB top-k == self-join top-k (the reduction identity, widened)
+    self_res = matrix_profile(ts, m, excl, k=k)
+    np.testing.assert_allclose(tk, np.asarray(self_res.topk_p), atol=2e-3)
+
+
+def test_topk_batch_stacks():
+    stack = np.stack([_series(220, seed=20 + i) for i in range(3)])
+    m, excl, k = 14, 3, 3
+    res = batch_profile(stack, m, exclusion=excl, k=k)
+    assert res.topk_p.shape == (3, 220 - m + 1, k)
+    for r in range(3):
+        d = _dense_self(stack[r], m, excl)
+        np.testing.assert_allclose(np.asarray(res.topk_p[r]),
+                                   _topk_oracle(d, k), rtol=2e-3, atol=2e-3)
+
+
+# -- scheduler: top-k rounds, checkpoint/resume mid-round ---------------------
+
+
+def _mesh1():
+    from repro.launch.mesh import make_worker_mesh
+    return make_worker_mesh(1)
+
+
+def test_scheduler_topk_exact_and_slot0():
+    from repro.core.scheduler import AnytimeScheduler
+
+    ts = _series(300, seed=31)
+    m, excl, k = 16, 4, 4
+    sch = AnytimeScheduler(ts, m, _mesh1(), chunks_per_worker=4, band=16,
+                           exclusion=excl, k=k)
+    sch.run()
+    res = sch.result()
+    d = _dense_self(ts, m, excl)
+    np.testing.assert_allclose(np.asarray(res.topk_p), _topk_oracle(d, k),
+                               rtol=2e-3, atol=2e-3)
+    # acceptance: slot 0 == the k=1 schedule's profile (values, exactly)
+    sch1 = AnytimeScheduler(ts, m, _mesh1(), chunks_per_worker=4, band=16,
+                            exclusion=excl)
+    sch1.run()
+    np.testing.assert_array_equal(np.asarray(res.topk_p[:, 0]),
+                                  np.asarray(sch1.result().p))
+
+
+def test_scheduler_topk_checkpoint_resume_mid_round(tmp_path):
+    from repro.core.scheduler import AnytimeScheduler
+
+    ts = _series(300, seed=33)
+    m, excl, k = 16, 4, 3
+    path = str(tmp_path / "topk.npz")
+
+    full = AnytimeScheduler(ts, m, _mesh1(), chunks_per_worker=4, band=16,
+                            exclusion=excl, k=k)
+    full.run()
+
+    part = AnytimeScheduler(ts, m, _mesh1(), chunks_per_worker=4, band=16,
+                            exclusion=excl, k=k)
+    part.step_round()
+    part.step_round()
+    assert 0.0 < part.state.fraction_done < 1.0
+    part.checkpoint(path)
+
+    res = AnytimeScheduler(ts, m, _mesh1(), chunks_per_worker=4, band=16,
+                           exclusion=excl, k=k)
+    res.resume(path)
+    res.run()
+    np.testing.assert_array_equal(np.asarray(res.result().topk_p),
+                                  np.asarray(full.result().topk_p))
+    np.testing.assert_array_equal(np.asarray(res.result().topk_i),
+                                  np.asarray(full.result().topk_i))
+    # a k-mismatched scheduler must refuse the checkpoint outright
+    from repro.core.scheduler import AnytimeScheduler as AS
+    other = AS(ts, m, _mesh1(), chunks_per_worker=4, band=16,
+               exclusion=excl, k=2)
+    with pytest.raises(ValueError, match="k="):
+        other.resume(path)
+
+
+def test_scheduler_ab_topk_both_sides():
+    from repro.core.scheduler import AnytimeScheduler
+
+    a = _series(260, seed=35)
+    b = _series(130, seed=36)
+    m, k = 16, 2
+    sch = AnytimeScheduler(a, m, _mesh1(), ts_b=b, chunks_per_worker=4,
+                           band=16, k=k)
+    sch.run()
+    res = sch.result()
+    d = _dense_ab(a, b, m)
+    np.testing.assert_allclose(np.asarray(res.topk_p), _topk_oracle(d, k),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(res.b_topk_p),
+                               _topk_oracle(d.T, k), rtol=2e-3, atol=2e-3)
+
+
+# -- the tuple-unpacking deprecation shim -------------------------------------
+
+
+def test_tuple_unpacking_shim_warns_and_matches():
+    ts = _series(200, seed=41)
+    res = matrix_profile(ts, 16, 4)
+    with pytest.warns(DeprecationWarning, match="unpacking"):
+        p, i = matrix_profile(ts, 16, 4)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(res.p))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(res.i))
+    with pytest.warns(DeprecationWarning):
+        assert np.asarray(res[0]).shape == res.p.shape
+    # return_b call sites unpacked FOUR values — the shim preserves arity
+    a, b = _series(150, seed=42), _series(90, seed=43)
+    with pytest.warns(DeprecationWarning):
+        da, ia, db, ib = ab_join(a, b, 12, return_b=True)
+    assert len(ab_join(a, b, 12, return_b=True)) == 4
+    assert len(ab_join(a, b, 12)) == 2
+
+
+def test_harvest_spec_validation():
+    with pytest.raises(ValueError, match="sides"):
+        HarvestSpec(sides="sideways")
+    with pytest.raises(ValueError, match="k"):
+        HarvestSpec(k=0)
+    spec = HarvestSpec(sides="row", k=3)
+    plan = plan_mod.plan_sweep(16, 200, 100, harvest=spec)
+    assert plan.harvest == spec
+
+
+# -- analytics layer ----------------------------------------------------------
+
+
+def _planted_motif_series(n=700, m=40, seed=51):
+    """iid-noise background (mutually distant windows) + three noisy copies
+    of a chirp — a 3-member motif group; per-copy noise keeps the pairwise
+    distances on one scale, so the radius-2 group rule must pull in the
+    third copy."""
+    rng = np.random.default_rng(seed)
+    ts = rng.normal(size=n)
+    t = np.linspace(0, 1, m)
+    pattern = np.sin(2 * np.pi * (2 * t + 6 * t * t)) * 3
+    for p in (100, 300, 520):
+        ts[p:p + m] = pattern + 0.05 * rng.normal(size=m)
+    return ts.astype(np.float32), m
+
+
+def _planted_discord_series(n=700, m=40, seed=52):
+    """Smooth walk background (drift + oscillation is normal) + one noise
+    burst — the shape anomaly a threshold alarm misses."""
+    rng = np.random.default_rng(seed)
+    walk = np.cumsum(rng.normal(size=n + 40))
+    ts = np.convolve(walk, np.ones(41) / 41, mode="valid")[:n]
+    ts[620:620 + m] = ts[620] + 0.5 * rng.normal(size=m)
+    return ts.astype(np.float32), m
+
+
+def test_analytics_top_motifs_finds_planted_group():
+    ts, m = _planted_motif_series()
+    res = matrix_profile(ts, m, k=4)
+    motifs = analytics.top_motifs(res, max_motifs=2)
+    assert motifs
+    best = motifs[0]
+    found = sorted([best.a, best.b])
+    assert min(abs(found[0] - p) for p in (100, 300, 520)) < 5
+    assert min(abs(found[1] - p) for p in (100, 300, 520)) < 5
+    # the top-k neighbour sets grow the pair into the full planted group
+    group = {best.a, best.b, *best.neighbors}
+    hits = {p for p in (100, 300, 520)
+            if any(abs(g - p) < 5 for g in group)}
+    assert len(hits) == 3, group
+
+
+def test_analytics_discords_finds_planted_burst():
+    ts, m = _planted_discord_series()
+    res = matrix_profile(ts, m)
+    found = analytics.discords(res, n=3)
+    assert found
+    assert found[0].score >= found[-1].score      # best-first
+    assert min(abs(d.position - 620) for d in found) < m
+    # non-overlapping picks
+    pos = [d.position for d in found]
+    assert all(abs(x - y) >= res.exclusion
+               for i, x in enumerate(pos) for y in pos[i + 1:])
+
+
+def test_analytics_regimes_finds_transition():
+    rng = np.random.default_rng(61)
+    n1, n2, m = 400, 400, 25
+    seg1 = np.sin(2 * np.pi * np.arange(n1) / 50) \
+        + 0.05 * rng.normal(size=n1)
+    seg2 = 0.3 * rng.normal(size=n2)
+    ts = np.concatenate([seg1, seg2]).astype(np.float32)
+    res = matrix_profile(ts, m)
+    reg = analytics.regimes(res, n_regimes=2)
+    assert reg.cac.shape == res.p.shape
+    assert (reg.cac >= 0).all() and (reg.cac <= 1).all()
+    assert len(reg.boundaries) == 1
+    assert abs(reg.boundaries[0] - n1) < 3 * m, reg.boundaries
+    # edges are pinned — never reported as boundaries
+    assert reg.cac[0] == 1.0 and reg.cac[-1] == 1.0
+
+
+def test_analytics_reject_batched_result():
+    stack = np.stack([_series(150, seed=i) for i in range(2)])
+    res = batch_profile(stack, 12)
+    with pytest.raises(ValueError, match="stacked"):
+        analytics.discords(res)
+
+
+# -- streaming LRU bounds -----------------------------------------------------
+
+
+def test_streaming_ref_cache_lru_eviction():
+    from repro.core.streaming import StreamingProfile
+
+    rng = np.random.default_rng(71)
+    sp = StreamingProfile(8, 2)
+    sp.append(rng.normal(size=60))
+    q = rng.normal(size=30)
+    # distinct corpus shapes: each append+query makes a new (n, normalize)
+    # key; the LRU must hold the bound, evicting oldest-first
+    for _ in range(StreamingProfile.REF_CACHE_MAX + 3):
+        sp.query(q)
+        sp.append(rng.normal(size=4))
+    assert len(sp._ref_cache) <= StreamingProfile.REF_CACHE_MAX
+    assert (60, True) not in sp._ref_cache        # the first shape retired
+    # distinct query shapes: the per-state plan cache holds its bound too
+    sp.query(q)
+    state = next(reversed(sp._ref_cache.values()))
+    for extra in range(StreamingProfile.PLAN_CACHE_MAX + 4):
+        sp.query(rng.normal(size=20 + extra))
+    assert len(state["plans"]) <= StreamingProfile.PLAN_CACHE_MAX
+    # eviction is LRU, not FIFO: re-touching a plan keeps it resident
+    lqs = list(state["plans"])
+    sp.query(rng.normal(size=lqs[0] + sp.m - 1))  # touch oldest
+    sp.query(rng.normal(size=199))                # force one eviction
+    assert lqs[0] in state["plans"] and lqs[1] not in state["plans"]
+
+
+def test_streaming_query_result_object():
+    from repro.core.streaming import StreamingProfile
+
+    rng = np.random.default_rng(73)
+    ref = np.cumsum(rng.normal(size=150))
+    sp = StreamingProfile(10, 2)
+    sp.append(ref)
+    res = sp.query(np.cumsum(rng.normal(size=40)))
+    assert isinstance(res, ProfileResult) and res.kind == "ab"
+    assert res.p.shape == (31,) and res.p.dtype == np.float64
+    with pytest.warns(DeprecationWarning):
+        d, i = sp.query(np.cumsum(rng.normal(size=40)))
+    assert d.shape == (31,)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([os.path.abspath(__file__), "-q"]))

@@ -261,7 +261,7 @@ def test_kernel_long_series_banked_col_block():
     cc, ci = natsa_mp.reduce_col_banks(bc, bi, stride, max(
         n_rows * it + excl + n_diags * dt, l))
     corr, idx = ops._merge_corr(c[:l], ix[:l], cc[:l], ci[:l])
-    merged = profile_from_stats(stats, excl)
+    merged = profile_from_stats(stats, excl).merged
     np.testing.assert_allclose(np.asarray(corr), np.asarray(merged.corr),
                                rtol=2e-3, atol=2e-3)
 
