@@ -1,0 +1,182 @@
+"""Pinned-baseline A/B bench: candidate vs a CHECKED-OUT prior revision.
+
+The cross-PR story in ROADMAP/CHANGES compared absolute microseconds from
+different sessions on a shared, throttled host — and promptly manufactured
+a phantom 2x "regression" (425k -> 930k us) that a same-process A/B could
+not reproduce. Absolute numbers from different hosts/sessions are not
+comparable; ratios measured in one session are.
+
+This harness makes every cross-PR claim a SAME-SESSION ratio:
+
+  * the baseline revision is materialized on disk (``--baseline-ref``
+    checks it out into a temporary ``git worktree``; ``--baseline-path``
+    points at any existing checkout — including the candidate itself for
+    an A/A null calibration);
+  * baseline and candidate reps run INTERLEAVED with the arm order
+    ALTERNATING each rep, one fresh subprocess per rep with only
+    ``sys.path`` differing, so slow host drift (thermal, cgroup
+    throttling, warmup) hits both arms alike instead of masquerading as
+    a code delta;
+  * the headline ratio is min(candidate)/min(baseline) — min-of-reps is
+    the noise-robust estimator, preemption only ever adds time — and a
+    bootstrap percentile CI over the per-rep ratio pairs quantifies how
+    much of the delta is noise. An honest harness must pass its own A/A
+    null test: baseline == candidate must give a CI that covers 1.0
+    (tests/test_lazy_result.py runs exactly that).
+
+CLI (CI runs this as an informational leg with ``--baseline-ref HEAD^``):
+
+    python benchmarks/pinned.py --baseline-ref HEAD^ \
+        --out artifacts/BENCH_PINNED.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# One timed workload per rep, run in a FRESH subprocess so jit caches,
+# allocator state, and import order cannot leak between arms. The worker
+# times the public entry end-to-end (host stats + plan + execute + result
+# build + profile sync) — the exact surface the pay-as-you-go rework
+# reclaims — and prints min-of-inner-reps in us as JSON.
+_WORKER = r"""
+import json, sys, time
+sys.path.insert(0, sys.argv[1])
+import numpy as np
+import jax
+from repro.core.matrix_profile import matrix_profile
+from repro.data.pipeline import random_walk
+
+n, m, inner = int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+ts = np.asarray(random_walk(n, seed=1))
+jax.block_until_ready(matrix_profile(ts, m).p)        # compile/warmup
+best = float("inf")
+for _ in range(inner):
+    t0 = time.perf_counter()
+    jax.block_until_ready(matrix_profile(ts, m).p)
+    best = min(best, time.perf_counter() - t0)
+print(json.dumps({"us": best * 1e6}))
+"""
+
+
+def _one_rep(src: str, n: int, m: int, inner: int, timeout: float) -> float:
+    out = subprocess.run(
+        [sys.executable, "-c", _WORKER, src, str(n), str(m), str(inner)],
+        capture_output=True, text=True, timeout=timeout, cwd=_REPO)
+    if out.returncode != 0:
+        raise RuntimeError(f"pinned worker failed for src={src!r}:\n"
+                           f"{out.stderr[-2000:]}")
+    return float(json.loads(out.stdout.strip().splitlines()[-1])["us"])
+
+
+def bootstrap_ci(ratios, n_boot: int = 2000, alpha: float = 0.05,
+                 seed: int = 0) -> tuple[float, float]:
+    """Percentile bootstrap CI for the mean per-rep ratio."""
+    rng = np.random.default_rng(seed)
+    r = np.asarray(ratios, np.float64)
+    means = rng.choice(r, size=(n_boot, r.size), replace=True).mean(axis=1)
+    return (float(np.percentile(means, 100 * (alpha / 2))),
+            float(np.percentile(means, 100 * (1 - alpha / 2))))
+
+
+def run_pinned(baseline_src: str, candidate_src: str, *, n: int = 4096,
+               m: int = 128, reps: int = 5, inner: int = 3,
+               timeout: float = 600.0) -> dict:
+    """Interleaved pinned-baseline comparison; returns the ratio table.
+
+    `baseline_src`/`candidate_src` are ``src/`` directories (importable
+    roots). Reps alternate baseline/candidate; the result carries the raw
+    pairs so CI artifacts stay re-analyzable.
+    """
+    for src in (baseline_src, candidate_src):
+        if not os.path.isdir(src):
+            raise FileNotFoundError(f"src directory not found: {src}")
+    base, cand = [], []
+    for r in range(reps):
+        # alternate which arm goes first each rep: under monotone host
+        # drift (warmup, turbo, cache) a fixed baseline-first order hands
+        # the second arm a systematic edge that an A/A null run measures
+        # as a ~10% phantom speedup — alternation cancels linear drift
+        order = ((baseline_src, base), (candidate_src, cand))
+        for src, sink in (order if r % 2 == 0 else order[::-1]):
+            sink.append(_one_rep(src, n, m, inner, timeout))
+    pairs = list(zip(base, cand))
+    ratios = [c / b for b, c in pairs]
+    lo, hi = bootstrap_ci(ratios)
+    return {
+        "workload": f"mp_entry_n{n}_m{m}",
+        "n": n, "m": m, "reps": reps, "inner": inner,
+        "baseline_us": base, "candidate_us": cand,
+        "ratio_min": min(cand) / min(base),
+        "ratio_mean": float(np.mean(ratios)),
+        "ratio_ci95": [lo, hi],
+        "ci_covers_one": bool(lo <= 1.0 <= hi),
+    }
+
+
+def checkout_baseline(ref: str, tmpdir: str) -> str:
+    """Materialize `ref` as a detached git worktree; returns its src/."""
+    dest = os.path.join(tmpdir, "baseline")
+    subprocess.run(["git", "worktree", "add", "--detach", dest, ref],
+                   cwd=_REPO, check=True, capture_output=True, text=True)
+    return os.path.join(dest, "src")
+
+
+def remove_baseline(tmpdir: str) -> None:
+    dest = os.path.join(tmpdir, "baseline")
+    subprocess.run(["git", "worktree", "remove", "--force", dest],
+                   cwd=_REPO, check=False, capture_output=True, text=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    grp = ap.add_mutually_exclusive_group(required=True)
+    grp.add_argument("--baseline-ref",
+                     help="git ref to check out as the baseline (worktree)")
+    grp.add_argument("--baseline-path",
+                     help="existing checkout to use as the baseline "
+                          "(its src/ is imported); pass the repo root")
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--m", type=int, default=128)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--inner", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join(_REPO, "artifacts",
+                                                  "BENCH_PINNED.json"))
+    args = ap.parse_args(argv)
+
+    cand_src = os.path.join(_REPO, "src")
+    t0 = time.perf_counter()
+    if args.baseline_ref:
+        with tempfile.TemporaryDirectory() as tmp:
+            try:
+                base_src = checkout_baseline(args.baseline_ref, tmp)
+                result = run_pinned(base_src, cand_src, n=args.n, m=args.m,
+                                    reps=args.reps, inner=args.inner)
+            finally:
+                remove_baseline(tmp)
+        result["baseline"] = args.baseline_ref
+    else:
+        base_src = os.path.join(args.baseline_path, "src")
+        result = run_pinned(base_src, cand_src, n=args.n, m=args.m,
+                            reps=args.reps, inner=args.inner)
+        result["baseline"] = args.baseline_path
+    result["wall_s"] = time.perf_counter() - t0
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, sort_keys=True)
+    print(json.dumps(result, indent=1, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -542,14 +542,16 @@ def profile_topk_from_stats(stats: ZStats, exclusion: int,
 def matrix_profile(ts, window: int, exclusion: int | None = None,
                    band: int = DEFAULT_BAND,
                    reseed_every: int | None = DEFAULT_RESEED, *,
-                   k: int = 1) -> "ProfileResult":
+                   k: int = 1, harvest: str = "merged") -> "ProfileResult":
     """Full exact matrix profile -> `ProfileResult`.
 
     `result.p` / `result.i` are the classic merged profile (bit-identical
-    to the old tuple's arrays); the result also carries the LEFT/RIGHT
-    split profiles the sweep harvested anyway (column/row side), and with
-    `k > 1` exact `(l, k)` top-k neighbor sets. Tuple unpacking still works
-    for one release (DeprecationWarning).
+    to the old tuple's arrays). Harvests are PAY-AS-YOU-GO: by default the
+    sweep finishes only the merged profile; the LEFT/RIGHT split profiles
+    (`result.left_p` / `result.right_p` — the sweep's column/row harvests)
+    finish lazily from the retained sweep state on first access, bitwise
+    what `harvest="both"` materializes eagerly. With `k > 1`, exact
+    `(l, k)` top-k neighbor sets ride along in `result.topk_p/topk_i`.
 
     Thin entry: builds a `SweepPlan` (core.plan) and runs it through the
     executor — the band-engine choice, exclusion default, and harvest wiring
@@ -568,9 +570,11 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
     m = int(window)
     arr = np.asarray(ts)
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
-                               band=band, reseed_every=reseed_every, k=k)
-    res = plan_mod.execute(plan, compute_stats_host(arr, m))
-    return build_result(plan, res)
+                               band=band, reseed_every=reseed_every, k=k,
+                               harvest=harvest)
+    stats = compute_stats_host(arr, m)
+    res = plan_mod.execute(plan, stats)
+    return build_result(plan, res, stats)
 
 
 # -- AB join: rectangular diagonal space -------------------------------------
@@ -1119,11 +1123,13 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
 
     Returns a `ProfileResult`: `result.p[i]` the distance, `result.i[i]`
     the matching start position in B. With `return_b=True` the sweep also
-    harvests B's profile against A (`result.b_p` / `result.b_i`) from the
-    SAME single sweep, not a second join — and legacy 4-tuple unpacking
-    `(da, ia, db, ib)` keeps working for one release; `k > 1` adds exact
-    top-k neighbor sets (`result.topk_p`, and `result.b_topk_p` with
-    `return_b`). No exclusion zone by default (cross-series matches at
+    eagerly harvests B's profile against A (`result.b_p` / `result.b_i`)
+    from the SAME single sweep, not a second join; without it, `result.b_p`
+    still answers lazily on first access (from retained sweep state where
+    the backend computed it anyway, else via one two-sided re-execute of
+    the same plan). `k > 1` adds exact top-k neighbor sets
+    (`result.topk_p`, and `result.b_topk_p` with `return_b`). No exclusion
+    zone by default (cross-series matches at
     equal offsets are legitimate); `exclusion` exists so that
     ab_join(ts, ts, m, exclusion=e) == matrix_profile(ts, m, exclusion=e).
     Stream precompute is host-side f64, the O(l_a*l_b) engine device f32.
@@ -1144,20 +1150,20 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     a, b = np.asarray(ts_a), np.asarray(ts_b)
     plan = plan_mod.plan_sweep(m, a.shape[0] - m + 1, b.shape[0] - m + 1,
                                exclusion=exclusion, normalize=normalize,
-                               harvest="both" if return_b else "row",
+                               harvest="both" if return_b else "merged",
                                band=band, reseed_every=reseed_every, k=k)
     if not normalize:
         stats = (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
     else:
         stats = plan_mod.cross_stats_for(plan, a, b)
     res = plan_mod.execute(plan, stats)
-    return build_result(plan, res, legacy_arity=4 if return_b else 2)
+    return build_result(plan, res, stats)
 
 
 def batch_profile(series, window: int, *, exclusion: int | None = None,
                   band: int = DEFAULT_BAND,
                   reseed_every: int | None = DEFAULT_RESEED,
-                  k: int = 1) -> "ProfileResult":
+                  k: int = 1, harvest: str = "merged") -> "ProfileResult":
     """Self-join matrix profiles for a (B, n) stack in ONE vmapped program.
 
     Per-series host f64 stream prep (forward only — the fused sweep needs no
@@ -1178,11 +1184,11 @@ def batch_profile(series, window: int, *, exclusion: int | None = None,
     m = int(window)
     plan = plan_mod.plan_sweep(m, arr.shape[1] - m + 1, exclusion=exclusion,
                                band=band, reseed_every=reseed_every,
-                               batch=arr.shape[0], k=k)
+                               batch=arr.shape[0], k=k, harvest=harvest)
     stats = [compute_stats_host(s, m) for s in arr]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stats)
     res = plan_mod.execute(plan, stack)
-    return build_result(plan, res)
+    return build_result(plan, res, stack)
 
 
 def batch_ab_join(stack_a, stack_b, window: int, *,
@@ -1208,12 +1214,12 @@ def batch_ab_join(stack_a, stack_b, window: int, *,
     plan = plan_mod.plan_sweep(m, a.shape[1] - m + 1, b.shape[1] - m + 1,
                                exclusion=exclusion, band=band,
                                reseed_every=reseed_every,
-                               harvest="both" if return_b else "row",
+                               harvest="both" if return_b else "merged",
                                batch=a.shape[0], k=k)
     crosses = [compute_cross_stats_host(ra, rb, m) for ra, rb in zip(a, b)]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *crosses)
     res = plan_mod.execute(plan, stack)
-    return build_result(plan, res, legacy_arity=4 if return_b else 2)
+    return build_result(plan, res, stack)
 
 
 def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
@@ -1263,9 +1269,11 @@ def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
 
 
 def matrix_profile_nonnorm(ts, window: int, exclusion: int | None = None,
-                           band: int = DEFAULT_BAND) -> "ProfileResult":
+                           band: int = DEFAULT_BAND, *,
+                           harvest: str = "merged") -> "ProfileResult":
     """Exact non-normalized matrix profile -> `ProfileResult` (euclid
-    distances; left/right split carried like the z-normalized entry).
+    distances; left/right split lazy like the z-normalized entry —
+    finished from the retained sweep states on first access).
 
     Thin entry over a nonnorm self-join plan; the jitted sweep itself is
     `nonnorm_profile_from_ts` (one pass of k in [excl, l); row and column
@@ -1277,9 +1285,9 @@ def matrix_profile_nonnorm(ts, window: int, exclusion: int | None = None,
     ts = jnp.asarray(ts, jnp.float32)
     m = int(window)
     plan = plan_mod.plan_sweep(m, ts.shape[0] - m + 1, exclusion=exclusion,
-                               normalize=False, band=band)
+                               normalize=False, band=band, harvest=harvest)
     res = plan_mod.execute(plan, ts)
-    return build_result(plan, res)
+    return build_result(plan, res, ts)
 
 
 def nonnorm_to_distance(state: ProfileState) -> jax.Array:

@@ -56,6 +56,8 @@ from repro.core.matrix_profile import (
 )
 from repro.core.result import HarvestSpec
 from repro.core.zstats import CrossStats, ZStats, corr_to_dist
+# tile-geometry defaults only — repro.kernels itself imports nothing
+from repro.kernels import DEFAULT_DT, DEFAULT_IT
 
 BACKENDS = ("engine", "rowstream", "kernel", "distributed")
 
@@ -82,7 +84,8 @@ class SweepPlan:
     # -- normalization -----------------------------------------------------
     normalize: bool = True          # z-normalized corr vs raw euclidean
     # -- harvest -----------------------------------------------------------
-    # sides "row" (A side only) | "both"; k > 1 = exact top-k accumulators
+    # sides "merged" (minimal, lazy finish) | "row" (A side only) | "both"
+    # (eager two-sided); k > 1 = exact top-k accumulators
     harvest: HarvestSpec = HarvestSpec()
     swap_ab: bool = False           # executor sweeps B-vs-A, un-swaps outputs
     # -- tiling ------------------------------------------------------------
@@ -90,8 +93,8 @@ class SweepPlan:
     clamp_rows: bool = True         # row-clamp AB band tiles to the rectangle
     col_tile: int | None = None     # column-accumulator bank width policy
     n_bands: int | None = None      # distributed: static bands per chunk
-    it: int = 256                   # kernel row-tile height
-    dt: int = 8                     # kernel diagonal-tile width
+    it: int = DEFAULT_IT            # kernel row-tile height
+    dt: int = DEFAULT_DT            # kernel diagonal-tile width
     # -- reseed policy -----------------------------------------------------
     reseed_every: int | None = DEFAULT_RESEED
     # -- backend -----------------------------------------------------------
@@ -116,12 +119,19 @@ class SweepResult:
     """Everything an executed plan harvested, in the caller's orientation.
 
     `dist/index` are the classic merged profile. `dist_b/index_b` are the B
-    side of a two-sided AB harvest (None for self-joins and sides="row"
-    plans). Self-join plans also carry the LEFT/RIGHT split the sweep
-    computed anyway (column/row harvest; None for AB). Plans with
-    `harvest.k > 1` fill the `(l, k)` top-k fields (best-first; slot 0 ==
-    the merged profile's values). `core.result.build_result` wraps this
-    into the public `ProfileResult`."""
+    side of a two-sided AB harvest (None for self-joins and minimal plans).
+    Self-join `sides="both"` plans also carry the LEFT/RIGHT split
+    (column/row harvest; None for AB). Plans with `harvest.k > 1` fill the
+    `(l, k)` top-k fields (best-first; slot 0 == the merged profile's
+    values). `core.result.build_result` wraps this into the public
+    `ProfileResult`.
+
+    `raw` is the PAY-AS-YOU-GO seam: for sides the sweep computed anyway
+    but a minimal plan did not eagerly finish (the engine/kernel split
+    halves, rowstream's B accumulator), the executor installs
+    `{group: callable}` closures over the retained device state returning
+    `{public_field: array}` — `ProfileResult`'s lazy attributes call them
+    on first access instead of re-sweeping."""
 
     dist: jax.Array
     index: jax.Array
@@ -135,6 +145,7 @@ class SweepResult:
     topk_index: jax.Array | None = None
     topk_dist_b: jax.Array | None = None
     topk_index_b: jax.Array | None = None
+    raw: dict | None = None
 
 
 def _kernel_self_col_tile(l: int, excl: int, it: int, dt: int,
@@ -157,12 +168,13 @@ def _kernel_self_col_tile(l: int, excl: int, it: int, dt: int,
 
 def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
                exclusion: int | None = None, normalize: bool = True,
-               harvest: str | HarvestSpec = "both", k: int = 1,
+               harvest: str | HarvestSpec = "merged", k: int = 1,
                backend: str | None = None,
                band: int = DEFAULT_BAND, clamp_rows: bool = True,
                col_tile: int | None = None,
                reseed_every: int | None = DEFAULT_RESEED,
-               it: int = 256, dt: int = 8, interpret: bool = True,
+               it: int = DEFAULT_IT, dt: int = DEFAULT_DT,
+               interpret: bool = True,
                batch: int | None = None) -> SweepPlan:
     """Heuristic planner: fill in every sweep decision an entry point used to
     make inline. `l_a`/`l_b` are SUBSEQUENCE counts (n - window + 1);
@@ -170,9 +182,12 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
     when the user asked for a specific engine, e.g. the Pallas kernel ops or
     the scheduler's SPMD rounds).
 
-    `harvest` is the sides string ("row" | "both") or a full `HarvestSpec`;
-    `k` (> 1 = exact top-k accumulators) overrides the spec's k. Top-k
-    planning rules, all pinned here:
+    `harvest` is the sides string ("merged" | "row" | "both") or a full
+    `HarvestSpec`. The DEFAULT is the minimal "merged" harvest — plan only
+    what the caller asked for; sides a minimal sweep computed anyway are
+    finished lazily by the result layer, and only `sides="both"` pays to
+    materialize them eagerly. `k` (> 1 = exact top-k accumulators)
+    overrides the spec's k. Top-k planning rules, all pinned here:
       * the kernel backend's VMEM accumulator layout is k = 1-only — a
         kernel request with k > 1 PLANS A FALLBACK to the band engine
         (same answer, same single sweep, no kernel launch);
@@ -327,17 +342,48 @@ def execute(plan: SweepPlan, stats) -> SweepResult:
     return _execute_ab(plan, stats)
 
 
+# public lazy-field name -> SweepResult field, for eagerly materializing a
+# finish-closure's payload under sides="both" (the closure itself is keyed
+# by ProfileResult names — the names the lazy result layer fills)
+_SWEEP_FIELD_OF = {
+    "left_p": "left_dist", "left_i": "left_index",
+    "right_p": "right_dist", "right_i": "right_index",
+    "b_p": "dist_b", "b_i": "index_b",
+    "b_topk_p": "topk_dist_b", "b_topk_i": "topk_index_b",
+}
+
+
+def _attach(res: SweepResult, groups: tuple[str, ...], fin, eager: bool):
+    """Wire a finish closure for `groups` into `res`: eagerly materialized
+    under sides="both", else installed as a zero-sweep `raw` provider the
+    lazy `ProfileResult` calls on first access."""
+    if eager:
+        for pub, val in fin().items():
+            setattr(res, _SWEEP_FIELD_OF[pub], val)
+    else:
+        if res.raw is None:
+            res.raw = {}
+        for g in groups:
+            res.raw[g] = fin
+    return res
+
+
 def _execute_self(plan: SweepPlan, stats) -> SweepResult:
     m = plan.window
+    eager_split = plan.harvest.sides == "both"
     if not plan.normalize:
         split = nonnorm_profile_from_ts(
             jnp.asarray(stats, jnp.float32), m, plan.exclusion, plan.band)
-        return SweepResult(
-            nonnorm_to_distance(split.merged), split.merged.index,
-            left_dist=nonnorm_to_distance(split.left),
-            left_index=split.left.index,
-            right_dist=nonnorm_to_distance(split.right),
-            right_index=split.right.index)
+        res = SweepResult(nonnorm_to_distance(split.merged),
+                          split.merged.index)
+
+        def fin_split():
+            return dict(left_p=nonnorm_to_distance(split.left),
+                        left_i=split.left.index,
+                        right_p=nonnorm_to_distance(split.right),
+                        right_i=split.right.index)
+
+        return _attach(res, ("split",), fin_split, eager_split)
     if plan.backend == "kernel":
         from repro.kernels import ops
 
@@ -347,33 +393,46 @@ def _execute_self(plan: SweepPlan, stats) -> SweepResult:
             stats, excl=plan.exclusion, it=plan.it, dt=plan.dt,
             col_tile=plan.col_tile, interpret=plan.interpret)
         corr, idx = ops._merge_corr(corr_r, idx_r, corr_c, idx_c)
-        return SweepResult(
-            _kernel_dist(corr, m), idx,
-            left_dist=_kernel_dist(corr_c, m), left_index=idx_c,
-            right_dist=_kernel_dist(corr_r, m), right_index=idx_r)
+        res = SweepResult(_kernel_dist(corr, m), idx)
+
+        def fin_split():
+            return dict(left_p=_kernel_dist(corr_c, m), left_i=idx_c,
+                        right_p=_kernel_dist(corr_r, m), right_i=idx_r)
+
+        return _attach(res, ("split",), fin_split, eager_split)
     if plan.harvest.k > 1:
         fn = lambda s: profile_topk_from_stats(             # noqa: E731
             s, plan.exclusion, plan.band, plan.reseed_every, plan.harvest.k)
         if plan.batch is not None:
             fn = jax.vmap(fn)
         merged, rows, col = fn(stats)
+        # dist IS slot 0 of the top-k conversion, so the top-k fields ride
+        # along at zero extra cost — only the split stays deferred
         dk = merged.to_distance(m)
-        return SweepResult(
-            dk[..., 0], merged.index[..., 0],
-            left_dist=col.to_distance(m)[..., 0],
-            left_index=col.index[..., 0],
-            right_dist=rows.to_distance(m)[..., 0],
-            right_index=rows.index[..., 0],
-            topk_dist=dk, topk_index=merged.index)
+        res = SweepResult(dk[..., 0], merged.index[..., 0],
+                          topk_dist=dk, topk_index=merged.index)
+
+        def fin_split():
+            return dict(left_p=col.to_distance(m)[..., 0],
+                        left_i=col.index[..., 0],
+                        right_p=rows.to_distance(m)[..., 0],
+                        right_i=rows.index[..., 0])
+
+        return _attach(res, ("split",), fin_split, eager_split)
     fn = lambda s: profile_from_stats(                      # noqa: E731
         s, plan.exclusion, plan.band, plan.reseed_every)
     if plan.batch is not None:
         fn = jax.vmap(fn)
     split = fn(stats)
-    return SweepResult(
-        split.merged.to_distance(m), split.merged.index,
-        left_dist=split.left.to_distance(m), left_index=split.left.index,
-        right_dist=split.right.to_distance(m), right_index=split.right.index)
+    res = SweepResult(split.merged.to_distance(m), split.merged.index)
+
+    def fin_split():
+        return dict(left_p=split.left.to_distance(m),
+                    left_i=split.left.index,
+                    right_p=split.right.to_distance(m),
+                    right_i=split.right.index)
+
+    return _attach(res, ("split",), fin_split, eager_split)
 
 
 def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
@@ -381,6 +440,8 @@ def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
     two_sided = plan.harvest.sides == "both"
     if not plan.normalize:
         ts_a, ts_b = stats
+        # the nonnorm sweep genuinely skips the column harvest when one-
+        # sided: a lazily-accessed B side recomputes through the same plan
         da, ia, db, ib = ab_join_nonnorm(
             ts_a, ts_b, m, plan.exclusion, plan.band,
             two_sided=two_sided, clamp_rows=plan.clamp_rows)
@@ -391,9 +452,13 @@ def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
         sa, sb = ab_join_rowstream(stats, plan.exclusion, plan.reseed_every)
         if plan.swap_ab:
             sa, sb = sb, sa
-        return SweepResult(sa.to_distance(m), sa.index,
-                           sb.to_distance(m) if two_sided else None,
-                           sb.index if two_sided else None)
+        res = SweepResult(sa.to_distance(m), sa.index)
+
+        def fin_b():
+            # B's state IS rowstream's running accumulator — computed anyway
+            return dict(b_p=sb.to_distance(m), b_i=sb.index)
+
+        return _attach(res, ("b",), fin_b, two_sided)
     if plan.backend == "kernel":
         from repro.kernels import ops
 
@@ -402,11 +467,17 @@ def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
             col_tile=plan.col_tile, interpret=plan.interpret)
         if plan.swap_ab:
             corr, idx, corr_b, idx_b = corr_b, idx_b, corr, idx
-        return SweepResult(
-            _kernel_dist(corr, m), idx,
-            _kernel_dist(corr_b, m) if two_sided else None,
-            idx_b if two_sided else None)
-    # band-diagonal engine: row clamp makes orientation moot, never swapped
+        res = SweepResult(_kernel_dist(corr, m), idx)
+
+        def fin_b():
+            # the kernel launch always harvests both halves
+            return dict(b_p=_kernel_dist(corr_b, m), b_i=idx_b)
+
+        return _attach(res, ("b",), fin_b, two_sided)
+    # band-diagonal engine: row clamp makes orientation moot, never swapped;
+    # a minimal plan really skips the column accumulators (the entry-layer
+    # saving), so its B side has no raw finish — lazy access re-executes
+    # the same plan with sides="both"
     fn = lambda c: ab_join_from_stats(                      # noqa: E731
         c, plan.exclusion, plan.band, plan.reseed_every, two_sided,
         plan.clamp_rows, plan.col_tile)
@@ -422,7 +493,7 @@ def _execute_ab_topk(plan: SweepPlan, stats, two_sided: bool) -> SweepResult:
     """k > 1 AB plans: rowstream's per-row/insertion top-k or the band
     engine's widened `(l, k)` accumulators — one sweep either way. The
     rowstream sweep always carries both sides (B's set IS its running
-    accumulator); a sides="row" plan simply drops the B side here."""
+    accumulator), so a minimal plan defers — not drops — the B side."""
     m = plan.window
     k = plan.harvest.k
     if plan.backend == "rowstream":
@@ -439,10 +510,13 @@ def _execute_ab_topk(plan: SweepPlan, stats, two_sided: bool) -> SweepResult:
     da = ta.to_distance(m)
     res = SweepResult(da[..., 0], ta.index[..., 0],
                       topk_dist=da, topk_index=ta.index)
-    if two_sided and tb is not None:
-        db = tb.to_distance(m)
-        res.dist_b, res.index_b = db[..., 0], tb.index[..., 0]
-        res.topk_dist_b, res.topk_index_b = db, tb.index
+    if tb is not None:
+        def fin_b():
+            db = tb.to_distance(m)        # one conversion serves both groups
+            return dict(b_p=db[..., 0], b_i=tb.index[..., 0],
+                        b_topk_p=db, b_topk_i=tb.index)
+
+        return _attach(res, ("b", "b_topk"), fin_b, two_sided)
     return res
 
 

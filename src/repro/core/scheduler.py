@@ -323,8 +323,8 @@ class AnytimeScheduler:
         return ProfileResult(p=p, i=i, **kw)
 
     def distance_profile(self) -> ProfileResult:
-        """Legacy accessor — now the same `ProfileResult` as `result()`;
-        `p, i = sch.distance_profile()` keeps unpacking for one release."""
+        """Legacy accessor — the same `ProfileResult` as `result()` (the
+        tuple-unpacking shim is retired; use `.p` / `.i`)."""
         return self.result()
 
     def distance_profile_b(self) -> tuple[jax.Array, jax.Array]:

@@ -185,9 +185,8 @@ class StreamingProfile:
         Returns a `ProfileResult` (numpy-backed): for each of the query's
         l_q = len(q) - m + 1 subsequences, `result.p` is its distance to
         the nearest reference subsequence and `result.i` that reference's
-        start index. Legacy `d, idx = sp.query(q)` unpacking keeps working
-        for one release. No exclusion zone — query and reference are
-        different series.
+        start index. No exclusion zone — query and reference are different
+        series.
         """
         import jax.numpy as jnp
 

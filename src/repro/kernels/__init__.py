@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+# Default kernel tile geometry: it = row-tile height, dt = diagonal-tile
+# width. These live HERE (not in ops.py) so the planner (core.plan), the
+# kernel wrappers (kernels.ops), the roofline model (launch.roofline) and
+# the benchmarks all derive the same numbers without pulling the Pallas
+# stack in — `repro.kernels` itself imports nothing. Every bytes/cell or
+# roofline figure quoted against "the kernel" must use these defaults (the
+# benches once modeled it=512/dt=32 while the kernel ran 256/8).
+DEFAULT_IT = 256
+DEFAULT_DT = 8

@@ -23,7 +23,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.zstats import CrossStats, ZStats, compute_stats_host
-from repro.kernels import natsa_mp
+from repro.kernels import DEFAULT_DT, DEFAULT_IT, natsa_mp
 
 NEG = natsa_mp.NEG
 
@@ -65,7 +65,8 @@ def auto_col_tile(col_len: int, it: int, dt: int,
     return max(4096, 2 * (it + dt))
 
 
-def rowmax_from_stats(stats: ZStats, *, excl: int, it: int = 256, dt: int = 8,
+def rowmax_from_stats(stats: ZStats, *, excl: int, it: int = DEFAULT_IT,
+                      dt: int = DEFAULT_DT,
                       col_tile: int | None = None, interpret: bool = True):
     """Two-sided self-join harvest via ONE kernel launch.
 
@@ -90,12 +91,13 @@ def _merge_corr(corr_a, idx_a, corr_b, idx_b):
 
 
 def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
-                         it: int = 256, dt: int = 8,
+                         it: int = DEFAULT_IT, dt: int = DEFAULT_DT,
                          col_tile: int | None = None, interpret: bool = True,
-                         k: int = 1):
-    """Full matrix profile via the Pallas kernel -> `ProfileResult` (with
-    the left/right split — the kernel's column/row halves — for free; tuple
-    unpacking keeps working for one release).
+                         k: int = 1, harvest: str = "merged"):
+    """Full matrix profile via the Pallas kernel -> `ProfileResult` (the
+    left/right split — the kernel's column/row halves — finishes lazily
+    from the launch's retained halves on first access; `harvest="both"`
+    materializes it eagerly).
 
     Thin entry: builds a kernel-backend `SweepPlan` (the planner pins the
     `auto_col_tile` banking choice into the plan) and executes it — one
@@ -112,9 +114,11 @@ def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
     arr = np.asarray(ts)
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
                                backend="kernel", it=it, dt=dt,
-                               col_tile=col_tile, interpret=interpret, k=k)
-    res = plan_mod.execute(plan, compute_stats_host(arr, m))
-    return build_result(plan, res)
+                               col_tile=col_tile, interpret=interpret, k=k,
+                               harvest=harvest)
+    stats = compute_stats_host(arr, m)
+    res = plan_mod.execute(plan, stats)
+    return build_result(plan, res, stats)
 
 
 # -- AB join through the kernel ----------------------------------------------
@@ -152,7 +156,7 @@ def _pad_streams_ab(cross: CrossStats, it: int, dt: int, s0: int, s1: int):
 
 
 def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
-                         it: int = 256, dt: int = 8,
+                         it: int = DEFAULT_IT, dt: int = DEFAULT_DT,
                          col_tile: int | None = None, interpret: bool = True):
     """Two-sided AB harvest via the kernel.
 
@@ -193,15 +197,16 @@ def ab_rowmax_from_stats(cross: CrossStats, *, exclusion: int = 0,
 
 
 def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
-                  it: int = 256, dt: int = 8, col_tile: int | None = None,
+                  it: int = DEFAULT_IT, dt: int = DEFAULT_DT,
+                  col_tile: int | None = None,
                   interpret: bool = True, return_b: bool = False,
                   k: int = 1):
     """AB join via the Pallas kernel -> `ProfileResult`.
 
-    With `return_b=True` the result additionally carries B's profile
-    against A (`.b_p`/`.b_i`) — the column harvest of the same launch, not
-    a second join — and legacy 4-tuple unpacking keeps working for one
-    release. Matches core.matrix_profile.ab_join / the brute-force oracle
+    With `return_b=True` the result eagerly carries B's profile against A
+    (`.b_p`/`.b_i`) — the column harvest of the same launch, not a second
+    join; without it `.b_p` finishes lazily from the launch's retained
+    column half. Matches core.matrix_profile.ab_join / the brute-force oracle
     (tests enforce it). No exclusion zone by default — pass one only to
     recover the self-join as the A == B special case. The rectangle is
     swept with its SHORT side on the row axis (fewest computed tiles);
@@ -215,13 +220,14 @@ def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     a, b = np.asarray(ts_a), np.asarray(ts_b)
     plan = plan_mod.plan_sweep(m, a.shape[0] - m + 1, b.shape[0] - m + 1,
                                exclusion=exclusion, backend="kernel",
-                               harvest="both" if return_b else "row",
+                               harvest="both" if return_b else "merged",
                                it=it, dt=dt, col_tile=col_tile,
                                interpret=interpret, k=k)
     # swap_ab: row tiles cover the SHORT side — an (l_a/it x (l_a+l_b)/dt)
     # grid shrinks to (l_b/it x (l_a+l_b)/dt), the kernel-side row clamp
-    res = plan_mod.execute(plan, plan_mod.cross_stats_for(plan, a, b))
-    return build_result(plan, res, legacy_arity=4 if return_b else 2)
+    stats = plan_mod.cross_stats_for(plan, a, b)
+    res = plan_mod.execute(plan, stats)
+    return build_result(plan, res, stats)
 
 
 VMEM_BYTES = 128 * 2**20 // 8   # ~16 MiB/core, keep ~50% headroom
@@ -245,7 +251,8 @@ def kernel_vmem_bytes(l: int, it: int, dt: int,
     return full + rows + outs + cols + tile + carry
 
 
-def hbm_bytes_per_cell(l: int, excl: int, it: int = 256, dt: int = 8) -> float:
+def hbm_bytes_per_cell(l: int, excl: int, it: int = DEFAULT_IT,
+                       dt: int = DEFAULT_DT) -> float:
     """Roofline model of HBM traffic per distance-matrix cell.
 
     ONE pass now computes both profile sides (the reversed second pass is

@@ -164,3 +164,38 @@ class RooflineTerms:
             "useful_ratio": self.useful_ratio,
             "mfu_bound": self.mfu_bound,
         }
+
+
+def matrix_profile_roofline(l: int, excl: int, it: int | None = None,
+                            dt: int | None = None,
+                            n_chips: int = 1) -> RooflineTerms:
+    """`RooflineTerms` for one NATSA matrix-profile sweep of `l` rows.
+
+    Bridges the kernel's analytic data-movement model into the same
+    roofline vocabulary the LM dry-run tooling uses: FLOPs/chip from the
+    per-cell work model (`ops.FLOPS_PER_CELL` over the admissible
+    triangle), HBM bytes/chip from `ops.hbm_bytes_per_cell` under the
+    kernel's ACTUAL tile geometry (`repro.kernels.DEFAULT_IT/DT` unless
+    overridden — the same constants the launch signatures default to), and
+    zero wire bytes for the single-chip sweep (the distributed scheduler's
+    profile merges are O(l) per round, negligible next to the O(l^2)
+    streaming traffic). The matrix-profile work model counts f32 MACs, so
+    times are optimistic by the bf16/f32 peak gap; the BOTTLENECK verdict
+    — NATSA's motivating claim that the sweep is memory-bound on a
+    conventional memory system once tiles outgrow VMEM residency — is what
+    this function is for, not absolute seconds.
+    """
+    from repro.kernels import DEFAULT_DT, DEFAULT_IT, ops
+
+    it = DEFAULT_IT if it is None else it
+    dt = DEFAULT_DT if dt is None else dt
+    # admissible pairs, each visited ONCE (the fused sweep harvests both
+    # profile sides per cell) — the same count kernel_roofline uses
+    cells = float(sum(l - k for k in range(excl, l)))
+    flops = cells * ops.FLOPS_PER_CELL
+    hbm_bytes = cells * ops.hbm_bytes_per_cell(l, excl, it=it, dt=dt)
+    return RooflineTerms(flops_per_chip=flops / n_chips,
+                         bytes_per_chip=hbm_bytes / n_chips,
+                         wire_bytes_per_chip=0.0,
+                         model_flops_total=flops,
+                         n_chips=n_chips)

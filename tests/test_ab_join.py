@@ -82,7 +82,8 @@ def _series(n, seed=0, kind="walk"):
 def test_ab_join_matches_oracle(na, nb, m, kind, normalize):
     ts_a = _series(na, seed=na + nb, kind=kind)
     ts_b = _series(nb, seed=abs(na - nb) + 7, kind=kind)
-    p, idx = ab_join(ts_a, ts_b, m, normalize=normalize)
+    res = ab_join(ts_a, ts_b, m, normalize=normalize)
+    p, idx = res.p, res.i
     p_ref, _ = oracle_ab(ts_a, ts_b, m, normalize=normalize)
     np.testing.assert_allclose(np.asarray(p), p_ref, rtol=2e-3, atol=2e-3)
     # indices point into B and every chosen pair realizes its distance
@@ -98,7 +99,8 @@ def test_ab_join_single_reference_window():
     """l_b == 1: the join degenerates to one distance per query row."""
     ts_a = _series(120, seed=1, kind="noise")
     ts_b = _series(16, seed=2, kind="noise")    # exactly one window
-    p, idx = ab_join(ts_a, ts_b, 16)
+    res = ab_join(ts_a, ts_b, 16)
+    p, idx = res.p, res.i
     p_ref, _ = oracle_ab(ts_a, ts_b, 16)
     np.testing.assert_allclose(np.asarray(p), p_ref, rtol=2e-3, atol=2e-3)
     assert (np.asarray(idx) == 0).all()
@@ -128,8 +130,10 @@ def test_self_join_is_ab_special_case(n, m, excl, kind):
     """ab_join(ts, ts, m, exclusion=e) == matrix_profile(ts, m, e) — the
     acceptance identity, compared in CORRELATION space at atol 1e-4."""
     ts = _series(n, seed=n, kind=kind)
-    p_ab, i_ab = ab_join(ts, ts, m, exclusion=excl)
-    p_mp, i_mp = matrix_profile(ts, m, exclusion=excl)
+    res_ab = ab_join(ts, ts, m, exclusion=excl)
+    res_mp = matrix_profile(ts, m, exclusion=excl)
+    p_ab, i_ab = res_ab.p, res_ab.i
+    p_mp, i_mp = res_mp.p, res_mp.i
     c_ab = dist_to_corr(jnp.asarray(p_ab), m)
     c_mp = dist_to_corr(jnp.asarray(p_mp), m)
     np.testing.assert_allclose(np.asarray(c_ab), np.asarray(c_mp), atol=1e-4)
@@ -140,8 +144,8 @@ def test_self_join_is_ab_special_case(n, m, excl, kind):
 
 def test_self_join_is_ab_special_case_nonnorm():
     ts = _series(300, seed=9, kind="sine")
-    p_ab, _ = ab_join(ts, ts, 16, exclusion=4, normalize=False)
-    p_mp, _ = matrix_profile_nonnorm(jnp.asarray(ts), 16, 4)
+    p_ab = ab_join(ts, ts, 16, exclusion=4, normalize=False).p
+    p_mp = matrix_profile_nonnorm(jnp.asarray(ts), 16, 4).p
     np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_mp),
                                rtol=2e-3, atol=2e-3)
 
@@ -154,9 +158,11 @@ def test_batch_profile_equals_loop():
     ])
     del rng
     m = 14
-    bp, bi = batch_profile(stack, m)
+    bres = batch_profile(stack, m)
+    bp, bi = bres.p, bres.i
     for r in range(stack.shape[0]):
-        p, i = matrix_profile(stack[r], m)
+        rres = matrix_profile(stack[r], m)
+        p, i = rres.p, rres.i
         # vmap changes XLA fusion order -> ~1e-5 drift; indices may flip
         # only on near-ties
         np.testing.assert_allclose(np.asarray(bp[r]), np.asarray(p),
@@ -169,9 +175,11 @@ def test_batch_ab_join_equals_loop():
     a = np.stack([_series(200, seed=i, kind="walk") for i in range(3)])
     b = np.stack([_series(90, seed=10 + i, kind="sine") for i in range(3)])
     m = 12
-    bp, bi = batch_ab_join(a, b, m)
+    bres = batch_ab_join(a, b, m)
+    bp, bi = bres.p, bres.i
     for r in range(3):
-        p, i = ab_join(a[r], b[r], m)
+        rres = ab_join(a[r], b[r], m)
+        p, i = rres.p, rres.i
         np.testing.assert_allclose(np.asarray(bp[r]), np.asarray(p),
                                    atol=1e-5)
         assert (np.asarray(bi[r]) == np.asarray(i)).all()
@@ -188,8 +196,10 @@ def test_kernel_ab_matches_band_engine(na, nb, m, it, dt):
     in correlation space."""
     ts_a = _series(na, seed=na + m, kind="walk")
     ts_b = _series(nb, seed=nb + m, kind="sine")
-    pk, ik = ops.natsa_ab_join(ts_a, ts_b, m, it=it, dt=dt)
-    pe, ie = ab_join(ts_a, ts_b, m)
+    rk = ops.natsa_ab_join(ts_a, ts_b, m, it=it, dt=dt)
+    re_ = ab_join(ts_a, ts_b, m)
+    pk, ik = rk.p, rk.i
+    pe, ie = re_.p, re_.i
     ck = dist_to_corr(jnp.asarray(pk), m)
     ce = dist_to_corr(jnp.asarray(pe), m)
     np.testing.assert_allclose(np.asarray(ck), np.asarray(ce), atol=5e-4)
@@ -202,8 +212,8 @@ def test_kernel_ab_matches_band_engine(na, nb, m, it, dt):
 def test_kernel_ab_with_exclusion_matches_self_kernel():
     ts = _series(360, seed=3, kind="walk")
     m, excl = 16, 4
-    p1, _ = ops.natsa_ab_join(ts, ts, m, exclusion=excl)
-    p2, _ = ops.natsa_matrix_profile(ts, m, exclusion=excl)
+    p1 = ops.natsa_ab_join(ts, ts, m, exclusion=excl).p
+    p2 = ops.natsa_matrix_profile(ts, m, exclusion=excl).p
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-4)
 
 
@@ -219,8 +229,8 @@ def test_property_ab_profile_valid(seed, m, kind):
     na, nb = 180, 110
     ts_a = _series(na, seed=seed, kind=kind)
     ts_b = _series(nb, seed=seed + 1, kind=kind)
-    p, idx = ab_join(ts_a, ts_b, m)
-    p, idx = np.asarray(p), np.asarray(idx)
+    res = ab_join(ts_a, ts_b, m)
+    p, idx = np.asarray(res.p), np.asarray(res.i)
     la, lb = na - m + 1, nb - m + 1
     rng = np.random.default_rng(seed)
 

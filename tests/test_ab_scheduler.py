@@ -40,7 +40,8 @@ def test_ab_rounds_monotone_and_exact(mesh):
         fracs.append(st.fraction_done)
     # the deprecated finish_reverse no-op is gone: run() alone is the answer
     assert not hasattr(sch, "finish_reverse")
-    p, idx = sch.distance_profile()
+    r = sch.distance_profile()
+    p, idx = r.p, r.i
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)
     lb = len(b) - m + 1
@@ -57,7 +58,8 @@ def test_ab_checkpoint_resume_identical(mesh, tmp_path):
 
     full = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
     full.run()
-    p_full, i_full = full.distance_profile()
+    r_full = full.distance_profile()
+    p_full, i_full = r_full.p, r_full.i
 
     part = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
     part.step_round()
@@ -68,7 +70,8 @@ def test_ab_checkpoint_resume_identical(mesh, tmp_path):
     res = AnytimeScheduler(a, m, mesh, ts_b=b, chunks_per_worker=4, band=16)
     res.resume(path)
     res.run()
-    p_res, i_res = res.distance_profile()
+    r_res = res.distance_profile()
+    p_res, i_res = r_res.p, r_res.i
     # resumed run completes the EXACT remaining chunks: identical profile
     np.testing.assert_array_equal(np.asarray(p_res), np.asarray(p_full))
     np.testing.assert_array_equal(np.asarray(i_res), np.asarray(i_full))
@@ -81,12 +84,12 @@ def test_ab_scheduler_with_exclusion_matches_self(mesh):
     ab = AnytimeScheduler(a, m, mesh, ts_b=a, exclusion=excl,
                           chunks_per_worker=4, band=16)
     ab.run()
-    p_ab, _ = ab.distance_profile()
+    p_ab = ab.distance_profile().p
 
     selfj = AnytimeScheduler(a, m, mesh, exclusion=excl,
                              chunks_per_worker=4, band=16)
     selfj.run()          # fused two-sided rounds: exact without any finish
-    p_self, _ = selfj.distance_profile()
+    p_self = selfj.distance_profile().p
     np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_self),
                                rtol=1e-3, atol=1e-3)
 

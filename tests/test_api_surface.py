@@ -41,7 +41,11 @@ CORE_ALL = [
     "top_motif",
 ]
 
-PROFILE_RESULT_FIELDS = [
+# ProfileResult is a plain frozen class since the lazy-harvest rework (the
+# tuple shim and its `legacy_arity` field retired with it); the pinned
+# surface is its CONSTRUCTOR — positional profile, keyword sides/meta —
+# plus the lazy-field roster the descriptors expose.
+PROFILE_RESULT_PARAMS = [
     "p",
     "i",
     "left_p",
@@ -60,7 +64,20 @@ PROFILE_RESULT_FIELDS = [
     "normalize",
     "k",
     "backend",
-    "legacy_arity",
+    "lazy",
+]
+
+PROFILE_RESULT_LAZY_FIELDS = [
+    "left_p",
+    "left_i",
+    "right_p",
+    "right_i",
+    "b_p",
+    "b_i",
+    "topk_p",
+    "topk_i",
+    "b_topk_p",
+    "b_topk_i",
 ]
 
 HARVEST_SPEC_FIELDS = ["sides", "k"]
@@ -97,8 +114,19 @@ def test_core_all_is_pinned():
         assert hasattr(core, name), name
 
 
-def test_profile_result_fields_are_pinned():
-    assert _fields(ProfileResult) == PROFILE_RESULT_FIELDS
+def test_profile_result_surface_is_pinned():
+    import inspect
+
+    params = [p for p in inspect.signature(ProfileResult.__init__).parameters
+              if p != "self"]
+    assert params == PROFILE_RESULT_PARAMS
+    assert list(ProfileResult.LAZY_FIELDS) == PROFILE_RESULT_LAZY_FIELDS
+    for name in PROFILE_RESULT_LAZY_FIELDS:
+        assert isinstance(getattr(ProfileResult, name), property), name
+    # the retired tuple shim must stay retired
+    for dunder in ("__iter__", "__getitem__", "__len__"):
+        assert not hasattr(ProfileResult, dunder), dunder
+    assert not hasattr(ProfileResult, "legacy_arity")
 
 
 def test_harvest_spec_fields_are_pinned():

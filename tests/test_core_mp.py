@@ -32,7 +32,8 @@ def _series(n, seed=0, kind="walk"):
 ])
 def test_engine_matches_bruteforce(n, m, kind):
     ts = _series(n, seed=n + m, kind=kind)
-    p, i = matrix_profile(ts, m)
+    res = matrix_profile(ts, m)
+    p, i = res.p, res.i
     p_ref, i_ref = matrix_profile_bruteforce(jnp.asarray(ts), m)
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)
@@ -48,8 +49,8 @@ def test_planted_motif_found():
     pattern = (np.sin(2 * np.pi * (2 * t + 6 * t ** 2)) * 4).astype(np.float32)
     ts[100:150] += pattern
     ts[600:650] += pattern
-    p, i = matrix_profile(ts, 50)
-    a, b = top_motif(p, i)
+    res = matrix_profile(ts, 50)
+    a, b = top_motif(res.p, res.i)
     pair = sorted([int(a), int(b)])
     assert abs(pair[0] - 100) <= 3 and abs(pair[1] - 600) <= 3, pair
 
@@ -57,31 +58,31 @@ def test_planted_motif_found():
 def test_planted_discord_found():
     ts = _series(1200, seed=9, kind="sine")
     ts[700:730] += np.linspace(0, 8, 30).astype(np.float32)  # anomaly
-    p, i = matrix_profile(ts, 40)
+    res = matrix_profile(ts, 40)
     excl = 10
-    picks = np.asarray(top_discords(p, i, 1, excl))
+    picks = np.asarray(top_discords(res.p, res.i, 1, excl))
     assert abs(int(picks[0]) - 700) <= 40
 
 
 def test_exclusion_zone_respected():
     ts = _series(300, seed=3)
     m = 16
-    p, i = matrix_profile(ts, m)
+    i = matrix_profile(ts, m).i
     pos = np.arange(len(np.asarray(i)))
     assert (np.abs(np.asarray(i) - pos) >= max(1, -(-m // 4))).all()
 
 
 def test_band_size_invariance():
     ts = _series(350, seed=5)
-    p1, _ = matrix_profile(ts, 20, None, 16)
-    p2, _ = matrix_profile(ts, 20, None, 64)
+    p1 = matrix_profile(ts, 20, None, 16).p
+    p2 = matrix_profile(ts, 20, None, 64).p
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-4)
 
 
 def test_reseed_tightens_or_keeps_error():
     ts = _series(2000, seed=11)
     p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), 32)
-    p_rs, _ = matrix_profile(ts, 32, None, 64, 256)
+    p_rs = matrix_profile(ts, 32, None, 64, 256).p
     err_rs = np.abs(np.asarray(p_rs) - np.asarray(p_ref)).max()
     assert err_rs < 1e-3
 
@@ -95,8 +96,8 @@ def test_property_profile_valid(seed, m, kind):
     best pair holds (profile[i] <= dist(i, j) for any sampled j)."""
     n = 260
     ts = _series(n, seed=seed, kind=kind)
-    p, idx = matrix_profile(ts, m)
-    p, idx = np.asarray(p), np.asarray(idx)
+    res = matrix_profile(ts, m)
+    p, idx = np.asarray(res.p), np.asarray(res.i)
     l = n - m + 1
     rng = np.random.default_rng(seed)
     for i in rng.integers(0, l, size=5):
@@ -129,5 +130,5 @@ def test_corr_dist_roundtrip():
 def test_flat_windows_no_nan():
     ts = np.ones(300, np.float32)
     ts[:50] = _series(50, seed=1)
-    p, i = matrix_profile(ts, 16)
+    p = matrix_profile(ts, 16).p
     assert not np.isnan(np.asarray(p)).any()

@@ -36,7 +36,7 @@ for r in range(sch.plan.n_rounds):
     if prev is not None and not (d <= prev + 1e-5).all():
         mono = False
     prev = d
-p, _ = sch.distance_profile()   # fused rounds: run() alone is exact
+p = sch.distance_profile().p   # fused rounds: run() alone is exact
 out["monotone"] = mono
 out["err"] = float(np.abs(np.asarray(p) - np.asarray(p_ref)).max())
 
@@ -47,7 +47,7 @@ sch2.checkpoint("/tmp/mp_test_ckpt.npz")
 sch3 = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
 sch3.resume("/tmp/mp_test_ckpt.npz", n_workers=5)   # elastic shrink
 sch3.run()
-p3, _ = sch3.distance_profile()
+p3 = sch3.distance_profile().p
 out["err_resume"] = float(np.abs(np.asarray(p3) - np.asarray(p_ref)).max())
 out["frac_after_fail"] = sch2.state.fraction_done
 
@@ -64,7 +64,7 @@ for r in range(ab.plan.n_rounds):
     if prev is not None and not (d <= prev + 1e-5).all():
         ab_mono = False
     prev = d
-pab, _ = ab.distance_profile()
+pab = ab.distance_profile().p
 out["ab_monotone"] = ab_mono
 out["ab_err"] = float(np.abs(np.asarray(pab) - np.asarray(pab_ref)).max())
 

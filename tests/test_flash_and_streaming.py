@@ -57,8 +57,8 @@ def _batch_profile(ts, m, excl, normalize):
     import jax.numpy as jnp
     from repro.core.matrix_profile import matrix_profile, matrix_profile_nonnorm
     if normalize:
-        return np.asarray(matrix_profile(ts, m, excl)[0])
-    return np.asarray(matrix_profile_nonnorm(jnp.asarray(ts), m, excl)[0])
+        return np.asarray(matrix_profile(ts, m, excl).p)
+    return np.asarray(matrix_profile_nonnorm(jnp.asarray(ts), m, excl).p)
 
 
 @pytest.mark.parametrize("normalize", [True, False])
@@ -109,7 +109,8 @@ def test_streaming_query_matches_ab_oracle(normalize):
     m = 12
     sp = StreamingProfile(m, 3, normalize=normalize)
     sp.append(ref)
-    d, idx = sp.query(q)
+    qres = sp.query(q)
+    d, idx = qres.p, qres.i
     d_ref, i_ref = ab_join_bruteforce(jnp.asarray(q, jnp.float32),
                                       jnp.asarray(ref, jnp.float32), m,
                                       normalize=normalize)
@@ -145,9 +146,9 @@ def test_streaming_query_improves_as_corpus_grows():
     sp = StreamingProfile(10, 2)
     sp.append(rng.normal(size=60))
     q = rng.normal(size=40)
-    d1, _ = sp.query(q)
+    d1 = sp.query(q).p
     sp.append(rng.normal(size=60))
-    d2, _ = sp.query(q)
+    d2 = sp.query(q).p
     # min over a superset can only improve — up to f32 engine jitter: the
     # grown corpus re-centers its streams, so re-scored prefix distances
     # wobble at f32 scale (query() runs the sweep executor, not f64 numpy)

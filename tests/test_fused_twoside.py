@@ -116,8 +116,9 @@ def test_ab_return_b_matches_swapped_join(na, nb, m):
     distance is symmetric), and == the brute-force oracle."""
     a = _series(na, seed=na)
     b = _series(nb, seed=nb + 1)
-    da, ia, db, ib = ab_join(a, b, m, return_b=True)
-    da_only, ia_only = ab_join(a, b, m)
+    res = ab_join(a, b, m, return_b=True)
+    da, db, ib = res.p, res.b_p, res.b_i
+    da_only = ab_join(a, b, m).p
     np.testing.assert_array_equal(np.asarray(da), np.asarray(da_only))
     pb_ref, _ = ab_join_bruteforce(jnp.asarray(b), jnp.asarray(a), m)
     np.testing.assert_allclose(np.asarray(db), np.asarray(pb_ref),
@@ -131,7 +132,8 @@ def test_ab_return_b_nonnorm():
     a = _series(200, seed=3, kind="noise")
     b = _series(80, seed=4, kind="noise")
     m = 10
-    da, ia, db, ib = ab_join(a, b, m, normalize=False, return_b=True)
+    res = ab_join(a, b, m, normalize=False, return_b=True)
+    da, db = res.p, res.b_p
     la, lb = 200 - m + 1, 80 - m + 1
     wa = np.stack([a[k:k + m] for k in range(la)]).astype(np.float64)
     wb = np.stack([b[k:k + m] for k in range(lb)]).astype(np.float64)
@@ -144,10 +146,11 @@ def test_batch_ab_return_b():
     a = np.stack([_series(160, seed=i) for i in range(3)])
     b = np.stack([_series(70, seed=10 + i) for i in range(3)])
     m = 12
-    da, ia, db, ib = batch_ab_join(a, b, m, return_b=True)
+    res = batch_ab_join(a, b, m, return_b=True)
+    db = res.b_p
     assert db.shape == (3, 70 - m + 1)
     for r in range(3):
-        _, _, db1, _ = ab_join(a[r], b[r], m, return_b=True)
+        db1 = ab_join(a[r], b[r], m, return_b=True).b_p
         np.testing.assert_allclose(np.asarray(db[r]), np.asarray(db1),
                                    atol=1e-5)
 
@@ -155,7 +158,7 @@ def test_batch_ab_return_b():
 def test_kernel_single_launch_matches_oracle():
     ts = _series(600, seed=5)
     m = 20
-    p, i = ops.natsa_matrix_profile(ts, m, it=128, dt=8)
+    p = ops.natsa_matrix_profile(ts, m, it=128, dt=8).p
     p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), m)
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)
@@ -169,8 +172,8 @@ def test_kernel_ab_exclusion_row_aligned_length():
     m = 16
     n = 256 + m - 1          # l == 256 == it exactly
     ts = _series(n, seed=77)
-    p_ab, _ = ops.natsa_ab_join(ts, ts, m, exclusion=8, it=256, dt=8)
-    p_self, _ = ops.natsa_matrix_profile(ts, m, exclusion=8, it=256, dt=8)
+    p_ab = ops.natsa_ab_join(ts, ts, m, exclusion=8, it=256, dt=8).p
+    p_self = ops.natsa_matrix_profile(ts, m, exclusion=8, it=256, dt=8).p
     np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_self),
                                atol=1e-4)
 
@@ -181,8 +184,8 @@ def test_kernel_ab_return_b_matches_engine():
     m = 16
     dk = ops.natsa_ab_join(a, b, m, it=64, dt=8, return_b=True)
     de = ab_join(a, b, m, return_b=True)
-    ck = dist_to_corr(jnp.asarray(dk[2]), m)
-    ce = dist_to_corr(jnp.asarray(de[2]), m)
+    ck = dist_to_corr(jnp.asarray(dk.b_p), m)
+    ce = dist_to_corr(jnp.asarray(de.b_p), m)
     np.testing.assert_allclose(np.asarray(ck), np.asarray(ce), atol=5e-4)
 
 
@@ -207,9 +210,9 @@ def test_batch_profile_single_sweep_matches_loop():
     stack = np.stack([_series(260, seed=i, kind=k)
                       for i, k in enumerate(["walk", "noise", "sine"])])
     m = 14
-    bp, bi = batch_profile(stack, m)
+    bp = batch_profile(stack, m).p
     for r in range(stack.shape[0]):
-        p, _ = matrix_profile(stack[r], m)
+        p = matrix_profile(stack[r], m).p
         np.testing.assert_allclose(np.asarray(bp[r]), np.asarray(p),
                                    atol=2e-4)
 
@@ -218,7 +221,8 @@ def test_nonnorm_fused_matches_bruteforce():
     rng = np.random.default_rng(11)
     ts = rng.normal(size=300).astype(np.float32)
     m, excl = 16, 4
-    p, idx = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
+    res = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
+    p, idx = res.p, res.i
     l = 300 - m + 1
     w = np.stack([ts[i:i + m] for i in range(l)]).astype(np.float64)
     d = np.sqrt(((w[:, None] - w[None, :]) ** 2).sum(-1))
@@ -248,7 +252,7 @@ def test_scheduler_run_alone_is_exact():
         .AnytimeScheduler(ts, m, _mesh1(), chunks_per_worker=4, band=16,
                           exclusion=4)
     sch.run()
-    p, _ = sch.distance_profile()
+    p = sch.distance_profile().p
     p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), m, exclusion=4)
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)
@@ -265,7 +269,8 @@ def test_scheduler_checkpoint_resume_mid_fused_round(tmp_path):
     full = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16,
                             exclusion=4)
     full.run()
-    p_full, i_full = full.distance_profile()
+    r_full = full.distance_profile()
+    p_full, i_full = r_full.p, r_full.i
 
     part = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16,
                             exclusion=4)
@@ -278,7 +283,8 @@ def test_scheduler_checkpoint_resume_mid_fused_round(tmp_path):
                            exclusion=4)
     res.resume(path)
     res.run()
-    p_res, i_res = res.distance_profile()
+    r_res = res.distance_profile()
+    p_res, i_res = r_res.p, r_res.i
     # the checkpoint carries the fused (row+column) state: completing the
     # remaining chunks reproduces the full run exactly
     np.testing.assert_array_equal(np.asarray(p_res), np.asarray(p_full))

@@ -55,7 +55,7 @@ def test_kernel_matches_oracle(n, m, it, dt, kind):
 @pytest.mark.parametrize("n,m", [(400, 16), (700, 24), (350, 12)])
 def test_full_profile_matches_bruteforce(n, m):
     ts = _series(n, seed=n, kind="walk")
-    p, i = ops.natsa_matrix_profile(ts, m, it=128, dt=8)
+    p = ops.natsa_matrix_profile(ts, m, it=128, dt=8).p
     p_ref, _ = matrix_profile_bruteforce(jnp.asarray(ts), m)
     np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref),
                                rtol=2e-3, atol=2e-3)
@@ -64,14 +64,15 @@ def test_full_profile_matches_bruteforce(n, m):
 def test_kernel_vs_core_engine_agree():
     from repro.core.matrix_profile import matrix_profile
     ts = _series(600, seed=77, kind="sine")
-    p1, _ = ops.natsa_matrix_profile(ts, 20)
-    p2, _ = matrix_profile(ts, 20)
+    p1 = ops.natsa_matrix_profile(ts, 20).p
+    p2 = matrix_profile(ts, 20).p
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-3)
 
 
 def test_kernel_float32_inputs_required_shapes():
     ts = _series(300, seed=1).astype(np.float64)  # f64 input OK (host prep)
-    p, i = ops.natsa_matrix_profile(ts, 16)
+    res = ops.natsa_matrix_profile(ts, 16)
+    p, i = res.p, res.i
     assert p.dtype == jnp.float32 and i.dtype == jnp.int32
     assert not np.isnan(np.asarray(p)[np.isfinite(np.asarray(p))]).any()
 

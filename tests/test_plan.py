@@ -94,7 +94,8 @@ def test_engine_backend_plan_equals_direct_banded_call():
     b = _series(200, seed=6)
     m = 14
     cross = compute_cross_stats_host(a, b, m)
-    plan = plan_mod.plan_sweep(m, 420 - m + 1, 200 - m + 1, backend="engine")
+    plan = plan_mod.plan_sweep(m, 420 - m + 1, 200 - m + 1, backend="engine",
+                               harvest="both")
     res = plan_mod.execute(plan, cross)
     sa, sb = ab_join_from_stats(cross, 0, DEFAULT_BAND, DEFAULT_RESEED,
                                 True, True, None)

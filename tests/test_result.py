@@ -1,7 +1,8 @@
 """Profile API v2: `ProfileResult` left/right splits, exact top-k, the
-tuple-unpacking deprecation shim, the analytics layer, and the streaming
+retired tuple-unpacking shim, the analytics layer, and the streaming
 LRU bounds — all oracle-backed from first principles (dense numpy distance
 matrices, `np.partition`/`np.sort` for top-k), no shared code with src/.
+Lazy-vs-eager harvest equivalence lives in tests/test_lazy_result.py.
 """
 
 import os
@@ -151,7 +152,8 @@ def test_topk_ab_both_sides_vs_partition_oracle(backend):
     b = _series(120, seed=14, kind="sine")
     m, k = 12, 3
     la, lb = 260 - m + 1, 120 - m + 1
-    plan = plan_mod.plan_sweep(m, la, lb, backend=backend, k=k)
+    plan = plan_mod.plan_sweep(m, la, lb, backend=backend, k=k,
+                               harvest="both")
     res = plan_mod.execute(plan, plan_mod.cross_stats_for(plan, a, b))
     d = _dense_ab(a, b, m)
     np.testing.assert_allclose(np.asarray(res.topk_dist), _topk_oracle(d, k),
@@ -270,24 +272,32 @@ def test_scheduler_ab_topk_both_sides():
                                _topk_oracle(d.T, k), rtol=2e-3, atol=2e-3)
 
 
-# -- the tuple-unpacking deprecation shim -------------------------------------
+# -- the tuple-unpacking shim is retired --------------------------------------
 
 
-def test_tuple_unpacking_shim_warns_and_matches():
+def test_tuple_unpacking_shim_is_retired():
+    """The one-release shim is gone as scheduled: iteration, indexing and
+    `len()` must AGREE — all TypeError, no silent partial protocol where
+    `len()` works but unpacking doesn't (or vice versa)."""
     ts = _series(200, seed=41)
     res = matrix_profile(ts, 16, 4)
-    with pytest.warns(DeprecationWarning, match="unpacking"):
-        p, i = matrix_profile(ts, 16, 4)
-    np.testing.assert_array_equal(np.asarray(p), np.asarray(res.p))
-    np.testing.assert_array_equal(np.asarray(i), np.asarray(res.i))
-    with pytest.warns(DeprecationWarning):
-        assert np.asarray(res[0]).shape == res.p.shape
-    # return_b call sites unpacked FOUR values — the shim preserves arity
+    with pytest.raises(TypeError):
+        p, i = res
+    with pytest.raises(TypeError):
+        list(res)
+    with pytest.raises(TypeError):
+        res[0]
+    with pytest.raises(TypeError):
+        len(res)
+    # same story for the old 4-tuple return_b arity
     a, b = _series(150, seed=42), _series(90, seed=43)
-    with pytest.warns(DeprecationWarning):
-        da, ia, db, ib = ab_join(a, b, 12, return_b=True)
-    assert len(ab_join(a, b, 12, return_b=True)) == 4
-    assert len(ab_join(a, b, 12)) == 2
+    abr = ab_join(a, b, 12, return_b=True)
+    with pytest.raises(TypeError):
+        da, ia, db, ib = abr
+    with pytest.raises(TypeError):
+        len(abr)
+    # and no deprecation machinery left behind
+    assert not hasattr(res, "legacy_arity")
 
 
 def test_harvest_spec_validation():
@@ -420,9 +430,8 @@ def test_streaming_query_result_object():
     res = sp.query(np.cumsum(rng.normal(size=40)))
     assert isinstance(res, ProfileResult) and res.kind == "ab"
     assert res.p.shape == (31,) and res.p.dtype == np.float64
-    with pytest.warns(DeprecationWarning):
+    with pytest.raises(TypeError):        # shim retired here too
         d, i = sp.query(np.cumsum(rng.normal(size=40)))
-    assert d.shape == (31,)
 
 
 if __name__ == "__main__":

@@ -121,6 +121,31 @@ def test_kernel_roofline_regimes():
     assert big["bytes_per_cell"] < worse["bytes_per_cell"]
 
 
+def test_matrix_profile_roofline_bridges_kernel_model():
+    """matrix_profile_roofline == kernel_roofline's terms, expressed as
+    RooflineTerms (ROADMAP item 2: bytes_per_cell wired into the shared
+    roofline vocabulary)."""
+    from repro.kernels import DEFAULT_DT, DEFAULT_IT, ops
+
+    l, excl = 131072, 64
+    t = roofline.matrix_profile_roofline(l, excl, it=512, dt=32)
+    ref = ops.kernel_roofline(l, excl, 512, 32)
+    assert t.t_compute == pytest.approx(ref["t_compute_s"])
+    assert t.t_memory == pytest.approx(ref["t_memory_s"])
+    assert t.wire_bytes_per_chip == 0 and t.t_collective == 0
+    # defaults come from the SHARED kernel constants, not local copies
+    t_def = roofline.matrix_profile_roofline(l, excl)
+    ref_def = ops.kernel_roofline(l, excl, DEFAULT_IT, DEFAULT_DT)
+    assert t_def.t_memory == pytest.approx(ref_def["t_memory_s"])
+    # regime verdicts: VMEM-resident sweep is compute-bound; the streamed
+    # regime past residency flips memory-bound (the NATSA motivation)
+    small = roofline.matrix_profile_roofline(16384, 64)
+    assert small.bottleneck == "compute"
+    big = roofline.matrix_profile_roofline(2097152, 64, it=512, dt=32)
+    assert big.bottleneck == "memory"
+    assert big.step_time == pytest.approx(big.t_memory)
+
+
 # -- non-normalized profile (telemetry mode) ----------------------------------
 
 
@@ -129,7 +154,7 @@ def test_nonnorm_profile_matches_bruteforce():
     rng = np.random.default_rng(3)
     ts = rng.normal(size=300).astype(np.float32)
     m, excl = 16, 4
-    p, idx = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
+    p = matrix_profile_nonnorm(jnp.asarray(ts), m, excl).p
     l = 300 - m + 1
     w = np.stack([ts[i:i + m] for i in range(l)])
     d = np.sqrt(((w[:, None] - w[None, :]) ** 2).sum(-1))
@@ -143,6 +168,5 @@ def test_nonnorm_detects_level_anomaly():
     rng = np.random.default_rng(0)
     ts = (2.0 + 0.01 * rng.normal(size=400)).astype(np.float32)
     ts[250:266] += np.linspace(0, 1.0, 16).astype(np.float32)
-    p, _ = matrix_profile_nonnorm(jnp.asarray(ts), 16, 4)
-    p = np.asarray(p)
+    p = np.asarray(matrix_profile_nonnorm(jnp.asarray(ts), 16, 4).p)
     assert 235 <= int(np.argmax(np.where(np.isfinite(p), p, -1))) <= 266

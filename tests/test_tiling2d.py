@@ -112,9 +112,10 @@ def test_nonnorm_clamped_equals_unclamped():
     a = _series(400, seed=1, kind="noise")
     b = _series(90, seed=2, kind="noise")
     m = 10
-    da_c, ia_c, db_c, ib_c = ab_join(a, b, m, normalize=False, return_b=True)
+    res_c = ab_join(a, b, m, normalize=False, return_b=True)
+    da_c, db_c = res_c.p, res_c.b_p
     plan_u = plan_mod.plan_sweep(m, 400 - m + 1, 90 - m + 1, normalize=False,
-                                 clamp_rows=False)
+                                 clamp_rows=False, harvest="both")
     res_u = plan_mod.execute(
         plan_u, (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)))
     da_u, db_u = res_u.dist, res_u.dist_b
@@ -182,12 +183,12 @@ def test_ab_join_orients_short_side():
     a = _series(500, seed=3)
     b = _series(120, seed=4)
     m = 12
-    da, ia, db, ib = ab_join(a, b, m, return_b=True)
-    db2, ib2, da2, ia2 = ab_join(b, a, m, return_b=True)
-    np.testing.assert_array_equal(np.asarray(da), np.asarray(da2))
-    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ia2))
-    np.testing.assert_array_equal(np.asarray(db), np.asarray(db2))
-    np.testing.assert_array_equal(np.asarray(ib), np.asarray(ib2))
+    r1 = ab_join(a, b, m, return_b=True)
+    r2 = ab_join(b, a, m, return_b=True)
+    np.testing.assert_array_equal(np.asarray(r1.p), np.asarray(r2.b_p))
+    np.testing.assert_array_equal(np.asarray(r1.i), np.asarray(r2.b_i))
+    np.testing.assert_array_equal(np.asarray(r1.b_p), np.asarray(r2.p))
+    np.testing.assert_array_equal(np.asarray(r1.b_i), np.asarray(r2.i))
 
 
 # -- banked column accumulators ----------------------------------------------
@@ -279,7 +280,7 @@ def test_natsa_profile_auto_banked_matches_engine():
     matches the band engine."""
     n, m = 9000, 64
     ts = _series(n, seed=10)
-    p_k, _ = ops.natsa_matrix_profile(ts, m, it=1024, dt=32)
-    p_e, _ = matrix_profile(ts, m)
+    p_k = ops.natsa_matrix_profile(ts, m, it=1024, dt=32).p
+    p_e = matrix_profile(ts, m).p
     np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_e),
                                rtol=2e-3, atol=2e-3)
