@@ -378,6 +378,55 @@ def bench_topk():
     emit("ab_rowstream_topk4_a4096_b512", t_ab, "rowstream insertion top-k")
 
 
+def bench_ckpt_overhead():
+    """Fault-tolerance tax: a supervised run that checkpoints EVERY round
+    (hardened format — crc32 checksums, .prev rotation) vs the plain
+    anytime `run()` on the same 1-worker schedule (n=4096). Checkpointing
+    is host-side npz + crc off the dispatch path, so the gated ratio row
+    must stay <= 1.3x (CI gate). Reps are interleaved so host drift hits
+    both arms alike."""
+    import tempfile
+
+    from repro.core.faults import FaultPolicy
+    from repro.core.scheduler import AnytimeScheduler
+    from repro.launch.mesh import compat_mesh
+
+    n, m = 4096, 128
+    ts = pipeline.random_walk(n, seed=51)
+    mesh = compat_mesh((1,), ("workers",))
+
+    def mk():
+        return AnytimeScheduler(ts, m, mesh, chunks_per_worker=8, band=64)
+
+    mk().run()                          # compile/warmup the round fn
+
+    def plain():
+        s = mk()
+        s.run()
+        jax.block_until_ready(s.state.profile.corr)
+
+    def supervised():
+        s = mk()
+        with tempfile.TemporaryDirectory() as td:
+            s.run_supervised(FaultPolicy(checkpoint_every=1),
+                             checkpoint_path=os.path.join(td, "ck.npz"))
+        jax.block_until_ready(s.state.profile.corr)
+
+    best_p = best_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        plain()
+        best_p = min(best_p, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        supervised()
+        best_s = min(best_s, time.perf_counter() - t0)
+    emit(f"mp_plain_run_n{n}", best_p * 1e6, "baseline(plain anytime run)")
+    emit(f"mp_ckpt_supervised_n{n}", best_s * 1e6,
+         "supervised, checkpoint every round (hardened format)")
+    emit(f"mp_ckpt_overhead_n{n}", best_s / best_p,
+         "supervised_ckpt_vs_plain(gate<=1.3; value is the ratio, not us)")
+
+
 def bench_partition():
     l, excl = 500_000, 64
     for parts in (16, 256):
@@ -462,6 +511,7 @@ BENCHES = {
     "long": bench_long_series,
     "plan": bench_plan,
     "topk": bench_topk,
+    "ckpt": bench_ckpt_overhead,
     "batch": bench_batch,
     "partition": bench_partition,
     "bytes": bench_bytes_proxy,
@@ -487,11 +537,10 @@ def main(argv: list[str] | None = None) -> None:
     with open(os.path.join(art, "bench_results.csv"), "w") as f:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
     # machine-readable mirror for CI perf gates and cross-PR comparisons —
-    # keyed identically to PR5's table (plus the entry-overhead rows; the
-    # partition/bytes rows now carry real values) so trajectory tooling
-    # diffs in place
+    # keyed identically to PR6's table (plus the checkpoint-overhead rows)
+    # so trajectory tooling diffs in place
     table = {r.split(",")[0]: float(r.split(",")[1]) for r in ROWS}
-    with open(os.path.join(art, "BENCH_PR6.json"), "w") as f:
+    with open(os.path.join(art, "BENCH_PR7.json"), "w") as f:
         json.dump(table, f, indent=1, sort_keys=True)
 
 

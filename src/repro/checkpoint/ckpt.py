@@ -5,6 +5,24 @@ production shape: step-numbered directories, atomic rename commit, a
 LATEST pointer written last, corrupt/partial checkpoints ignored on
 restore. Works for params / optimizer state / scheduler state alike
 (anything jax.tree-flattenable with array leaves).
+
+Checkpoint layout (one directory per step, `step_%010d/`):
+
+  arrays.npz   — flattened pytree leaves, keyed by "/".join(path)
+  meta.json    — {"format":    int, format tag of the writer (FORMAT here);
+                                format-1 files (no tag) still restore, just
+                                without checksum verification,
+                  "step":      int,
+                  "metadata":  caller dict,
+                  "keys":      sorted array names — restore verifies these
+                               against the npz contents, so a truncated
+                               archive is DETECTED, not KeyError'd,
+                  "checksums": name -> crc32 of the raw array bytes —
+                               silent bit-rot is detected on restore}
+
+`restore()` verifies the requested step and, when verification fails and no
+explicit `step` was pinned, falls back to the NEWEST OLDER intact step with
+a warning (losing at most the interval between the two) instead of raising.
 """
 
 from __future__ import annotations
@@ -14,9 +32,19 @@ import os
 import re
 import shutil
 import tempfile
+import warnings
+import zlib
 
 import jax
 import numpy as np
+
+#: Format written by `save`. Format 2 adds per-array crc32 checksums.
+FORMAT = 2
+
+
+class CheckpointCorruptionError(ValueError):
+    """A step directory failed verification: unreadable archive, meta/npz
+    key mismatch, or checksum mismatch."""
 
 
 def _flatten_with_paths(tree):
@@ -29,6 +57,10 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _crc32(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
 def save(directory: str, step: int, tree, *, keep: int = 3,
          metadata: dict | None = None) -> str:
     """Atomically write checkpoint `step`; prune to the newest `keep`."""
@@ -39,8 +71,11 @@ def save(directory: str, step: int, tree, *, keep: int = 3,
         arrays = _flatten_with_paths(tree)
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "metadata": metadata or {},
-                       "keys": sorted(arrays)}, f)
+            json.dump({"format": FORMAT, "step": step,
+                       "metadata": metadata or {},
+                       "keys": sorted(arrays),
+                       "checksums": {k: _crc32(a)
+                                     for k, a in arrays.items()}}, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -89,23 +124,79 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def _load_step(directory: str, step: int) -> tuple[dict, dict]:
+    """Load + verify one step directory -> (arrays, meta). Raises
+    `CheckpointCorruptionError` on any verification failure."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptionError(
+            f"step {step}: unreadable meta.json: {e}") from e
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+    except Exception as e:  # BadZipFile, zlib errors, truncation, OSError
+        raise CheckpointCorruptionError(
+            f"step {step}: unreadable arrays.npz: {e}") from e
+    keys = meta.get("keys")
+    if keys is not None and sorted(keys) != sorted(arrays):
+        missing = sorted(set(keys) - set(arrays))
+        extra = sorted(set(arrays) - set(keys))
+        raise CheckpointCorruptionError(
+            f"step {step}: arrays.npz does not match meta keys "
+            f"(missing {missing}, unexpected {extra}) — truncated or "
+            f"mixed-up checkpoint")
+    if int(meta.get("format", 1)) >= 2:
+        for name, want in meta.get("checksums", {}).items():
+            got = _crc32(arrays[name])
+            if got != int(want):
+                raise CheckpointCorruptionError(
+                    f"step {step}: checksum mismatch for array {name!r} "
+                    f"(stored {want}, recomputed {got}) — silent disk "
+                    f"corruption")
+    return arrays, meta
+
+
 def restore(directory: str, tree_like, *, step: int | None = None):
     """Restore into the structure of `tree_like`. Returns (tree, step,
-    metadata); raises FileNotFoundError if no usable checkpoint exists."""
+    metadata); raises FileNotFoundError if no usable checkpoint exists.
+
+    The loaded step is VERIFIED (meta keys vs npz contents, crc32
+    checksums). When the newest step fails verification and `step` was not
+    pinned, restore warns and falls back to the next older intact step;
+    a pinned `step` that fails raises `CheckpointCorruptionError`.
+    """
+    pinned = step is not None
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    z = np.load(os.path.join(path, "arrays.npz"))
-    arrays = {k: z[k] for k in z.files}
+    candidates = ([step] if pinned else
+                  [s for s in reversed(all_steps(directory)) if s <= step]
+                  or [step])
+    arrays = meta = None
+    for i, s in enumerate(candidates):
+        try:
+            arrays, meta = _load_step(directory, s)
+            step = s
+            break
+        except CheckpointCorruptionError as e:
+            if pinned or i == len(candidates) - 1:
+                raise
+            warnings.warn(
+                f"checkpoint {e}; falling back to an older step",
+                stacklevel=2)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
     for p, leaf in flat:
         key = "/".join(str(getattr(x, "key", getattr(x, "idx", x)))
                        for x in p)
+        if key not in arrays:
+            raise CheckpointCorruptionError(
+                f"step {step}: array {key!r} required by the restore "
+                f"target is missing from the checkpoint")
         a = arrays[key]
         if hasattr(leaf, "dtype"):
             a = a.astype(leaf.dtype)

@@ -358,7 +358,12 @@ def _band_corr(stats: ZStats, k0, band: int,
         cov = cov + jnp.take(drift, seg, axis=1)
 
     corr = cov * stats.invn[None, :] * invnj
-    return jnp.where(valid, corr, NEG)
+    # invn < 0 is the missing-data sentinel (zstats): pairs touching a
+    # masked subsequence are excluded like out-of-range cells. Applied only
+    # HERE, never to the delta mask — the cumsum recurrence must still pass
+    # through masked cells to reach later valid cells on the diagonal.
+    keep = valid & (stats.invn >= 0)[None, :] & (invnj >= 0)
+    return jnp.where(keep, corr, NEG)
 
 
 def band_rowmax(stats: ZStats, k0, band: int, *,
@@ -560,15 +565,13 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
     data); the O(l^2) diagonal engine runs on device in f32, touching each
     upper-triangle cell once and harvesting both profile sides from it.
     """
-    import numpy as np
-
     from repro.core import plan as plan_mod
     from repro.core.result import build_result
-
+    from repro.core.validate import validate_series
     from repro.core.zstats import compute_stats_host
 
     m = int(window)
-    arr = np.asarray(ts)
+    arr = validate_series(ts, m)
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
                                band=band, reseed_every=reseed_every, k=k,
                                harvest=harvest)
@@ -726,7 +729,11 @@ def _band_corr_ab(cross: CrossStats, k0, band: int, *,
         cov = cov + jnp.take(drift, seg, axis=1)
 
     corr = cov * invni[None, :] * invnj
-    return jnp.where(valid, corr, NEG), i, i0
+    # missing-data sentinel (invn < 0): exclude masked pairs at harvest time
+    # only — the delta mask above must not change, or the recurrence would
+    # break for valid cells past a masked stretch of the diagonal
+    keep = valid & (invni >= 0)[None, :] & (invnj >= 0)
+    return jnp.where(keep, corr, NEG), i, i0
 
 
 def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
@@ -1035,6 +1042,8 @@ def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
         else:
             qt = jnp.where(i == 0, row0, qt)
         corr = qt * invnb * invni
+        # missing-data sentinel (invn < 0): masked pairs lose unconditionally
+        corr = jnp.where((invni >= 0) & (invnb >= 0), corr, NEG)
         if excl > 0:
             corr = jnp.where(jnp.abs(jj - i) >= excl, corr, NEG)
         take = corr > pb
@@ -1095,6 +1104,8 @@ def ab_join_rowstream_topk(cross: CrossStats, exclusion: int = 0,
         else:
             qt = jnp.where(i == 0, row0, qt)
         corr = qt * invnb * invni
+        # missing-data sentinel (invn < 0): masked pairs lose unconditionally
+        corr = jnp.where((invni >= 0) & (invnb >= 0), corr, NEG)
         if excl > 0:
             corr = jnp.where(jnp.abs(jj - i) >= excl, corr, NEG)
         # B side: one new candidate per column, insertion-merged
@@ -1141,13 +1152,14 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     row-clamped to the rectangle. The pre-clamp full-height sweep survives
     only as an A/B-comparison plan (`plan_sweep(..., clamp_rows=False)`).
     """
-    import numpy as np
-
     from repro.core import plan as plan_mod
     from repro.core.result import build_result
+    from repro.core.validate import validate_series
 
     m = int(window)
-    a, b = np.asarray(ts_a), np.asarray(ts_b)
+    # nonnorm distances cannot mask non-finite samples (no invn sentinel)
+    a = validate_series(ts_a, m, name="ts_a", require_finite=not normalize)
+    b = validate_series(ts_b, m, name="ts_b", require_finite=not normalize)
     plan = plan_mod.plan_sweep(m, a.shape[0] - m + 1, b.shape[0] - m + 1,
                                exclusion=exclusion, normalize=normalize,
                                harvest="both" if return_b else "merged",
@@ -1176,12 +1188,16 @@ def batch_profile(series, window: int, *, exclusion: int | None = None,
 
     from repro.core import plan as plan_mod
     from repro.core.result import build_result
+    from repro.core.validate import validate_series
     from repro.core.zstats import compute_stats_host
 
     arr = np.asarray(series)
-    if arr.ndim != 2:
-        raise ValueError(f"expected a (batch, n) stack, got shape {arr.shape}")
+    if arr.ndim != 2 or arr.shape[0] == 0:
+        raise ValueError(f"expected a non-empty (batch, n) stack, got "
+                         f"shape {arr.shape}")
     m = int(window)
+    # rows share dtype and length, so validating one validates the stack
+    validate_series(arr[0], m, name="series[0]")
     plan = plan_mod.plan_sweep(m, arr.shape[1] - m + 1, exclusion=exclusion,
                                band=band, reseed_every=reseed_every,
                                batch=arr.shape[0], k=k, harvest=harvest)
@@ -1206,11 +1222,16 @@ def batch_ab_join(stack_a, stack_b, window: int, *,
     from repro.core.result import build_result
     from repro.core.zstats import compute_cross_stats_host
 
+    from repro.core.validate import validate_series
+
     a, b = np.asarray(stack_a), np.asarray(stack_b)
-    if a.ndim != 2 or b.ndim != 2 or a.shape[0] != b.shape[0]:
-        raise ValueError(f"expected matching (batch, n) stacks, got "
-                         f"{a.shape} vs {b.shape}")
+    if (a.ndim != 2 or b.ndim != 2 or a.shape[0] != b.shape[0]
+            or a.shape[0] == 0):
+        raise ValueError(f"expected matching non-empty (batch, n) stacks, "
+                         f"got {a.shape} vs {b.shape}")
     m = int(window)
+    validate_series(a[0], m, name="stack_a[0]")
+    validate_series(b[0], m, name="stack_b[0]")
     plan = plan_mod.plan_sweep(m, a.shape[1] - m + 1, b.shape[1] - m + 1,
                                exclusion=exclusion, band=band,
                                reseed_every=reseed_every,
@@ -1281,9 +1302,11 @@ def matrix_profile_nonnorm(ts, window: int, exclusion: int | None = None,
     """
     from repro.core import plan as plan_mod
     from repro.core.result import build_result
+    from repro.core.validate import validate_series
 
-    ts = jnp.asarray(ts, jnp.float32)
     m = int(window)
+    validate_series(ts, m, require_finite=True)
+    ts = jnp.asarray(ts, jnp.float32)
     plan = plan_mod.plan_sweep(m, ts.shape[0] - m + 1, exclusion=exclusion,
                                normalize=False, band=band, harvest=harvest)
     res = plan_mod.execute(plan, ts)

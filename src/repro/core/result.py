@@ -192,9 +192,15 @@ class ProfileResult:
     skipped the side — re-runs the same plan two-sided (bitwise-equal
     either way; see the module docstring). Sides the plan can never
     produce stay None. Instances are frozen like the old dataclass.
+
+    `fraction_done` is the anytime coverage of the answer: 1.0 everywhere
+    except a gracefully-degraded supervised distributed run, where it is
+    the fraction of true cells swept before retries were exhausted
+    (`AnytimeScheduler.run_supervised`).
     """
 
-    _META = ("kind", "window", "exclusion", "normalize", "k", "backend")
+    _META = ("kind", "window", "exclusion", "normalize", "k", "backend",
+             "fraction_done")
     LAZY_FIELDS = tuple(_LAZY_GROUPS)
 
     def __init__(self, p: Any, i: Any, *, left_p: Any = None,
@@ -203,7 +209,8 @@ class ProfileResult:
                  topk_i: Any = None, b_topk_p: Any = None,
                  b_topk_i: Any = None, kind: str = "self", window: int = 0,
                  exclusion: int = 0, normalize: bool = True, k: int = 1,
-                 backend: str = "engine", lazy: _LazyHarvest | None = None):
+                 backend: str = "engine", fraction_done: float = 1.0,
+                 lazy: _LazyHarvest | None = None):
         sa = object.__setattr__
         sa(self, "p", p)
         sa(self, "i", i)
@@ -223,6 +230,11 @@ class ProfileResult:
         sa(self, "normalize", bool(normalize))
         sa(self, "k", int(k))
         sa(self, "backend", backend)
+        # anytime coverage: 1.0 for a completed sweep; the distributed
+        # scheduler's supervised loop tags gracefully-degraded answers with
+        # the fraction of true cells actually swept (see
+        # SchedulerState.fraction_done)
+        sa(self, "fraction_done", float(fraction_done))
         sa(self, "_lazy", lazy)
 
     # frozen like the dataclass it replaces

@@ -25,6 +25,8 @@ import dataclasses
 import json
 import os
 import tempfile
+import warnings
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -32,10 +34,64 @@ import numpy as np
 
 from repro.core import partition
 from repro.core import plan as plan_mod
+from repro.core.faults import (CheckpointCorruptionError, CheckpointWriteError,
+                               FaultPolicy, RoundFailure, SupervisedReport)
 from repro.core.matrix_profile import ProfileState, TopKState
 from repro.core.partition import AnytimePlan
 from repro.core.result import ProfileResult
 from repro.core.zstats import compute_cross_stats_host, compute_stats_host
+
+#: Checkpoint format written by `AnytimeScheduler.checkpoint`. Format 2 adds
+#: per-array crc32 checksums to the meta record; format-1 files (no `format`
+#: tag) still load, just without checksum verification.
+CHECKPOINT_FORMAT = 2
+
+
+def _crc32(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+def _load_checkpoint_file(path: str) -> tuple[dict, dict]:
+    """Load + verify one checkpoint file -> (arrays, meta).
+
+    Raises `CheckpointCorruptionError` for anything that smells like disk
+    damage (unreadable/truncated archive, missing arrays, checksum mismatch,
+    unparseable meta) — the caller may then fall back to the previous good
+    checkpoint. A format written by a NEWER version raises a plain
+    ValueError: that is a caller error, not corruption.
+    """
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+    except Exception as e:  # BadZipFile, zlib errors, truncation, OSError
+        raise CheckpointCorruptionError(
+            f"unreadable checkpoint {path!r}: {e}") from e
+    if "meta" not in arrays:
+        raise CheckpointCorruptionError(
+            f"checkpoint {path!r} carries no meta record")
+    try:
+        meta = json.loads(str(arrays["meta"]))
+    except Exception as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint {path!r} meta record is not valid JSON: {e}") from e
+    fmt = int(meta.get("format", 1))
+    if fmt > CHECKPOINT_FORMAT:
+        raise ValueError(
+            f"checkpoint {path!r} has format {fmt}, newer than this "
+            f"scheduler's supported format {CHECKPOINT_FORMAT}")
+    if fmt >= 2:
+        sums = meta.get("checksums", {})
+        for name, want in sums.items():
+            if name not in arrays:
+                raise CheckpointCorruptionError(
+                    f"checkpoint {path!r} is truncated: array {name!r} "
+                    f"listed in meta but missing from the archive")
+            got = _crc32(arrays[name])
+            if got != int(want):
+                raise CheckpointCorruptionError(
+                    f"checkpoint {path!r} failed checksum verification for "
+                    f"array {name!r} (stored {want}, recomputed {got})")
+    return arrays, meta
 
 
 @dataclasses.dataclass
@@ -83,6 +139,10 @@ class AnytimeScheduler:
         self.band = band
         self.k = int(k)
         self.ab = ts_b is not None
+        from repro.core.validate import validate_series
+        validate_series(ts, self.window)
+        if self.ab:
+            validate_series(ts_b, self.window, name="ts_b")
         ts = np.asarray(ts, np.float32)
         n_workers = mesh.shape[axis]
         if self.ab:
@@ -119,6 +179,9 @@ class AnytimeScheduler:
             rounds_completed=0,
             profile_b=self._empty_state(self.l_b) if self.ab else None,
         )
+        # set by run_supervised(): the fault history of the last supervised
+        # run (core.faults.SupervisedReport), None before any such run
+        self.supervised_report: SupervisedReport | None = None
 
     def _empty_state(self, l: int):
         return (TopKState.empty(l, self.k) if self.k > 1
@@ -173,15 +236,27 @@ class AnytimeScheduler:
                                 jnp.asarray(k0s), jnp.asarray(k1s))
         return merged, None
 
-    def step_round(self, *, fail_workers: set[int] | None = None) -> SchedulerState:
+    def step_round(self, *, fail_workers: set[int] | None = None,
+                   injector=None, tick: int = 0,
+                   attempt: int = 0) -> SchedulerState:
         """Execute the next round. `fail_workers` simulates NDP-unit/node
         failure: those workers' chunks are NOT marked done (their compute is
         discarded by re-merging from the previous checkpointed profile) and
-        will be replanned."""
+        will be replanned.
+
+        `injector`/`tick`/`attempt` thread the chaos harness through the
+        dispatch: when the injector schedules a transient failure for this
+        (tick, attempt) the round raises `RoundFailure` BEFORE committing
+        anything — the running profile state is untouched, so the caller
+        (`run_supervised`) can simply retry."""
         plan = self.state.plan
         r = self.state.rounds_completed
         if r >= plan.n_rounds:
             return self.state
+        if injector is not None and injector.round_should_fail(tick, attempt):
+            raise RoundFailure(
+                f"injected round dispatch failure (tick {tick}, "
+                f"attempt {attempt})")
         ids = plan.rounds[r]
         k0s, k1s = self._round_bounds(ids)
         merged, merged_b = self._run_round(self.state, k0s, k1s)
@@ -209,45 +284,231 @@ class AnytimeScheduler:
             self.step_round()
         return self.state
 
+    def run_supervised(self, policy: FaultPolicy | None = None, *,
+                       checkpoint_path: str | None = None,
+                       injector=None,
+                       max_rounds: int | None = None) -> ProfileResult:
+        """Run to completion under supervision: retries, worker exclusion,
+        elastic replanning, periodic checkpointing, graceful degradation.
+
+        The supervised loop is what NATSA's serving story actually needs —
+        NDP units fail mid-scan, links flap, and the anytime profile must
+        keep its monotone guarantee through all of it:
+
+          * a round that raises (`RoundFailure` or any runtime dispatch
+            error) is retried up to `policy.max_retries` times with
+            exponential backoff; the running profile is never touched by a
+            failed attempt, so retries are idempotent;
+          * workers crashing `policy.worker_failure_threshold`+ rounds
+            (their chunk contributions were discarded each time) are
+            excluded and the remaining chunks replanned over the survivors
+            (`resume()`-style elastic shrink, never below
+            `policy.min_workers`);
+          * every `policy.checkpoint_every` completed rounds the fused
+            profile is checkpointed to `checkpoint_path` (hardened format:
+            crc32 checksums, `.prev` rotation);
+          * if retries are exhausted and `policy.degrade_gracefully`, the
+            CURRENT anytime answer is returned — tagged with its
+            `fraction_done` coverage — instead of raising.
+
+        Faults are observable afterwards in `self.supervised_report`
+        (a `core.faults.SupervisedReport`); `injector` threads the
+        deterministic chaos schedule (`core.faults.FaultInjector`) through
+        rounds and checkpoint writes. Returns the final (or degraded)
+        `ProfileResult`.
+        """
+        policy = FaultPolicy() if policy is None else policy
+        report = SupervisedReport()
+        self.supervised_report = report
+        mesh_workers = self.mesh.shape[self.axis]
+        active = self.state.plan.n_workers
+        tick = 0
+        serial = 0
+        since_ckpt = 0
+        while not self.state.done.all():
+            if max_rounds is not None and report.rounds >= max_rounds:
+                break
+            if self.state.rounds_completed >= self.state.plan.n_rounds:
+                # the plan's rounds ran out but crashed chunks remain:
+                # replan ONLY the not-yet-done chunks over the active
+                # workers and keep going (no committed work recomputed)
+                self._replan(active)
+                report.replans += 1
+                continue
+            crashed: set[int] = set()
+            if injector is not None:
+                crashed = {int(w) for w in injector.crashed_workers(tick)
+                           if int(w) < mesh_workers}
+            attempt = 0
+            while True:
+                try:
+                    self.step_round(fail_workers=crashed, injector=injector,
+                                    tick=tick, attempt=attempt)
+                    break
+                except RuntimeError:
+                    # RoundFailure and real dispatch errors retry alike; a
+                    # failed attempt committed nothing, so the retry re-runs
+                    # the SAME round against the same previous profile.
+                    attempt += 1
+                    report.retries += 1
+                    if attempt > policy.max_retries:
+                        report.degraded = True
+                        report.fraction_done = self.state.fraction_done
+                        if policy.degrade_gracefully:
+                            return self.result()
+                        raise
+                    policy.sleep(policy.backoff(attempt))
+            tick += 1
+            report.rounds += 1
+            since_ckpt += 1
+            if crashed:
+                for w in sorted(crashed):
+                    report.worker_failures[w] = (
+                        report.worker_failures.get(w, 0) + 1)
+                flaky = sorted(
+                    w for w, c in report.worker_failures.items()
+                    if c >= policy.worker_failure_threshold
+                    and w not in report.excluded_workers)
+                if flaky:
+                    survivors = active - len(flaky)
+                    if survivors >= max(int(policy.min_workers), 1):
+                        report.excluded_workers.extend(flaky)
+                        active = survivors
+                        self._replan(active)
+                        report.replans += 1
+            if (checkpoint_path is not None and policy.checkpoint_every
+                    and since_ckpt >= int(policy.checkpoint_every)):
+                since_ckpt = 0
+                try:
+                    corrupted = self.checkpoint(
+                        checkpoint_path, injector=injector, serial=serial)
+                    report.checkpoints_written += 1
+                    if corrupted:
+                        report.checkpoints_corrupted += 1
+                except CheckpointWriteError:
+                    # interrupted before the atomic commit — the previous
+                    # checkpoint on disk is still the good one
+                    report.checkpoint_failures += 1
+                serial += 1
+        report.fraction_done = self.state.fraction_done
+        return self.result()
+
     # -- fault tolerance / elasticity ---------------------------------------
 
-    def checkpoint(self, path: str) -> None:
+    def _replan(self, n_workers: int) -> None:
+        """Elastic in-flight replan: keep the merged profile and the
+        done-bitmap, reassign only the remaining chunks across `n_workers`
+        (the same path `resume()` takes, minus the disk round-trip). Chunk
+        boundaries never change, so no committed work is lost."""
+        plan = partition.replan_remaining(self.plan, self.state.done,
+                                          n_workers)
+        widths = [max(0, k1 - k0) for k0, k1 in plan.chunks]
+        self.n_bands = max(1, -(-max(widths) // self.band)) if widths else 1
+        self._round_fn = self._make_round_fn()
+        self.plan = plan
+        self.state = SchedulerState(plan=plan, done=self.state.done,
+                                    profile=self.state.profile,
+                                    rounds_completed=0,
+                                    profile_b=self.state.profile_b)
+
+    def checkpoint(self, path: str, *, injector=None,
+                   serial: int = 0) -> bool:
+        """Atomically write the current (profile, done-bitmap) checkpoint.
+
+        Meta schema (format 2, JSON in the `meta` array):
+          format     int   — CHECKPOINT_FORMAT of the writer
+          l, l_b     int   — subsequence counts (l_b None for self-joins)
+          window     int
+          exclusion  int
+          band, k    int
+          chunks     list  — the plan's chunk boundaries (resume keeps them)
+          fused      bool  — done-chunks carry BOTH profile halves
+          checksums  dict  — array name -> crc32 of its raw bytes; verified
+                             on load, so silent disk corruption is detected
+                             instead of resumed from
+
+        The write is tmpfile + `os.replace` (crash mid-write leaves the old
+        file intact); before committing, any existing checkpoint at `path`
+        is rotated to `path + ".prev"` so `resume()` can fall back when the
+        latest file fails verification. `injector`/`serial` thread the chaos
+        harness's kill/bit-flip hooks through the exact commit points
+        (`core.faults.FaultInjector`); returns True if the injector
+        corrupted the committed file.
+        """
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = tempfile.NamedTemporaryFile(
             dir=os.path.dirname(path) or ".", delete=False, suffix=".tmp")
-        extra = {}
+        arrays = dict(corr=np.asarray(self.state.profile.corr),
+                      index=np.asarray(self.state.profile.index),
+                      done=self.state.done,
+                      rounds_completed=np.int64(
+                          self.state.rounds_completed))
         if self.ab:
-            extra = dict(corr_b=np.asarray(self.state.profile_b.corr),
-                         index_b=np.asarray(self.state.profile_b.index))
-        np.savez(tmp,
-                 corr=np.asarray(self.state.profile.corr),
-                 index=np.asarray(self.state.profile.index),
-                 done=self.state.done,
-                 rounds_completed=self.state.rounds_completed,
-                 meta=json.dumps(dict(l=self.l, l_b=self.l_b,
-                                      window=self.window,
-                                      exclusion=self.exclusion,
-                                      band=self.band, k=self.k,
-                                      chunks=list(self.plan.chunks),
-                                      # done-chunks carry BOTH profile
-                                      # halves; pre-fusion checkpoints
-                                      # (row half only, column half owed to
-                                      # a reversed finish pass) must not
-                                      # resume
-                                      fused=True)),
-                 **extra)
-        tmp.close()
+            arrays.update(corr_b=np.asarray(self.state.profile_b.corr),
+                          index_b=np.asarray(self.state.profile_b.index))
+        meta = dict(format=CHECKPOINT_FORMAT, l=self.l, l_b=self.l_b,
+                    window=self.window, exclusion=self.exclusion,
+                    band=self.band, k=self.k,
+                    chunks=list(self.plan.chunks),
+                    # done-chunks carry BOTH profile halves; pre-fusion
+                    # checkpoints (row half only, column half owed to a
+                    # reversed finish pass) must not resume
+                    fused=True,
+                    checksums={name: _crc32(a)
+                               for name, a in arrays.items()})
+        try:
+            np.savez(tmp, meta=json.dumps(meta), **arrays)
+            tmp.close()
+            if injector is not None:
+                injector.on_checkpoint_write(serial)
+        except BaseException:
+            tmp.close()
+            os.unlink(tmp.name)
+            raise
+        if os.path.exists(path):
+            os.replace(path, path + ".prev")
         os.replace(tmp.name, path)
+        if injector is not None:
+            return injector.after_checkpoint_write(serial, path)
+        return False
 
     def resume(self, path: str, *, n_workers: int | None = None) -> None:
         """Restart from checkpoint, replanning remaining chunks for the
         current (possibly different) worker count — elastic scaling. The
         checkpointed profile carries the fused two-sided state (both sides
-        for AB), so mid-plan restarts lose no column updates."""
-        z = np.load(path, allow_pickle=False)
-        meta = json.loads(str(z["meta"]))
-        assert meta["l"] == self.l and meta["window"] == self.window
-        assert meta.get("l_b") == self.l_b
+        for AB), so mid-plan restarts lose no column updates.
+
+        The file is verified on load (readable archive, meta record, crc32
+        checksums for format-2 files). A file that fails verification does
+        NOT abort the resume outright: if the writer rotated a previous
+        good checkpoint to `path + ".prev"`, that one is loaded instead
+        (with a warning); only when no fallback exists does the
+        `CheckpointCorruptionError` propagate. Mismatched geometry
+        (l/window/l_b) is a caller error and raises ValueError with the
+        offending values — no fallback, since every rotation of the same
+        run shares its geometry."""
+        try:
+            arrays, meta = _load_checkpoint_file(path)
+        except CheckpointCorruptionError as e:
+            prev = path + ".prev"
+            if not os.path.exists(prev):
+                raise
+            warnings.warn(
+                f"checkpoint {path!r} failed verification ({e}); falling "
+                f"back to previous checkpoint {prev!r} — at most one "
+                f"checkpoint interval of progress is lost", stacklevel=2)
+            arrays, meta = _load_checkpoint_file(prev)
+        z = arrays
+        if meta["l"] != self.l or meta["window"] != self.window:
+            raise ValueError(
+                f"checkpoint geometry mismatch: it was written for "
+                f"l={meta['l']}, window={meta['window']} but this scheduler "
+                f"has l={self.l}, window={self.window}")
+        if meta.get("l_b") != self.l_b:
+            raise ValueError(
+                f"checkpoint geometry mismatch: it was written for "
+                f"l_b={meta.get('l_b')} but this scheduler has "
+                f"l_b={self.l_b}")
         # refuse pre-fusion checkpoints: their done-chunks contributed only
         # the row half (the column half was owed to the deleted reversed
         # finish pass), so resuming them would silently drop lower-triangle
@@ -302,7 +563,8 @@ class AnytimeScheduler:
         merge their sides before the all-reduce to keep round traffic at
         one state per side."""
         kw = dict(kind="ab" if self.ab else "self", window=self.window,
-                  exclusion=self.exclusion, k=self.k, backend="distributed")
+                  exclusion=self.exclusion, k=self.k, backend="distributed",
+                  fraction_done=self.state.fraction_done)
         if self.k > 1:
             # convert the (l, k) state ONCE; slot 0 is then bitwise-
             # consistent with topk_p[..., 0] by construction

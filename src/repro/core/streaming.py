@@ -40,6 +40,8 @@ class StreamingProfile:
 
     def __init__(self, window: int, exclusion: int | None = None,
                  normalize: bool = True, max_points: int | None = None):
+        if int(window) < 2:
+            raise ValueError(f"window must be >= 2, got {window}")
         self.m = int(window)
         self.excl = max(1, self.m // 4) if exclusion is None else int(exclusion)
         self.normalize = normalize
@@ -92,6 +94,9 @@ class StreamingProfile:
         order-independently.
         """
         values = np.atleast_1d(np.asarray(values, np.float64))
+        if values.ndim != 1:
+            raise ValueError(f"append expects scalar or 1-D values, got "
+                             f"shape {values.shape}")
         if values.size == 0:
             return
         if self.max_points and len(self._ts) + values.size > self.max_points:
@@ -108,6 +113,14 @@ class StreamingProfile:
         jj = (l_old + np.arange(p))[:, None]
         admissible = np.arange(l_new)[None, :] <= jj - self.excl
         d2 = np.where(admissible, d2, np.inf)
+        # missing-data tolerance (same semantics as the zstats invn < 0
+        # sentinel): any window touching a NaN/Inf sample is masked — its
+        # own profile entry stays inf/-1 and it can never be selected as a
+        # neighbor. NaNs propagating through the distance block are
+        # overwritten here, so only masked pairs are affected.
+        ok = np.isfinite(w).all(axis=1)                   # (l_new,)
+        if not ok.all():
+            d2 = np.where(ok[l_old:, None] & ok[None, :], d2, np.inf)
         # grow state
         self._profile = np.concatenate([self._profile, np.full(p, np.inf)])
         self._index = np.concatenate([self._index, np.full(p, -1, np.int64)])

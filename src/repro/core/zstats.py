@@ -19,6 +19,22 @@ The centered-update identity used everywhere downstream:
     cov(i, j) = cov(i-1, j-1) + df[i]*dg[j] + df[j]*dg[i]
     corr(i,j) = cov(i, j) * invn[i] * invn[j]
     dist(i,j) = sqrt(2 m (1 - corr(i, j)))
+
+Degenerate-window conventions, carried entirely IN the invn stream so every
+backend (band engine, rowstream, Pallas kernel, distributed chunks) inherits
+them without schema changes:
+
+  * invn = 0  — flat window (zero variance): corr 0, dist sqrt(2m),
+    conventionally non-matching rather than NaN;
+  * invn = -1 — MISSING-DATA sentinel (`compute_stats_host` only): the
+    subsequence touches a NaN/Inf sample. Engines extend their validity
+    masks with `invn >= 0`, so every pair touching a masked subsequence is
+    excluded like an out-of-range cell — masked rows end at NEG/-1, i.e.
+    +inf distance and index -1, and masked columns can never be selected as
+    neighbors. The non-finite samples themselves are REPLACED by the finite
+    mean before the stream cumsums, which keeps df/dg/cov finite; a valid
+    window's statistics depend only on its own (finite) samples, so they are
+    bit-identical to the all-finite computation.
 """
 
 from __future__ import annotations
@@ -176,7 +192,10 @@ def sliding_dot(query: jax.Array, ts: jax.Array) -> jax.Array:
 
 
 def compute_stats(ts: jax.Array, window: int) -> ZStats:
-    """Build all NATSA input streams for `ts` (1-D) and window length."""
+    """Build all NATSA input streams for `ts` (1-D) and window length.
+
+    In-graph variant; assumes FINITE input (use `compute_stats_host` for
+    series with NaN/Inf gaps — it masks affected subsequences)."""
     ts = jnp.asarray(ts)
     if ts.ndim != 1:
         raise ValueError(f"time series must be 1-D, got shape {ts.shape}")
@@ -250,6 +269,13 @@ def compute_stats_host(ts, window: int, out_dtype=None,
     (l, m) centered-window matrix the pass built anyway — callers needing
     exact window dots (AB seed covariances) reuse it instead of
     re-materializing O(l*m) memory.
+
+    NaN/Inf samples are accepted: every subsequence touching one is masked
+    via the invn = -1 sentinel (see module docstring) — its profile entries
+    come back +inf / index -1 and it is never selected as a neighbor — while
+    all-finite subsequences keep bit-identical statistics (the non-finite
+    samples are filled with the finite mean before the cumsums, and a valid
+    window's stats depend only on its own samples).
     """
     import numpy as np
 
@@ -262,6 +288,17 @@ def compute_stats_host(ts, window: int, out_dtype=None,
     if n < min_n:
         raise ValueError(f"series too short: n={n} < {min_n} "
                          f"(window={m}, min_subsequences={min_subsequences})")
+    finite = np.isfinite(t)
+    masked = None
+    if not finite.all():
+        # fill gaps with the finite mean so every downstream cumsum/dot is
+        # finite; windows touching a gap are flagged and get the invn = -1
+        # sentinel below (their other stream values are don't-cares — every
+        # engine masks their cells before any harvest)
+        fill = t[finite].mean() if finite.any() else 0.0
+        t = np.where(finite, t, fill)
+        nbad = np.concatenate([[0], np.cumsum(~finite)])
+        masked = (nbad[m:] - nbad[:-m]) > 0            # (l,) touches a gap
     t = t - t.mean()                      # shift-invariant; improves f32 casts
     l = n - m + 1
     csum = np.concatenate([[0.0], np.cumsum(t)])
@@ -281,6 +318,8 @@ def compute_stats_host(ts, window: int, out_dtype=None,
     scale2 = norm * norm + m * mu * mu
     flat = norm * norm <= 1e-16 * np.maximum(scale2, 1e-300)
     invn = np.where(~flat & (norm > 0), 1.0 / np.maximum(norm, 1e-300), 0.0)
+    if masked is not None:
+        invn = np.where(masked, -1.0, invn)   # missing-data sentinel
     tail, head = t[m:], t[: l - 1]
     df = np.concatenate([[0.0], (tail[: l - 1] - head) / 2.0])
     dg = np.concatenate([[0.0], (tail[: l - 1] - mu[1:]) + (head - mu[:-1])])

@@ -107,8 +107,13 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
     dd = jax.lax.broadcasted_iota(jnp.int32, (dt, it), 0)          # diag offset
     jpos = i0 + ii + k0 + dd                                       # signed j
     ipos = i0 + ii
+    # invn < 0 is the missing-data sentinel (zstats.compute_stats_host):
+    # pairs touching a masked subsequence are excluded like out-of-range
+    # cells. The cumsum above is untouched — masked cells still carry the
+    # recurrence to later valid cells on the diagonal.
     valid = ((jpos >= 0) & (jpos < l_j) & (ipos < l_i)
-             & (k0 + dd < k_end))
+             & (k0 + dd < k_end)
+             & (invni[None, :] >= 0) & (invnj >= 0))
     corr = jnp.where(valid, corr, NEG)
 
     # plain max + equality-recovered arg: cheaper than a variadic argmax

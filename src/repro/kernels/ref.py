@@ -31,7 +31,10 @@ def rowmax_profile_ref(df, dg, invn, cov0, *, excl: int, l: int):
     delta = delta.at[:, 0].set(0.0)
     cov = cov0[:, None] + jnp.cumsum(delta, axis=1)
     corr = cov * invn[None, :l] * invnj
-    corr = jnp.where(j < l, corr, NEG)
+    # mirror the kernel's masking: geometry plus the invn < 0 missing-data
+    # sentinel on either end of the pair
+    corr = jnp.where((j < l) & (invn[None, :l] >= 0) & (invnj >= 0),
+                     corr, NEG)
     best = jnp.argmax(corr, axis=0)
     corr_best = jnp.take_along_axis(corr, best[None, :], axis=0)[0]
     idx = (i + excl + best).astype(jnp.int32)

@@ -101,5 +101,5 @@ def test_ab_checkpoint_refuses_mismatched_geometry(mesh, tmp_path):
     sch.step_round()
     sch.checkpoint(path)
     other = AnytimeScheduler(a, 16, mesh, chunks_per_worker=2)  # self-join
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="geometry mismatch"):
         other.resume(path)

@@ -64,6 +64,7 @@ PROFILE_RESULT_PARAMS = [
     "normalize",
     "k",
     "backend",
+    "fraction_done",
     "lazy",
 ]
 

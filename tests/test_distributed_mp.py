@@ -51,6 +51,28 @@ p3 = sch3.distance_profile().p
 out["err_resume"] = float(np.abs(np.asarray(p3) - np.asarray(p_ref)).max())
 out["frac_after_fail"] = sch2.state.fraction_done
 
+# multi-round failures + a resume CHAIN (shrink then grow back), finishing
+# BITWISE equal to the clean run: chunk contributions are plan-invariant
+# and the f32 max-merge commutes in value
+r_clean = sch.distance_profile()
+p_clean, i_clean = np.asarray(r_clean.p), np.asarray(r_clean.i)
+s4 = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
+s4.step_round(fail_workers={1, 5})
+s4.step_round(fail_workers={1})            # same worker fails again
+s4.step_round(fail_workers={0, 2, 7})
+s4.checkpoint("/tmp/mp_test_chain1.npz")
+s5 = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
+s5.resume("/tmp/mp_test_chain1.npz", n_workers=3)   # shrink to 3
+s5.step_round(); s5.step_round(fail_workers={2})
+s5.checkpoint("/tmp/mp_test_chain2.npz")
+s6 = AnytimeScheduler(ts, m, mesh, chunks_per_worker=4, band=16)
+s6.resume("/tmp/mp_test_chain2.npz", n_workers=8)   # grow back to 8
+s6.run()                                            # resume-after-resume
+r6 = s6.distance_profile()
+out["chain_bitwise_p"] = bool(np.array_equal(np.asarray(r6.p), p_clean))
+out["chain_bitwise_i"] = bool(np.array_equal(np.asarray(r6.i), i_clean))
+out["chain_frac_mid"] = s5.state.fraction_done
+
 # AB join across the same 8-worker mesh (signed rectangular plan)
 from repro.core.ref import ab_join_bruteforce
 ts_b = np.cumsum(rng.normal(size=250)).astype(np.float32)
@@ -113,6 +135,15 @@ def test_anytime_monotone_across_workers(results):
 def test_failure_and_elastic_resume_exact(results):
     assert results["err_resume"] < 2e-3
     assert 0.0 < results["frac_after_fail"] < 1.0
+
+
+def test_multi_round_failures_and_resume_chain_bitwise(results):
+    """Consecutive-round worker failures, shrink-to-3 resume, then a
+    grow-to-8 resume-after-resume must finish BITWISE equal to the clean
+    run — not merely close."""
+    assert results["chain_bitwise_p"]
+    assert results["chain_bitwise_i"]
+    assert 0.0 < results["chain_frac_mid"] < 1.0
 
 
 def test_ab_join_multiworker_exact_and_monotone(results):
