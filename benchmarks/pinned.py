@@ -69,6 +69,42 @@ print(json.dumps({"us": best * 1e6}))
 """
 
 
+# Fleet workload: one single-round ingest across N tenants (the PR-8
+# streaming-fleet dispatch). Prints None when the baseline revision has no
+# `repro.core.fleet` yet — the harness then reports a candidate-only
+# number instead of a ratio, so the informational leg keeps working when
+# pinned against pre-fleet history.
+_FLEET_WORKER = r"""
+import json, sys, time
+sys.path.insert(0, sys.argv[1])
+try:
+    from repro.core.fleet import StreamingFleet
+except Exception:
+    print(json.dumps({"us": None}))
+    raise SystemExit(0)
+import numpy as np
+import jax
+
+n, inner = int(sys.argv[2]), int(sys.argv[3])
+m, cap = 8, 64
+rng = np.random.default_rng(7)
+fleet = StreamingFleet(n, window=m, capacity=cap, exclusion=2)
+tids = np.arange(n)
+pre = rng.standard_normal((cap // 2, n))
+fleet.ingest(np.tile(tids, cap // 2), pre.reshape(-1))
+fleet.ingest(tids, rng.standard_normal(n))       # warmup single-round trace
+jax.block_until_ready(fleet._state)
+best = float("inf")
+for _ in range(inner):
+    v = rng.standard_normal(n)
+    t0 = time.perf_counter()
+    fleet.ingest(tids, v)
+    jax.block_until_ready(fleet._state)
+    best = min(best, time.perf_counter() - t0)
+print(json.dumps({"us": best * 1e6}))
+"""
+
+
 def _one_rep(src: str, n: int, m: int, inner: int, timeout: float) -> float:
     out = subprocess.run(
         [sys.executable, "-c", _WORKER, src, str(n), str(m), str(inner)],
@@ -124,6 +160,51 @@ def run_pinned(baseline_src: str, candidate_src: str, *, n: int = 4096,
     }
 
 
+def _one_fleet_rep(src: str, n: int, inner: int,
+                   timeout: float) -> float | None:
+    out = subprocess.run(
+        [sys.executable, "-c", _FLEET_WORKER, src, str(n), str(inner)],
+        capture_output=True, text=True, timeout=timeout, cwd=_REPO)
+    if out.returncode != 0:
+        raise RuntimeError(f"pinned fleet worker failed for src={src!r}:\n"
+                           f"{out.stderr[-2000:]}")
+    got = json.loads(out.stdout.strip().splitlines()[-1])["us"]
+    return None if got is None else float(got)
+
+
+def run_fleet_pinned(baseline_src: str, candidate_src: str, *,
+                     n: int = 2000, reps: int = 3, inner: int = 3,
+                     timeout: float = 600.0) -> dict:
+    """Pinned comparison of the fleet single-round ingest.
+
+    Same interleaved/alternating discipline as `run_pinned`. If the
+    baseline checkout predates `repro.core.fleet` the workload degrades to
+    a candidate-only measurement (`baseline_missing=True`, no ratio) —
+    new-subsystem benches must not break the pinned leg on old refs."""
+    if _one_fleet_rep(baseline_src, n, 1, timeout) is None:
+        cand = [_one_fleet_rep(candidate_src, n, inner, timeout)
+                for _ in range(reps)]
+        return {"workload": f"fleet_ingest_round_n{n}",
+                "n": n, "reps": reps, "inner": inner,
+                "baseline_missing": True, "baseline_us": None,
+                "candidate_us": cand, "ratio_min": None,
+                "ratio_mean": None, "ratio_ci95": None}
+    base, cand = [], []
+    for r in range(reps):
+        order = ((baseline_src, base), (candidate_src, cand))
+        for src, sink in (order if r % 2 == 0 else order[::-1]):
+            sink.append(_one_fleet_rep(src, n, inner, timeout))
+    ratios = [c / b for b, c in zip(base, cand)]
+    lo, hi = bootstrap_ci(ratios)
+    return {"workload": f"fleet_ingest_round_n{n}",
+            "n": n, "reps": reps, "inner": inner,
+            "baseline_missing": False,
+            "baseline_us": base, "candidate_us": cand,
+            "ratio_min": min(cand) / min(base),
+            "ratio_mean": float(np.mean(ratios)),
+            "ratio_ci95": [lo, hi]}
+
+
 def checkout_baseline(ref: str, tmpdir: str) -> str:
     """Materialize `ref` as a detached git worktree; returns its src/."""
     dest = os.path.join(tmpdir, "baseline")
@@ -162,6 +243,9 @@ def main(argv=None) -> None:
                 base_src = checkout_baseline(args.baseline_ref, tmp)
                 result = run_pinned(base_src, cand_src, n=args.n, m=args.m,
                                     reps=args.reps, inner=args.inner)
+                result["fleet"] = run_fleet_pinned(base_src, cand_src,
+                                                   reps=args.reps,
+                                                   inner=args.inner)
             finally:
                 remove_baseline(tmp)
         result["baseline"] = args.baseline_ref
@@ -169,6 +253,8 @@ def main(argv=None) -> None:
         base_src = os.path.join(args.baseline_path, "src")
         result = run_pinned(base_src, cand_src, n=args.n, m=args.m,
                             reps=args.reps, inner=args.inner)
+        result["fleet"] = run_fleet_pinned(base_src, cand_src,
+                                           reps=args.reps, inner=args.inner)
         result["baseline"] = args.baseline_path
     result["wall_s"] = time.perf_counter() - t0
 

@@ -427,6 +427,67 @@ def bench_ckpt_overhead():
          "supervised_ckpt_vs_plain(gate<=1.3; value is the ratio, not us)")
 
 
+def bench_fleet():
+    """Streaming fleet ingest throughput at N=10k tenants vs the per-series
+    `StreamingProfile` loop it replaces.
+
+    One fleet round = one arrival for EVERY tenant = ONE jitted dispatch
+    (the whole point of the stacked device state); the loop baseline pays
+    a full host append per series, so it is timed on 128 series and
+    extrapolated linearly (it is embarrassingly linear in N — there is no
+    cross-series work to amortize). Gated in CI: fleet arrivals/sec must
+    be >= 10x the loop. Throughput/latency rows carry arrivals-per-second
+    and us respectively; see each row's derived note."""
+    from repro.core.fleet import StreamingFleet
+    from repro.core.streaming import StreamingProfile
+    import statistics
+
+    n, m, cap, excl = 10_000, 8, 96, 2
+    rng = np.random.default_rng(61)
+    fleet = StreamingFleet(n, window=m, capacity=cap, exclusion=excl)
+    tids = np.arange(n)
+    # prefill half the capacity in ONE grouped ingest (tile order puts the
+    # r-th repeat of tenant t in round r, matching pre.reshape(-1))
+    pre = rng.standard_normal((cap // 2, n))
+    fleet.ingest(np.tile(tids, cap // 2), pre.reshape(-1))
+    fleet.ingest(tids, rng.standard_normal(n))   # warmup single-round trace
+    jax.block_until_ready(fleet._state)
+    lat = []
+    for _ in range(16):
+        v = rng.standard_normal(n)
+        t0 = time.perf_counter()
+        fleet.ingest(tids, v)
+        jax.block_until_ready(fleet._state)
+        lat.append(time.perf_counter() - t0)
+    p50_us = statistics.median(lat) * 1e6
+    fleet_aps = n / min(lat)
+    # per-series loop baseline: same window/exclusion, same fill level,
+    # one append per series per round, extrapolated from 128 series
+    n_loop = 128
+    sps = [StreamingProfile(m, excl) for _ in range(n_loop)]
+    seed_rows = rng.standard_normal((n_loop, cap // 2))
+    for sp, row in zip(sps, seed_rows):
+        sp.append(row)
+    for sp in sps:                                # warmup the append path
+        sp.append(rng.standard_normal(1))
+    best = float("inf")
+    for _ in range(3):
+        vals = rng.standard_normal(n_loop)
+        t0 = time.perf_counter()
+        for sp, v in zip(sps, vals):
+            sp.append([v])
+        best = min(best, time.perf_counter() - t0)
+    loop_aps = n_loop / best
+    emit("fleet_ingest_latency_p50", p50_us,
+         f"one round = N={n} arrivals in one dispatch (median of 16)")
+    emit("fleet_arrivals_per_sec_n10k", fleet_aps,
+         f"vs_loop={fleet_aps/loop_aps:.1f}x(gate>=10x; "
+         f"value is arrivals/sec, not us)")
+    emit("fleet_loop_arrivals_per_sec", loop_aps,
+         f"per-series StreamingProfile x{n_loop} extrapolated "
+         f"(value is arrivals/sec, not us)")
+
+
 def bench_partition():
     l, excl = 500_000, 64
     for parts in (16, 256):
@@ -513,6 +574,7 @@ BENCHES = {
     "topk": bench_topk,
     "ckpt": bench_ckpt_overhead,
     "batch": bench_batch,
+    "fleet": bench_fleet,
     "partition": bench_partition,
     "bytes": bench_bytes_proxy,
     "anytime": bench_anytime,
@@ -537,10 +599,10 @@ def main(argv: list[str] | None = None) -> None:
     with open(os.path.join(art, "bench_results.csv"), "w") as f:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
     # machine-readable mirror for CI perf gates and cross-PR comparisons —
-    # keyed identically to PR6's table (plus the checkpoint-overhead rows)
-    # so trajectory tooling diffs in place
+    # keyed identically to PR7's table (plus the fleet rows) so trajectory
+    # tooling diffs in place
     table = {r.split(",")[0]: float(r.split(",")[1]) for r in ROWS}
-    with open(os.path.join(art, "BENCH_PR7.json"), "w") as f:
+    with open(os.path.join(art, "BENCH_PR8.json"), "w") as f:
         json.dump(table, f, indent=1, sort_keys=True)
 
 

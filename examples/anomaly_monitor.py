@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import analytics
-from repro.core.matrix_profile import matrix_profile_nonnorm
+from repro.core.matrix_profile import matrix_profile
 from repro.core.monitor import TelemetryMonitor
 
 
@@ -36,7 +36,7 @@ def main():
     window = 24
     # telemetry anomalies are amplitude/level changes -> NON-normalized
     # profile (z-norm factors exactly those out)
-    result = matrix_profile_nonnorm(loss.astype(np.float32), window)
+    result = matrix_profile(loss.astype(np.float32), window, normalize=False)
     hits = analytics.discords(result, n=3)
     print(f"scanned {steps} steps of loss telemetry "
           f"(analytics.discords over a {result.kind}-join ProfileResult)")

@@ -62,8 +62,18 @@ def _crc32(a: np.ndarray) -> int:
 
 
 def save(directory: str, step: int, tree, *, keep: int = 3,
-         metadata: dict | None = None) -> str:
-    """Atomically write checkpoint `step`; prune to the newest `keep`."""
+         metadata: dict | None = None, injector=None) -> str:
+    """Atomically write checkpoint `step`; prune to the newest `keep`.
+
+    `injector` threads a chaos-test `faults.FaultInjector` through the
+    writer: `on_checkpoint_write(step)` fires BEFORE anything touches disk
+    (a kill there loses only this save — prior steps stay intact), and
+    `after_checkpoint_write(step, <arrays.npz>)` fires after the atomic
+    commit so scheduled bit-flips corrupt a COMMITTED file, exercising the
+    crc32-verify + fall-back path in `restore`.
+    """
+    if injector is not None:
+        injector.on_checkpoint_write(step)
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
@@ -82,6 +92,9 @@ def save(directory: str, step: int, tree, *, keep: int = 3,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    if injector is not None:
+        injector.after_checkpoint_write(step, os.path.join(final,
+                                                           "arrays.npz"))
     with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
         f.write(str(step))
     os.replace(os.path.join(directory, "LATEST.tmp"),

@@ -2,6 +2,7 @@
 partitioning, scheduling."""
 
 from repro.core import analytics  # noqa: F401
+from repro.core.fleet import StreamingFleet  # noqa: F401
 from repro.core.matrix_profile import (  # noqa: F401
     ProfileState, TopKState, ab_join, batch_ab_join, batch_profile,
     matrix_profile, matrix_profile_nonnorm, top_discords, top_motif,
@@ -22,6 +23,7 @@ __all__ = [
     "HarvestSpec",
     "ProfileResult",
     "ProfileState",
+    "StreamingFleet",
     "SweepPlan",
     "SweepResult",
     "TopKState",
@@ -35,7 +37,9 @@ __all__ = [
     "corr_to_dist",
     "execute",
     "matrix_profile",
-    "matrix_profile_nonnorm",
+    # matrix_profile_nonnorm stays importable as a deprecated shim but is
+    # no longer public surface — collapsed into matrix_profile(...,
+    # normalize=False)
     "plan_sweep",
     "round_executor",
     "self_cross",

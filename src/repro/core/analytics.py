@@ -141,6 +141,15 @@ def discords(result: ProfileResult, n: int = 3,
     return out
 
 
+def top_discord(result: ProfileResult,
+                exclusion: int | None = None) -> Discord | None:
+    """The single most isolated subsequence, or None when no position has
+    an admissible neighbor — the `ProfileResult` replacement for the
+    deprecated `StreamingProfile.top_discord()` raw accessor."""
+    got = discords(result, n=1, exclusion=exclusion)
+    return got[0] if got else None
+
+
 def corrected_arc_curve(result: ProfileResult) -> np.ndarray:
     """FLUSS corrected arc curve from the result's 1-NN pointers.
 

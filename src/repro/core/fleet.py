@@ -1,0 +1,387 @@
+"""StreamingFleet — device-resident incremental matrix profiles for N
+concurrent series (ROADMAP item 3: near-data analysis of a FLEET, not one
+series).
+
+`StreamingProfile` maintains one host-side series with an O(n·m) numpy
+append; a million-tenant deployment degenerates into a Python loop around
+it. The STAMPI-style update is embarrassingly parallel across tenants, so
+the fleet keeps ALL per-tenant state stacked on device — ring-buffered
+sample windows, cached centered windows / running norms (the z-stats), and
+merged+left+right profiles as `(N, cap)`-shaped arrays — and applies one
+arrival per tenant as a jitted, vmapped O(cap·m) sweep. `ingest(tenant_ids,
+values)` groups an arbitrary batch of (tenant, value) arrivals into rounds
+of at-most-one-arrival-per-tenant and runs the rounds through a single
+`lax.scan`, so a mixed burst across the fleet is ONE device dispatch.
+
+Exactness contract: a fleet tenant is BITWISE-equal to a per-series
+`StreamingProfile` replay of the same arrivals. That holds because both
+surfaces run the identical f64 block arithmetic — the shared kernels in
+`zstats` (`centered_block`, `sqdist_*_from_parts`), built exclusively from
+shape-independent elementwise ops + last-axis sums — and identical
+bookkeeping (first-min argmin, strict-< right-side updates, and the same
+finite-window mask as the `invn = -1` missing-data sentinel: a NaN arrival
+poisons exactly the windows that touch it, per tenant).
+
+Capacity/eviction semantics (epoch restart): each tenant owns a fixed
+`capacity`-sample buffer. When the buffer is full, the next arrival
+RESTARTS the tenant's epoch carrying the trailing `m-1` samples (so
+subsequence coverage has no gap across the boundary), resets its profile
+state, and restarts subsequence indexing at 0; `epochs[tenant]` counts
+restarts. This keeps the per-arrival update O(1) in total history — an
+exact sliding-window profile cannot evict in O(1) — and stays oracle-able:
+the replay oracle is a fresh `StreamingProfile` fed the `m-1` carryover
+then the subsequent arrivals.
+
+Checkpointing rides `checkpoint.ckpt` format-2 (npz + crc32 manifest,
+atomic commit): `save()` snapshots the stacked state, `restore()` rebuilds
+a fleet from the newest intact step (falling back past corrupted ones),
+and `rescale()` grows (fresh tenants) or shrinks (drops the tail) N —
+elastic resize without touching surviving tenants' state.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+__all__ = ["StreamingFleet"]
+
+# stacked per-tenant state, in carry order. Leading axis is always N.
+#   buf   (N, cap)      ring/epoch sample buffer (f64)
+#   cnt   (N,)          valid samples in the current epoch (i32)
+#   wk    (N, lcap, m)  cached windows: centered if normalize else raw (f64)
+#   aux   (N, lcap)     running z-stats: centered norms / sum-of-squares (f64)
+#   ok    (N, lcap)     finite-window mask (the invn=-1 sentinel) (bool)
+#   prof  (N, lcap)     merged profile, SQUARED distance (f64; inf = unset)
+#   pidx  (N, lcap)     merged neighbor index, epoch-local (i32; -1 = unset)
+#   lprof/lidx          left split (set once per subsequence, final)
+#   rprof/ridx          right split (strict-< column updates)
+#   total (N,)          lifetime arrivals per tenant (i64)
+#   epoch (N,)          completed epoch restarts per tenant (i32)
+_FIELDS = ("buf", "cnt", "wk", "aux", "ok", "prof", "pidx",
+           "lprof", "lidx", "rprof", "ridx", "total", "epoch")
+_DTYPES = dict(buf=np.float64, cnt=np.int32, wk=np.float64, aux=np.float64,
+               ok=np.bool_, prof=np.float64, pidx=np.int32,
+               lprof=np.float64, lidx=np.int32, rprof=np.float64,
+               ridx=np.int32, total=np.int64, epoch=np.int32)
+
+
+@lru_cache(maxsize=32)
+def _build_update(window: int, exclusion: int, capacity: int,
+                  normalize: bool):
+    """Jitted multi-round fleet update for one (m, excl, cap, normalize)
+    config — cached at module level so many fleets (tests!) share traces.
+    Returns run(state_tuple, vmat (R, N) f64, amat (R, N) bool) -> state.
+    Call ONLY under `zstats.x64_scope()` (state is f64 end to end)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core import zstats
+
+    m, excl, cap = window, exclusion, capacity
+    lcap = cap - m + 1
+
+    def step(state, v, act):
+        """One round across ALL tenants — written in explicitly batched
+        form (every op carries the leading N axis; no `vmap`, whose
+        batching would re-lower the pinned kernel arithmetic). Mirrors
+        StreamingProfile.append for a single-point batch, on the shared
+        zstats block kernels. `v`/`act` are (N,)."""
+        (buf, cnt, wk, aux, ok, prof, pidx,
+         lprof, lidx, rprof, ridx, total, epoch) = state
+        n = buf.shape[0]
+        rows = jnp.arange(n)
+        # -- epoch restart on arrival into a full buffer ------------------
+        full = act & (cnt == cap)                             # (N,)
+        buf = jnp.where(full[:, None],
+                        jnp.roll(buf, -(cap - m + 1), axis=1), buf)
+        cnt = jnp.where(full, m - 1, cnt)
+        epoch = epoch + full.astype(epoch.dtype)
+        fullc = full[:, None]
+        prof = jnp.where(fullc, jnp.inf, prof)
+        pidx = jnp.where(fullc, -1, pidx)
+        lprof = jnp.where(fullc, jnp.inf, lprof)
+        lidx = jnp.where(fullc, -1, lidx)
+        rprof = jnp.where(fullc, jnp.inf, rprof)
+        ridx = jnp.where(fullc, -1, ridx)
+        # stale wk/aux/ok slots are NOT cleared: slots refill sequentially
+        # from 0 and the admissibility mask (col <= j - excl) already
+        # excludes every not-yet-rewritten slot, so clearing would only
+        # add O(N·lcap·m) memory traffic per restart.
+        # -- write the arrival -------------------------------------------
+        wpos = jnp.clip(cnt, 0, cap - 1)                      # (N,)
+        buf = jnp.where(act[:, None], buf.at[rows, wpos].set(v), buf)
+        cnt = cnt + act.astype(cnt.dtype)
+        total = total + act.astype(total.dtype)
+        # -- new complete window? ----------------------------------------
+        j = cnt - m                   # (N,) epoch-local subsequence index
+        gate = act & (j >= 0)
+        sj = jnp.clip(j, 0, lcap - 1)
+        start = jnp.clip(j, 0, cap - m)
+        w = buf[rows[:, None], start[:, None] + jnp.arange(m)[None, :]]
+        okj = zstats.window_finite_mask(w[:, None])[:, 0]     # (N,)
+        if normalize:
+            wkj, auxj = zstats.centered_block(w[:, None])  # (N,1,m),(N,1)
+            d2 = zstats.sqdist_znorm_from_parts(
+                wkj, auxj, wk, aux, window=m)[:, 0]           # (N, lcap)
+        else:
+            wkj = w[:, None]
+            auxj = zstats.window_sumsq(wkj)
+            d2 = zstats.sqdist_nonnorm_from_parts(wkj, auxj,
+                                                  wk, aux)[:, 0]
+        wk_n = wk.at[rows, sj].set(wkj[:, 0])
+        aux_n = aux.at[rows, sj].set(auxj[:, 0])
+        ok_n = ok.at[rows, sj].set(okj)
+        # admissible: col <= j - excl (also excludes stale post-restart
+        # slots, whose indices exceed j); masked windows never pair.
+        adm = jnp.arange(lcap)[None, :] <= (j - excl)[:, None]
+        d2m = jnp.where(adm & okj[:, None] & ok, d2, jnp.inf)
+        # row min -> new subsequence's merged AND left entry (final)
+        rb = jnp.argmin(d2m, axis=1)                          # first min
+        rv = d2m[rows, rb]
+        has = jnp.isfinite(rv)
+        set_p = jnp.where(has, rv, jnp.inf)
+        set_i = jnp.where(has, rb.astype(pidx.dtype), -1)
+        prof_n = prof.at[rows, sj].set(set_p)
+        pidx_n = pidx.at[rows, sj].set(set_i)
+        lprof_n = lprof.at[rows, sj].set(set_p)
+        lidx_n = lidx.at[rows, sj].set(set_i)
+        # column mins -> existing entries improve (right-side, strict <)
+        jc = j[:, None].astype(pidx.dtype)
+        upd = d2m < prof_n
+        prof_n = jnp.where(upd, d2m, prof_n)
+        pidx_n = jnp.where(upd, jc, pidx_n)
+        rupd = d2m < rprof
+        rprof_n = jnp.where(rupd, d2m, rprof)
+        ridx_n = jnp.where(rupd, jc, ridx)
+        # -- commit only when a window actually completed -----------------
+        g1, g2 = gate[:, None], gate[:, None, None]
+        wk = jnp.where(g2, wk_n, wk)
+        aux = jnp.where(g1, aux_n, aux)
+        ok = jnp.where(g1, ok_n, ok)
+        prof = jnp.where(g1, prof_n, prof)
+        pidx = jnp.where(g1, pidx_n, pidx)
+        lprof = jnp.where(g1, lprof_n, lprof)
+        lidx = jnp.where(g1, lidx_n, lidx)
+        rprof = jnp.where(g1, rprof_n, rprof)
+        ridx = jnp.where(g1, ridx_n, ridx)
+        return (buf, cnt, wk, aux, ok, prof, pidx,
+                lprof, lidx, rprof, ridx, total, epoch)
+
+    def run(state, vmat, amat):
+        def body(carry, xs):
+            return step(carry, xs[0], xs[1]), None
+        state, _ = lax.scan(body, state, (vmat, amat))
+        return state
+
+    return jax.jit(run)
+
+
+class StreamingFleet:
+    """Vmapped multi-tenant incremental exact matrix profiles (see module
+    docstring for the state layout, exactness contract, and eviction
+    semantics)."""
+
+    def __init__(self, n: int, window: int, capacity: int,
+                 exclusion: int | None = None, normalize: bool = True):
+        if int(window) < 2:
+            raise ValueError(f"window must be >= 2, got {window}")
+        if int(capacity) < int(window):
+            raise ValueError(f"capacity must be >= window, got "
+                             f"{capacity} < {window}")
+        if int(n) < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        self.n = int(n)
+        self.m = int(window)
+        self.capacity = int(capacity)
+        self.excl = max(1, self.m // 4) if exclusion is None else int(exclusion)
+        self.normalize = bool(normalize)
+        self.lcap = self.capacity - self.m + 1
+        self._ingests = 0
+        self._state = self._init_state(self.n)
+
+    # -- state plumbing ------------------------------------------------------
+
+    def _shapes(self, n: int) -> dict:
+        cap, lcap, m = self.capacity, self.lcap, self.m
+        return dict(buf=(n, cap), cnt=(n,), wk=(n, lcap, m), aux=(n, lcap),
+                    ok=(n, lcap), prof=(n, lcap), pidx=(n, lcap),
+                    lprof=(n, lcap), lidx=(n, lcap), rprof=(n, lcap),
+                    ridx=(n, lcap), total=(n,), epoch=(n,))
+
+    def _init_state(self, n: int) -> tuple:
+        shapes = self._shapes(n)
+        init = {}
+        for f in _FIELDS:
+            dt = _DTYPES[f]
+            if f in ("prof", "lprof", "rprof"):
+                init[f] = np.full(shapes[f], np.inf, dt)
+            elif f in ("pidx", "lidx", "ridx"):
+                init[f] = np.full(shapes[f], -1, dt)
+            else:
+                init[f] = np.zeros(shapes[f], dt)
+        return self._to_device(init)
+
+    def _to_device(self, host: dict) -> tuple:
+        import jax.numpy as jnp
+
+        from repro.core import zstats
+
+        with zstats.x64_scope():
+            return tuple(jnp.asarray(np.asarray(host[f], _DTYPES[f]))
+                         for f in _FIELDS)
+
+    def _to_host(self) -> dict:
+        return {f: np.asarray(a) for f, a in zip(_FIELDS, self._state)}
+
+    # -- ingestion -----------------------------------------------------------
+
+    def ingest(self, tenant_ids, values) -> int:
+        """Apply a batch of (tenant, value) arrivals as ONE device sweep.
+
+        Arrivals are grouped into rounds of at most one arrival per tenant
+        (stable order: the k-th arrival for a tenant lands in round k, so
+        per-tenant arrival order is preserved) and the rounds run through a
+        single jitted `lax.scan`. NaN values are legal — they mask every
+        window touching them for that tenant, exactly like a NaN appended
+        to `StreamingProfile`. Returns the number of arrivals applied."""
+        from repro.core import zstats
+
+        tid = np.atleast_1d(np.asarray(tenant_ids, np.int64))
+        val = np.atleast_1d(np.asarray(values, np.float64))
+        if tid.ndim != 1 or val.ndim != 1:
+            raise ValueError("tenant_ids and values must be scalars or 1-D")
+        if tid.size == 1 and val.size > 1:
+            tid = np.full(val.shape, tid[0])
+        if tid.shape != val.shape:
+            raise ValueError(f"tenant_ids/values length mismatch: "
+                             f"{tid.shape} vs {val.shape}")
+        if tid.size == 0:
+            return 0
+        if tid.min() < 0 or tid.max() >= self.n:
+            raise ValueError(f"tenant ids must be in [0, {self.n})")
+        order = np.argsort(tid, kind="stable")
+        st, sv = tid[order], val[order]
+        # round of each arrival = its occurrence number within its tenant
+        idx = np.arange(st.size)
+        first = np.r_[True, st[1:] != st[:-1]]
+        rounds = idx - np.maximum.accumulate(np.where(first, idx, 0))
+        nr = int(rounds.max()) + 1
+        # pad R to the next power of two: bounds jit retraces to O(log R)
+        # distinct shapes over the fleet's lifetime
+        rpad = 1 << (nr - 1).bit_length()
+        vmat = np.zeros((rpad, self.n), np.float64)
+        amat = np.zeros((rpad, self.n), np.bool_)
+        vmat[rounds, st] = sv
+        amat[rounds, st] = True
+        run = _build_update(self.m, self.excl, self.capacity, self.normalize)
+        import jax.numpy as jnp
+        with zstats.x64_scope():
+            self._state = run(self._state, jnp.asarray(vmat),
+                              jnp.asarray(amat))
+        self._ingests += 1
+        return int(val.size)
+
+    # -- results -------------------------------------------------------------
+
+    def snapshot(self, tenant: int | None = None):
+        """Per-tenant profile-so-far as v2 `ProfileResult`s (merged + the
+        left/right split, epoch-local indices). `tenant=None` returns a
+        list over the whole fleet; otherwise one result. Distances are
+        sqrt'd on the way out; masked/unset entries stay inf/-1."""
+        host = self._to_host()
+        if tenant is not None:
+            return self._one_result(host, int(tenant))
+        return [self._one_result(host, t) for t in range(self.n)]
+
+    def _one_result(self, host: dict, t: int):
+        from repro.core.result import ProfileResult
+
+        if not 0 <= t < self.n:
+            raise ValueError(f"tenant must be in [0, {self.n}), got {t}")
+        l = max(0, int(host["cnt"][t]) - self.m + 1)
+
+        def _d(name):
+            return np.sqrt(np.maximum(host[name][t, :l], 0.0))
+
+        def _i(name):
+            return host[name][t, :l].astype(np.int64)
+
+        return ProfileResult(
+            p=_d("prof"), i=_i("pidx"),
+            left_p=_d("lprof"), left_i=_i("lidx"),
+            right_p=_d("rprof"), right_i=_i("ridx"),
+            kind="self", window=self.m, exclusion=self.excl,
+            normalize=self.normalize, backend="fleet")
+
+    @property
+    def counts(self) -> np.ndarray:
+        """Samples in each tenant's current epoch (i32, shape (N,))."""
+        return np.asarray(self._state[_FIELDS.index("cnt")]).copy()
+
+    @property
+    def totals(self) -> np.ndarray:
+        """Lifetime arrivals per tenant (i64, shape (N,))."""
+        return np.asarray(self._state[_FIELDS.index("total")]).copy()
+
+    @property
+    def epochs(self) -> np.ndarray:
+        """Completed capacity restarts per tenant (i32, shape (N,))."""
+        return np.asarray(self._state[_FIELDS.index("epoch")]).copy()
+
+    # -- checkpoint / elastic rescale ---------------------------------------
+
+    def save(self, directory: str, *, keep: int = 3, injector=None) -> str:
+        """Checkpoint the whole fleet via `checkpoint.ckpt` format-2
+        (crc32 manifest, atomic commit). `injector` threads a chaos-test
+        `FaultInjector` through the writer. Returns the step directory."""
+        from repro.checkpoint import ckpt
+
+        meta = dict(n=self.n, window=self.m, capacity=self.capacity,
+                    exclusion=self.excl, normalize=self.normalize,
+                    ingests=self._ingests)
+        return ckpt.save(directory, step=self._ingests, tree=self._to_host(),
+                         keep=keep, metadata=meta, injector=injector)
+
+    @classmethod
+    def restore(cls, directory: str, *, step: int | None = None):
+        """Rebuild a fleet from the newest intact checkpoint (or a pinned
+        `step`), falling back past corrupted steps like every other
+        `ckpt.restore` caller. Returns (fleet, step)."""
+        from repro.checkpoint import ckpt
+
+        tree_like = {f: np.zeros((), _DTYPES[f]) for f in _FIELDS}
+        tree, got, meta = ckpt.restore(directory, tree_like, step=step)
+        fleet = cls(n=int(meta["n"]), window=int(meta["window"]),
+                    capacity=int(meta["capacity"]),
+                    exclusion=int(meta["exclusion"]),
+                    normalize=bool(meta["normalize"]))
+        fleet._ingests = int(meta["ingests"])
+        fleet._state = fleet._to_device({f: np.asarray(tree[f])
+                                         for f in _FIELDS})
+        return fleet, got
+
+    def rescale(self, n_new: int) -> "StreamingFleet":
+        """Elastically resize the fleet in place: grow appends fresh
+        tenants (empty state), shrink drops the highest-numbered tenants.
+        Surviving tenants' state is untouched (bitwise). Returns self."""
+        n_new = int(n_new)
+        if n_new < 1:
+            raise ValueError(f"n must be >= 1, got {n_new}")
+        if n_new == self.n:
+            return self
+        host = self._to_host()
+        if n_new < self.n:
+            out = {f: host[f][:n_new] for f in _FIELDS}
+        else:
+            extra = self.n
+            self.n = n_new          # _init_state/_shapes see the new size
+            fresh = {f: np.asarray(a) for f, a in
+                     zip(_FIELDS, self._init_state(n_new))}
+            out = {f: np.concatenate([host[f], fresh[f][extra:]], axis=0)
+                   for f in _FIELDS}
+        self.n = n_new
+        self._state = self._to_device(out)
+        return self

@@ -547,7 +547,8 @@ def profile_topk_from_stats(stats: ZStats, exclusion: int,
 def matrix_profile(ts, window: int, exclusion: int | None = None,
                    band: int = DEFAULT_BAND,
                    reseed_every: int | None = DEFAULT_RESEED, *,
-                   k: int = 1, harvest: str = "merged") -> "ProfileResult":
+                   k: int = 1, harvest: str = "merged",
+                   normalize: bool = True) -> "ProfileResult":
     """Full exact matrix profile -> `ProfileResult`.
 
     `result.p` / `result.i` are the classic merged profile (bit-identical
@@ -557,6 +558,12 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
     finish lazily from the retained sweep state on first access, bitwise
     what `harvest="both"` materializes eagerly. With `k > 1`, exact
     `(l, k)` top-k neighbor sets ride along in `result.topk_p/topk_i`.
+
+    `normalize=False` selects plain euclidean distances (the ONE entry
+    point for both modes — `matrix_profile_nonnorm` is a deprecated alias):
+    same `ProfileResult`, nonnorm self-join plan underneath. The nonnorm
+    sweep requires finite samples, ignores `reseed_every` (its recurrence
+    reseeds implicitly), and supports only `k=1`.
 
     Thin entry: builds a `SweepPlan` (core.plan) and runs it through the
     executor — the band-engine choice, exclusion default, and harvest wiring
@@ -571,6 +578,16 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
     from repro.core.zstats import compute_stats_host
 
     m = int(window)
+    if not normalize:
+        if k != 1:
+            raise ValueError(f"normalize=False supports only k=1, got k={k}")
+        validate_series(ts, m, require_finite=True)
+        arr = jnp.asarray(ts, jnp.float32)
+        plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1,
+                                   exclusion=exclusion, normalize=False,
+                                   band=band, harvest=harvest)
+        res = plan_mod.execute(plan, arr)
+        return build_result(plan, res, arr)
     arr = validate_series(ts, m)
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
                                band=band, reseed_every=reseed_every, k=k,
@@ -1292,25 +1309,18 @@ def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
 def matrix_profile_nonnorm(ts, window: int, exclusion: int | None = None,
                            band: int = DEFAULT_BAND, *,
                            harvest: str = "merged") -> "ProfileResult":
-    """Exact non-normalized matrix profile -> `ProfileResult` (euclid
-    distances; left/right split lazy like the z-normalized entry —
-    finished from the retained sweep states on first access).
+    """DEPRECATED alias for `matrix_profile(..., normalize=False)` —
+    the two entries were both thin `SweepPlan` builders, so the nonnorm
+    mode collapsed into the one entry point. This shim forwards with a
+    one-release `DeprecationWarning` and will be removed next release."""
+    import warnings
 
-    Thin entry over a nonnorm self-join plan; the jitted sweep itself is
-    `nonnorm_profile_from_ts` (one pass of k in [excl, l); row and column
-    harvests of each band tile cover both triangles — no reversed pass).
-    """
-    from repro.core import plan as plan_mod
-    from repro.core.result import build_result
-    from repro.core.validate import validate_series
-
-    m = int(window)
-    validate_series(ts, m, require_finite=True)
-    ts = jnp.asarray(ts, jnp.float32)
-    plan = plan_mod.plan_sweep(m, ts.shape[0] - m + 1, exclusion=exclusion,
-                               normalize=False, band=band, harvest=harvest)
-    res = plan_mod.execute(plan, ts)
-    return build_result(plan, res, ts)
+    warnings.warn(
+        "matrix_profile_nonnorm() is deprecated and will be removed in "
+        "the next release; call matrix_profile(..., normalize=False).",
+        DeprecationWarning, stacklevel=2)
+    return matrix_profile(ts, window, exclusion, band, harvest=harvest,
+                          normalize=False)
 
 
 def nonnorm_to_distance(state: ProfileState) -> jax.Array:

@@ -18,7 +18,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import analytics
-from repro.core.matrix_profile import matrix_profile, matrix_profile_nonnorm
+from repro.core.matrix_profile import matrix_profile
 
 
 @dataclasses.dataclass
@@ -61,10 +61,7 @@ class TelemetryMonitor:
         if not self.ready:
             return []
         ts = jnp.asarray(np.asarray(self._trace, np.float32))
-        if self.normalize:
-            result = matrix_profile(ts, self.window)
-        else:
-            result = matrix_profile_nonnorm(ts, self.window)
+        result = matrix_profile(ts, self.window, normalize=self.normalize)
         p = np.asarray(result.p)
         finite = p[np.isfinite(p)]
         if finite.size < 8:
@@ -87,3 +84,58 @@ class TelemetryMonitor:
         result = matrix_profile(ts, self.window)
         motifs = analytics.top_motifs(result, max_motifs=1)
         return (motifs[0].a, motifs[0].b) if motifs else None
+
+
+@dataclasses.dataclass
+class FleetAlert:
+    """One alarmed discord in one fleet tenant (epoch-local `position`)."""
+
+    tenant: int
+    position: int
+    score: float          # profile value (distance to nearest neighbor)
+    zscore: float         # score vs that tenant's profile distribution
+    neighbor: int         # nearest neighbor's start position (-1 if none)
+
+
+@dataclasses.dataclass
+class FleetMonitor:
+    """Per-tenant discord alerting over a `StreamingFleet` — the
+    `TelemetryMonitor.scan` gate (z-score of the discord's profile value
+    against that tenant's own profile distribution, via
+    `analytics.discords`) applied fleet-wide, with an optional `on_alert`
+    callback fired per alert as it is found.
+
+    One `fleet.snapshot()` pull per scan; tenants whose current epoch has
+    fewer than `min_windows` finite profile entries are skipped (a fresh
+    or mostly-masked tenant has no distribution to gate against)."""
+
+    fleet: object                       # StreamingFleet (duck-typed)
+    zscore_alarm: float = 4.0
+    top_k: int = 3
+    min_windows: int = 8
+    on_alert: object | None = None      # callable(FleetAlert) -> None
+
+    def scan(self, tenants=None) -> list[FleetAlert]:
+        """Scan every tenant (or just `tenants`); returns alarmed discords
+        ordered by tenant then severity, invoking `on_alert` for each."""
+        which = range(self.fleet.n) if tenants is None \
+            else [int(t) for t in tenants]
+        out: list[FleetAlert] = []
+        for t in which:
+            result = self.fleet.snapshot(t)
+            p = np.asarray(result.p)
+            finite = p[np.isfinite(p)]
+            if finite.size < self.min_windows:
+                continue
+            mean = float(finite.mean())
+            std = float(finite.std() + 1e-12)
+            for d in analytics.discords(result, n=self.top_k):
+                z = (d.score - mean) / std
+                if z >= self.zscore_alarm:
+                    alert = FleetAlert(tenant=t, position=d.position,
+                                       score=d.score, zscore=z,
+                                       neighbor=d.neighbor)
+                    out.append(alert)
+                    if self.on_alert is not None:
+                        self.on_alert(alert)
+        return out

@@ -13,13 +13,16 @@ one-point-at-a-time loop that rebuilt the O(n·m) window matrix p times
 (O(p·n·m) rebuild cost alone, O(n^2·m) for a bulk load).
 
 Host-side f64 stats (same rationale as zstats.compute_stats_host); block
-rows are centered-windows matmuls — vectorized, no recurrence drift.
-Supports both z-normalized and non-normalized distances so the telemetry
-monitor can stream either mode.
+rows run through the SHARED f64 block kernel (`zstats.sqdist_block` and its
+factored parts) — the same op sequence `core.fleet.StreamingFleet` executes
+jitted+vmapped, which is what makes a fleet tenant bitwise-equal to a
+per-series replay. Supports both z-normalized and non-normalized distances
+so the telemetry monitor can stream either mode.
 """
 
 from __future__ import annotations
 
+import warnings
 from collections import OrderedDict
 
 import numpy as np
@@ -49,8 +52,19 @@ class StreamingProfile:
         self._ts: list[float] = []
         self._profile = np.zeros((0,), np.float64)     # squared distance
         self._index = np.zeros((0,), np.int64)
+        # split harvest, maintained incrementally: a new subsequence's
+        # row-min over earlier columns IS its left entry (fixed forever);
+        # column-min improvements are right-side by construction.
+        self._left_profile = np.zeros((0,), np.float64)
+        self._left_index = np.zeros((0,), np.int64)
+        self._right_profile = np.zeros((0,), np.float64)
+        self._right_index = np.zeros((0,), np.int64)
+        # append-generation counter: bumped on EVERY series mutation, so
+        # cached corpus-side state can never survive a content change that
+        # preserves length (e.g. a future trim/rescale) — see _ref_state()
+        self._gen = 0
         # query()'s resident corpus-side states: small LRU of
-        # (n_points, normalize) -> dict(stats/windows/ts + plans LRU) —
+        # (generation, normalize) -> dict(stats/windows/ts + plans LRU) —
         # see _ref_state()
         self._ref_cache: OrderedDict = OrderedDict()
 
@@ -66,21 +80,34 @@ class StreamingProfile:
         """Squared distances between window matrices, (p, m) x (q, m) -> (p, q)
         — the APPEND path's block evaluator (query() runs through the sweep
         executor instead, so the degenerate-window conventions live in
-        zstats/core.plan, not here twice). Flat windows correlate with
-        nothing; denominators floored.
+        zstats/core.plan, not here twice). Delegates to the shared JITTED
+        f64 block kernel in zstats — `StreamingFleet`'s update runs the
+        SAME jitted ops, which is what makes fleet output bitwise-equal to
+        a per-series replay (the jitted lowering is shape-independent;
+        eager dispatch is NOT bitwise-equal to it, see the zstats section
+        comment). Both block dims are padded to the next power of two so a
+        point-at-a-time monitor retraces O(log^2 n) times, not per append;
+        zero padding rows are sliced away and cannot bleed (every output
+        element depends only on its own pair of windows).
         """
-        if self.normalize:
-            ac = wa - wa.mean(axis=1, keepdims=True)
-            an = np.linalg.norm(ac, axis=1)
-            bc = wb - wb.mean(axis=1, keepdims=True)
-            bn = np.linalg.norm(bc, axis=1)
-            denom = np.maximum(an[:, None] * bn[None, :], 1e-300)
-            corr = np.where((an[:, None] > 0) & (bn[None, :] > 0),
-                            ac @ bc.T / denom, 0.0)
-            return 2.0 * self.m * (1.0 - np.clip(corr, -1.0, 1.0))
-        # ||a-b||^2 expansion — avoids the (p, q, m) intermediate
-        return ((wa * wa).sum(axis=1)[:, None]
-                + (wb * wb).sum(axis=1)[None, :] - 2.0 * wa @ wb.T)
+        import jax.numpy as jnp
+
+        from repro.core import zstats
+
+        p, q = wa.shape[0], wb.shape[0]
+        if p == 0 or q == 0:
+            return np.zeros((p, q), np.float64)
+        pp = 1 << (p - 1).bit_length()
+        qp = 1 << (q - 1).bit_length()
+        wa_p = np.zeros((pp, self.m), np.float64)
+        wa_p[:p] = wa
+        wb_p = np.zeros((qp, self.m), np.float64)
+        wb_p[:q] = wb
+        with zstats.x64_scope():
+            d2 = zstats.sqdist_block_jit(jnp.asarray(wa_p), jnp.asarray(wb_p),
+                                         window=self.m,
+                                         normalize=self.normalize)
+            return np.asarray(d2)[:p, :q]
 
     # -- public ---------------------------------------------------------------
 
@@ -103,6 +130,7 @@ class StreamingProfile:
             raise ValueError("max_points exceeded; start a new profile")
         l_old = self._profile.shape[0]
         self._ts.extend(float(v) for v in values)
+        self._gen += 1                  # series content changed
         l_new = len(self._ts) - self.m + 1
         if l_new <= max(l_old, 0):
             return                       # no new complete window yet
@@ -122,25 +150,42 @@ class StreamingProfile:
         if not ok.all():
             d2 = np.where(ok[l_old:, None] & ok[None, :], d2, np.inf)
         # grow state
-        self._profile = np.concatenate([self._profile, np.full(p, np.inf)])
-        self._index = np.concatenate([self._index, np.full(p, -1, np.int64)])
-        # row mins -> the new subsequences' own entries
+        grow_f = np.full(p, np.inf)
+        grow_i = np.full(p, -1, np.int64)
+        self._profile = np.concatenate([self._profile, grow_f])
+        self._index = np.concatenate([self._index, grow_i])
+        self._left_profile = np.concatenate([self._left_profile, grow_f])
+        self._left_index = np.concatenate([self._left_index, grow_i])
+        self._right_profile = np.concatenate([self._right_profile, grow_f])
+        self._right_index = np.concatenate([self._right_index, grow_i])
+        # row mins -> the new subsequences' own entries; every admissible
+        # column precedes the row, so this is exactly the LEFT entry (and
+        # it is final: later arrivals only ever improve the right side)
         row_best = np.argmin(d2, axis=1)                  # (p,)
         row_vals = d2[np.arange(p), row_best]
         has = np.isfinite(row_vals)
         self._profile[l_old:][has] = row_vals[has]
         self._index[l_old:][has] = row_best[has]
-        # column mins -> existing entries (and earlier batch rows) improve
+        self._left_profile[l_old:][has] = row_vals[has]
+        self._left_index[l_old:][has] = row_best[has]
+        # column mins -> existing entries (and earlier batch rows) improve;
+        # the improving row always FOLLOWS the column, so these are
+        # right-side updates by construction
         col_best = np.argmin(d2, axis=0)                  # (l_new,)
         col_vals = d2[col_best, np.arange(l_new)]
         upd = col_vals < self._profile[:l_new]
         self._profile[:l_new][upd] = col_vals[upd]
         self._index[:l_new][upd] = l_old + col_best[upd]
+        rupd = col_vals < self._right_profile[:l_new]
+        self._right_profile[:l_new][rupd] = col_vals[rupd]
+        self._right_index[:l_new][rupd] = l_old + col_best[rupd]
 
     def _ref_state(self) -> dict:
         """Corpus-side sweep state, invariant between appends — cached keyed
-        by BOTH corpus length and distance mode (a `normalize` flip after a
-        query used to serve stale centered windows), with the per-query-shape
+        by BOTH the append generation and distance mode (generation, not
+        length: a content change that preserves length — a future trim or
+        rescale — must never serve stale stats, and a `normalize` flip after
+        a query used to serve stale centered windows), with the per-query-shape
         `SweepPlan`s cached alongside so repeated query() calls skip planning
         entirely. Both layers are LRU-bounded (`REF_CACHE_MAX` states,
         `PLAN_CACHE_MAX` plans each): corpus growth and mode flips retire
@@ -150,7 +195,7 @@ class StreamingProfile:
         from repro.core.zstats import compute_stats_host
 
         n = len(self._ts)
-        key = (n, self.normalize)
+        key = (self._gen, self.normalize)
         cache = self._ref_cache.get(key)
         if cache is None:
             t = np.asarray(self._ts, np.float64)
@@ -238,14 +283,52 @@ class StreamingProfile:
     def n_subsequences(self) -> int:
         return self._profile.shape[0]
 
+    def snapshot(self) -> "ProfileResult":
+        """The profile-so-far as a v2 `ProfileResult` — merged AND the
+        left/right split, straight off the incremental state (no recompute;
+        distances are sqrt'd on the way out, masked entries stay inf/-1).
+        Each call returns an independent result: later appends never mutate
+        a snapshot you already took."""
+        from repro.core.result import ProfileResult
+
+        def _d(a):
+            return np.sqrt(np.maximum(a, 0.0))
+
+        return ProfileResult(
+            p=_d(self._profile), i=self._index.copy(),
+            left_p=_d(self._left_profile), left_i=self._left_index.copy(),
+            right_p=_d(self._right_profile), right_i=self._right_index.copy(),
+            kind="self", window=self.m, exclusion=self.excl,
+            normalize=self.normalize, backend="streaming")
+
+    @property
+    def result(self) -> "ProfileResult":
+        """Alias for `snapshot()` — the v2 result API surface."""
+        return self.snapshot()
+
+    # -- deprecated raw accessors (pre-PR-5 surface; remove next release) ----
+
     def distances(self) -> np.ndarray:
+        warnings.warn(
+            "StreamingProfile.distances() is deprecated and will be removed "
+            "in the next release; use snapshot().p (a ProfileResult).",
+            DeprecationWarning, stacklevel=2)
         return np.sqrt(np.maximum(self._profile, 0.0))
 
     def indices(self) -> np.ndarray:
+        warnings.warn(
+            "StreamingProfile.indices() is deprecated and will be removed "
+            "in the next release; use snapshot().i (a ProfileResult).",
+            DeprecationWarning, stacklevel=2)
         return self._index.copy()
 
     def top_discord(self) -> tuple[int, float]:
-        d = self.distances()
+        warnings.warn(
+            "StreamingProfile.top_discord() is deprecated and will be "
+            "removed in the next release; use "
+            "repro.core.analytics.top_discord(profile.snapshot()).",
+            DeprecationWarning, stacklevel=2)
+        d = np.sqrt(np.maximum(self._profile, 0.0))
         fin = np.isfinite(d)
         if not fin.any():
             return -1, float("nan")

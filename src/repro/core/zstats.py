@@ -40,7 +40,7 @@ them without schema changes:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -331,3 +331,141 @@ def compute_stats_host(ts, window: int, out_dtype=None,
     if return_centered_windows:
         return stats, w
     return stats
+
+
+# -- shared streaming/fleet block distances -----------------------------------
+#
+# The incremental surfaces (`core.streaming.StreamingProfile`,
+# `core.fleet.StreamingFleet`) evaluate squared-distance BLOCKS between raw
+# f64 window matrices instead of running the f32 diagonal recurrence: appends
+# are exact, drift-free, and a fleet tenant must be BITWISE-equal to a
+# per-series `StreamingProfile` replay. That equality is only attainable if
+# both run the identical arithmetic, so the block evaluator lives here — one
+# op sequence, called eagerly (host shapes, per-series) and from inside the
+# fleet's jitted/vmapped update alike. Two deliberate choices keep it
+# shape-independent and replayable:
+#
+#   * every dot product is an elementwise multiply + `sum` over the window
+#     axis (NO matmul: BLAS/XLA gemm tilings round differently per shape, a
+#     (1, m) fleet row would not match a (p, m) bulk-append block);
+#   * BOTH surfaces call the kernels under jit (`sqdist_block_jit` for the
+#     per-series path, the fleet's own jitted update for the other): XLA's
+#     fused mul->reduce emits FMAs, so jitted output differs from eager
+#     per-primitive dispatch in the last ulp (measured) — but the fused
+#     lowering is shape- and context-independent (measured: full-block vs
+#     single-row vs batched vs carry-materialized inputs all agree
+#     bitwise), so two jitted callers agree where eager-vs-jit would not.
+#     Each FP intermediate additionally carries a `lax.optimization_barrier`
+#     pin to keep surrounding graphs from restructuring the kernel's
+#     producer chains (exact ops — where/clip/max/compare — need none);
+#   * f64 throughout — callers outside jit wrap calls in `x64_scope()`.
+#
+# Degenerate-window conventions mirror the historical `StreamingProfile`
+# block path (flat windows correlate with nothing -> corr 0; missing data is
+# masked by the CALLER with the `invn < 0`-style finite-window mask from
+# `window_finite_mask`), not `compute_stats_host`'s relative flat guard:
+# these blocks never enter the f32 recurrence, so the cumsum-residue rationale
+# for the relative guard does not apply.
+
+
+def x64_scope():
+    """Context manager enabling f64 jax ops for the streaming block kernels
+    (the repo's engines are f32 and the global flag stays off; the
+    incremental surfaces opt in per call — jit traces/calls made inside the
+    scope are cached under it, so fleet state stays f64 end to end)."""
+    from jax.experimental import enable_x64
+
+    return enable_x64()
+
+
+def _pin(x: jax.Array) -> jax.Array:
+    """`lax.optimization_barrier` on one array — the fusion fence that
+    keeps jitted kernel arithmetic bitwise-equal to eager dispatch (see
+    the section comment)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def centered_block(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., q, m) raw windows -> (centered windows, centered norms).
+    Mean is spelled sum-then-divide so each rounding step is its own
+    pinned primitive."""
+    s = _pin(jnp.sum(w, axis=-1, keepdims=True))
+    mu = _pin(s / w.shape[-1])
+    c = _pin(w - mu)
+    sq = _pin(c * c)
+    ss = _pin(jnp.sum(sq, axis=-1))
+    return c, _pin(jnp.sqrt(ss))
+
+
+def window_finite_mask(w: jax.Array) -> jax.Array:
+    """(..., q, m) -> (..., q) bool: True where the window touches only
+    finite samples — the block-path analogue of the `invn = -1` missing-data
+    sentinel (same semantics: masked windows emit inf/-1 and can never be
+    selected as neighbors; the caller applies the mask AFTER the block, so
+    NaNs propagating through it are overwritten, never compared)."""
+    return jnp.isfinite(w).all(axis=-1)
+
+
+def sqdist_znorm_from_parts(ac, an, bc, bn, *, window: int) -> jax.Array:
+    """Z-normalized squared distances from precomputed centered parts:
+    `ac` (..., p, m) / `an` (..., p) vs `bc` (..., q, m) / `bn` (..., q)
+    -> (..., p, q). Split out so the fleet can keep B-side centered windows
+    resident and still share the A-side arithmetic bitwise."""
+    prod = _pin(ac[..., :, None, :] * bc[..., None, :, :])
+    cross = _pin(jnp.sum(prod, axis=-1))
+    nn = _pin(an[..., :, None] * bn[..., None, :])
+    denom = jnp.maximum(nn, 1e-300)
+    ratio = _pin(cross / denom)
+    corr = jnp.where((an[..., :, None] > 0) & (bn[..., None, :] > 0),
+                     ratio, 0.0)
+    om = _pin(1.0 - jnp.clip(corr, -1.0, 1.0))
+    return _pin((2.0 * int(window)) * om)
+
+
+def window_sumsq(w: jax.Array) -> jax.Array:
+    """(..., q, m) raw windows -> (..., q) sum of squares, pinned — the
+    non-normalized path's precomputable part."""
+    sq = _pin(w * w)
+    return _pin(jnp.sum(sq, axis=-1))
+
+
+def sqdist_nonnorm_from_parts(wa, sa, wb, sb) -> jax.Array:
+    """Non-normalized squared distances from raw windows and their
+    precomputed squared norms (`sa = sum(wa^2)`, `sb = sum(wb^2)`):
+    ||a - b||^2 by expansion, no (p, q, m) gemm."""
+    prod = _pin(wa[..., :, None, :] * wb[..., None, :, :])
+    cross = _pin(jnp.sum(prod, axis=-1))
+    ssum = _pin(sa[..., :, None] + sb[..., None, :])
+    c2 = _pin(2.0 * cross)
+    return _pin(ssum - c2)
+
+
+def sqdist_block(wa: jax.Array, wb: jax.Array, *, window: int,
+                 normalize: bool = True) -> jax.Array:
+    """Squared distances between window matrices, (..., p, m) x (..., q, m)
+    -> (..., p, q) — the one block evaluator every incremental surface
+    shares (see the section comment for why)."""
+    if normalize:
+        ac, an = centered_block(wa)
+        bc, bn = centered_block(wb)
+        return sqdist_znorm_from_parts(ac, an, bc, bn, window=window)
+    sa = window_sumsq(wa)
+    sb = window_sumsq(wb)
+    return sqdist_nonnorm_from_parts(wa, sa, wb, sb)
+
+
+@lru_cache(maxsize=None)
+def _sqdist_block_jitted(window: int, normalize: bool):
+    def f(wa, wb):
+        return sqdist_block(wa, wb, window=window, normalize=normalize)
+
+    return jax.jit(f)
+
+
+def sqdist_block_jit(wa, wb, *, window: int, normalize: bool = True):
+    """`sqdist_block` through a cached jit — REQUIRED (not an
+    optimization) for any caller that must agree bitwise with the fleet:
+    see the section comment. Jit cache is keyed per (window, normalize)
+    here and per shape by jax; callers bound retraces by padding shapes.
+    Call under `x64_scope()`."""
+    return _sqdist_block_jitted(int(window), bool(normalize))(wa, wb)

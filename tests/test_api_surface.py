@@ -20,6 +20,7 @@ CORE_ALL = [
     "HarvestSpec",
     "ProfileResult",
     "ProfileState",
+    "StreamingFleet",
     "SweepPlan",
     "SweepResult",
     "TopKState",
@@ -33,7 +34,9 @@ CORE_ALL = [
     "corr_to_dist",
     "execute",
     "matrix_profile",
-    "matrix_profile_nonnorm",
+    # matrix_profile_nonnorm: collapsed into matrix_profile(normalize=False);
+    # the deprecated shim stays importable (checked below) but is no longer
+    # public surface
     "plan_sweep",
     "round_executor",
     "self_cross",
@@ -115,6 +118,28 @@ def test_core_all_is_pinned():
         assert hasattr(core, name), name
 
 
+def test_nonnorm_shim_importable_and_warns():
+    """One-release deprecation contract for the collapsed entry point:
+    still importable from the old locations, forwards with a warning."""
+    import warnings
+
+    import numpy as np
+
+    from repro.core import matrix_profile_nonnorm
+    from repro.core.matrix_profile import matrix_profile_nonnorm as shim2
+
+    assert matrix_profile_nonnorm is shim2
+    ts = np.sin(np.arange(128, dtype=np.float32) / 5.0)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = matrix_profile_nonnorm(ts, 16)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    new = core.matrix_profile(ts, 16, normalize=False)
+    assert np.array_equal(np.asarray(old.p), np.asarray(new.p))
+    assert np.array_equal(np.asarray(old.i), np.asarray(new.i))
+    assert not new.normalize
+
+
 def test_profile_result_surface_is_pinned():
     import inspect
 
@@ -141,8 +166,8 @@ def test_sweep_plan_fields_are_pinned():
 def test_analytics_surface():
     from repro.core import analytics
 
-    for name in ("top_motifs", "discords", "regimes", "corrected_arc_curve",
-                 "Motif", "Discord", "Regimes"):
+    for name in ("top_motifs", "discords", "top_discord", "regimes",
+                 "corrected_arc_curve", "Motif", "Discord", "Regimes"):
         assert hasattr(analytics, name), name
 
 

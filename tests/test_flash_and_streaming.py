@@ -172,3 +172,94 @@ def test_streaming_property_valid_pairs(seed):
         assert abs(i - j) >= 2
         true = np.linalg.norm(ts[i:i + 8] - ts[j:j + 8])
         assert abs(true - d[i]) < 1e-6
+
+
+# -- streaming v2 result surface ----------------------------------------------
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+def test_streaming_snapshot_profile_result(normalize):
+    """snapshot()/.result return a full v2 ProfileResult: merged + split
+    sides off the incremental state, metadata populated, and merged ==
+    min(left, right) exactly."""
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(9)
+    sp = StreamingProfile(8, 2, normalize=normalize)
+    sp.append(rng.normal(size=90))
+    res = sp.snapshot()
+    assert res.kind == "self" and res.backend == "streaming"
+    assert res.window == 8 and res.exclusion == 2
+    assert res.normalize == normalize
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        np.testing.assert_array_equal(res.p, sp.distances())
+        np.testing.assert_array_equal(res.i, sp.indices())
+    lp = np.where(np.isfinite(res.left_p), res.left_p, np.inf)
+    rp = np.where(np.isfinite(res.right_p), res.right_p, np.inf)
+    merged = np.where(np.isfinite(res.p), res.p, np.inf)
+    np.testing.assert_array_equal(merged, np.minimum(lp, rp))
+    # left entries are final: later appends must not change them
+    sp.append(rng.normal(size=40))
+    res2 = sp.result
+    np.testing.assert_array_equal(res2.left_p[:res.left_p.size], res.left_p)
+    np.testing.assert_array_equal(res2.left_i[:res.left_i.size], res.left_i)
+    # ...while a snapshot taken earlier stays frozen
+    assert res.p.size < res2.p.size
+
+
+def test_streaming_raw_accessors_deprecated():
+    import warnings
+    from repro.core.streaming import StreamingProfile
+    sp = StreamingProfile(4, 1)
+    sp.append(np.sin(np.arange(20.0)))
+    for call in (sp.distances, sp.indices, sp.top_discord):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            call()
+        assert any(issubclass(w.category, DeprecationWarning)
+                   for w in caught), call
+
+
+def test_streaming_top_discord_matches_analytics():
+    import warnings
+    from repro.core import analytics
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(12)
+    sp = StreamingProfile(8, 2, normalize=False)
+    sp.append(rng.normal(size=100))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        pos, score = sp.top_discord()
+    top = analytics.top_discord(sp.snapshot(), exclusion=1)
+    assert top is not None and top.position == pos
+    np.testing.assert_allclose(top.score, score)
+
+
+def test_streaming_ref_cache_keyed_by_generation():
+    """Regression (fleet rework): corpus-side query state is keyed by an
+    append-generation counter, NOT series length — a content change that
+    preserves length (e.g. a future trim/rescale) must never serve stale
+    stats."""
+    from repro.core.streaming import StreamingProfile
+    rng = np.random.default_rng(3)
+    m = 8
+    a = rng.normal(size=60)
+    q = rng.normal(size=30)
+    sp = StreamingProfile(m, 2)
+    sp.append(a)
+    d_a = sp.query(q).p.copy()
+    assert len(sp._ref_cache) == 1          # state cached for the corpus
+    # same-length content change, the way a trim/rescale would do it:
+    # mutate the series and bump the generation WITHOUT changing n
+    b = rng.normal(size=60)
+    sp._ts = list(b)
+    sp._gen += 1
+    d_b = sp.query(q).p
+    fresh = StreamingProfile(m, 2)
+    fresh.append(b)
+    np.testing.assert_array_equal(d_b, fresh.query(q).p)
+    assert not np.array_equal(d_a, d_b), "stale cached stats served"
+    # and repeated queries still HIT the cache (no rebuild per call)
+    state = sp._ref_state()
+    assert sp._ref_state() is state

@@ -1,0 +1,213 @@
+"""StreamingFleet: bitwise equality against a per-series StreamingProfile
+oracle (mixed ingestion batches, NaN-masked arrivals, ring-buffer
+wraparound), checkpoint/restore + elastic rescale under a seeded
+FaultInjector schedule, and the FleetMonitor alert surface.
+
+The bitwise contract is the load-bearing test here: fleet and per-series
+paths share ONE jitted block kernel (zstats section comment), so every
+profile value, index, and split side must match the oracle exactly — any
+drift means the shared-arithmetic invariant broke.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.fleet import StreamingFleet
+from repro.core.streaming import StreamingProfile
+
+
+def _assert_result_equal(got, want, ctx=""):
+    pairs = [(got.p, want.p, "p"), (got.i, want.i, "i"),
+             (got.left_p, want.left_p, "left_p"),
+             (got.left_i, want.left_i, "left_i"),
+             (got.right_p, want.right_p, "right_p"),
+             (got.right_i, want.right_i, "right_i")]
+    for a, b, name in pairs:
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape, f"{ctx}/{name}: {a.shape} vs {b.shape}"
+        assert np.array_equal(a, b, equal_nan=True), f"{ctx}/{name}"
+
+
+class _EpochOracle:
+    """Per-series replay with the fleet's epoch-restart eviction: when the
+    buffer would exceed `capacity`, restart a fresh StreamingProfile from
+    the trailing m-1 samples (gapless subsequence coverage, indices from
+    0)."""
+
+    def __init__(self, window, capacity, normalize):
+        self.m, self.cap, self.normalize = window, capacity, normalize
+        self.sp = StreamingProfile(window, normalize=normalize)
+        self.hist = []
+        self.epochs = 0
+
+    def push(self, v):
+        if len(self.hist) == self.cap:
+            carry = self.hist[-(self.m - 1):]
+            self.sp = StreamingProfile(self.m, normalize=self.normalize)
+            self.sp.append(carry)
+            self.hist = list(carry)
+            self.epochs += 1
+        self.sp.append(v)
+        self.hist.append(v)
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+def test_fleet_bitwise_equals_per_series_oracle(normalize):
+    """Mixed-length batches, NaN arrivals, wraparound — all tenants must
+    match a per-series replay bit for bit, merged AND split sides."""
+    rng = np.random.RandomState(42)
+    n, m, cap = 5, 8, 32
+    fleet = StreamingFleet(n, window=m, capacity=cap, normalize=normalize)
+    oracles = [_EpochOracle(m, cap, normalize) for _ in range(n)]
+    for _ in range(12):
+        k = rng.randint(1, 40)
+        tids = rng.randint(0, n, size=k)
+        vals = rng.randn(k)
+        vals[rng.rand(k) < 0.08] = np.nan      # masked arrivals ride along
+        fleet.ingest(tids, vals)
+        for t in range(n):
+            for v in vals[tids == t]:
+                oracles[t].push(v)
+    assert fleet.epochs.max() >= 1, "test must exercise wraparound"
+    assert np.isnan(np.concatenate([o.hist for o in oracles])).any()
+    for t in range(n):
+        _assert_result_equal(fleet.snapshot(t), oracles[t].sp.snapshot(),
+                             ctx=f"tenant {t}")
+        assert fleet.epochs[t] == oracles[t].epochs
+        assert fleet.counts[t] == len(oracles[t].hist)
+
+
+def test_fleet_single_vs_grouped_ingest_equivalent():
+    """One big mixed batch == the same arrivals pushed one at a time (the
+    round-grouping must preserve per-tenant order and be order-independent
+    across tenants)."""
+    rng = np.random.RandomState(3)
+    n, m, cap = 4, 6, 40
+    tids = rng.randint(0, n, size=150)
+    vals = rng.randn(150)
+    bulk = StreamingFleet(n, window=m, capacity=cap)
+    bulk.ingest(tids, vals)
+    seq = StreamingFleet(n, window=m, capacity=cap)
+    for t, v in zip(tids, vals):
+        seq.ingest(t, v)
+    for t in range(n):
+        _assert_result_equal(bulk.snapshot(t), seq.snapshot(t),
+                             ctx=f"tenant {t}")
+
+
+def test_fleet_snapshot_is_profile_result():
+    fleet = StreamingFleet(2, window=4, capacity=16)
+    fleet.ingest(np.zeros(10, int), np.sin(np.arange(10.0)))
+    res = fleet.snapshot(0)
+    assert res.kind == "self" and res.backend == "fleet"
+    assert res.window == 4 and res.exclusion == 1 and res.normalize
+    assert res.p.shape == (7,) and res.i.dtype == np.int64
+    allr = fleet.snapshot()
+    assert len(allr) == 2 and allr[1].p.shape == (0,)
+    with pytest.raises(ValueError):
+        fleet.snapshot(2)
+
+
+def test_fleet_validates_inputs():
+    with pytest.raises(ValueError):
+        StreamingFleet(0, window=4, capacity=16)
+    with pytest.raises(ValueError):
+        StreamingFleet(1, window=1, capacity=16)
+    with pytest.raises(ValueError):
+        StreamingFleet(1, window=8, capacity=4)    # capacity < window
+    fleet = StreamingFleet(2, window=4, capacity=16)
+    with pytest.raises(ValueError):
+        fleet.ingest([2], [1.0])                    # tenant out of range
+    with pytest.raises(ValueError):
+        fleet.ingest([0, 1], [1.0])                 # length mismatch
+    assert fleet.ingest([], []) == 0
+
+
+def test_fleet_checkpoint_restore_and_rescale_under_faults(tmp_path):
+    """Checkpoint every few ingests with a seeded fault schedule (kills +
+    bit-flips), then restore: a killed save loses nothing already
+    committed, a flipped save falls back to the previous intact step, and
+    grow/shrink rescale preserves surviving tenants bitwise."""
+    from repro.core.faults import CheckpointWriteError, FaultInjector
+
+    rng = np.random.RandomState(11)
+    n, m, cap = 4, 6, 24
+    ckdir = str(tmp_path / "fleet_ck")
+    inj = FaultInjector.seeded(5, n_rounds=12, n_workers=1,
+                               p_checkpoint_kill=0.25,
+                               p_checkpoint_flip=0.25, n_checkpoints=12)
+    assert inj.checkpoint_kills and inj.checkpoint_flips, \
+        "seed must schedule both fault kinds"
+    fleet = StreamingFleet(n, window=m, capacity=cap)
+    committed = {}                      # step -> snapshot at save time
+    corrupted = set()
+    for _ in range(10):
+        fleet.ingest(rng.randint(0, n, 15), rng.randn(15))
+        step = fleet._ingests
+        try:
+            fleet.save(ckdir, keep=10, injector=inj)
+        except CheckpointWriteError:
+            continue                    # killed before commit: no dir
+        committed[step] = fleet.snapshot()
+        if step in inj.checkpoint_flips:
+            corrupted.add(step)
+    intact = sorted(set(committed) - corrupted)
+    assert intact, "schedule left no intact checkpoint"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # fall-back warnings are expected
+        restored, got_step = StreamingFleet.restore(ckdir)
+    assert got_step == intact[-1], "must fall back to newest INTACT step"
+    for t in range(n):
+        _assert_result_equal(restored.snapshot(t), committed[got_step][t],
+                             ctx=f"tenant {t}")
+    # elastic grow: old tenants bitwise-preserved, new ones fresh and live
+    restored.rescale(n + 3)
+    assert restored.n == n + 3
+    for t in range(n):
+        _assert_result_equal(restored.snapshot(t), committed[got_step][t],
+                             ctx=f"grow tenant {t}")
+    restored.ingest(np.full(2 * m, n + 1), rng.randn(2 * m))
+    assert restored.snapshot(n + 1).p.shape == (m + 1,)
+    # elastic shrink: survivors bitwise-preserved, tail gone
+    restored.rescale(2)
+    assert restored.n == 2
+    for t in range(2):
+        _assert_result_equal(restored.snapshot(t), committed[got_step][t],
+                             ctx=f"shrink tenant {t}")
+    with pytest.raises(ValueError):
+        restored.ingest([2], [0.0])
+    # and a rescaled fleet still checkpoints/restores
+    restored.save(ckdir, keep=10)
+    again, _ = StreamingFleet.restore(ckdir)
+    assert again.n == 2
+    _assert_result_equal(again.snapshot(1), committed[got_step][1])
+
+
+def test_fleet_monitor_alerts_and_callback():
+    """A planted per-tenant anomaly alarms that tenant only; the callback
+    sees every alert in order."""
+    from repro.core.monitor import FleetAlert, FleetMonitor
+
+    rng = np.random.RandomState(0)
+    n, m, cap = 3, 8, 512
+    fleet = StreamingFleet(n, window=m, capacity=cap, normalize=False)
+    length = 320
+    base = (np.sin(np.arange(length) / 3.0)
+            + 0.01 * rng.randn(length))
+    for tenant in range(n):
+        vals = base.copy()
+        if tenant == 1:
+            vals[200:208] += 3.0        # level anomaly, tenant 1 only
+        fleet.ingest(np.full(length, tenant), vals)
+    seen = []
+    mon = FleetMonitor(fleet, zscore_alarm=3.5, top_k=2,
+                       on_alert=seen.append)
+    alerts = mon.scan()
+    assert alerts and alerts == seen
+    assert {a.tenant for a in alerts} == {1}
+    assert all(isinstance(a, FleetAlert) for a in alerts)
+    assert min(abs(a.position - 200) for a in alerts) <= m
+    # scoped scan skips the anomalous tenant entirely
+    assert mon.scan(tenants=[0, 2]) == []

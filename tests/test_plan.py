@@ -292,28 +292,31 @@ def test_scheduler_builds_distributed_plan():
 
 
 def test_streaming_query_cache_and_plan_reuse():
-    """Satellite: the corpus cache must key on the distance mode (a
-    `normalize` flip must not serve stale centered windows) and must
-    memoize the plan per query shape."""
+    """Satellite: the corpus cache must key on the append GENERATION and
+    the distance mode (a `normalize` flip must not serve stale centered
+    windows; a content change at the same length must miss — see
+    test_streaming_ref_cache_keyed_by_generation) and must memoize the
+    plan per query shape."""
     from repro.core.streaming import StreamingProfile
 
     rng = np.random.default_rng(13)
     sp = StreamingProfile(8, 2)
     sp.append(rng.normal(size=80))
+    gen = sp._gen
     q = rng.normal(size=30)
     sp.query(q)
-    state = sp._ref_cache[(80, True)]
+    state = sp._ref_cache[(gen, True)]
     assert state["normalize"] is True and 23 in state["plans"]
     sp.query(q)
-    assert sp._ref_cache[(80, True)] is state        # state + plan reused
+    assert sp._ref_cache[(gen, True)] is state       # state + plan reused
     d_norm = sp.query(q).p
     sp.normalize = False                 # mode flip must miss the z-norm key
     d_raw = sp.query(q).p
-    assert sp._ref_cache[(80, False)]["normalize"] is False
+    assert sp._ref_cache[(gen, False)]["normalize"] is False
     assert not np.allclose(d_norm, d_raw)    # raw vs z-norm really differ
     sp.normalize = True
     np.testing.assert_array_equal(sp.query(q).p, d_norm)
-    assert sp._ref_cache[(80, True)] is state        # LRU kept both modes
+    assert sp._ref_cache[(gen, True)] is state       # LRU kept both modes
 
 
 # -- guard rails --------------------------------------------------------------
