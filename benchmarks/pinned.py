@@ -105,6 +105,45 @@ print(json.dumps({"us": best * 1e6}))
 """
 
 
+# bf16-vs-f32 workload: BOTH arms run inside ONE subprocess with the rep
+# order alternating, so the gated speedup is immune to host drift by
+# construction — the same discipline run_pinned applies across processes,
+# pushed down a level because here the two arms share a checkout. Prints
+# None when the revision predates PrecisionSpec (pre-PR9 baselines).
+_PRECISION_WORKER = r"""
+import json, sys, time
+sys.path.insert(0, sys.argv[1])
+try:
+    from repro.core.precision import PrecisionSpec  # noqa: F401
+except Exception:
+    print(json.dumps({"f32_us": None, "bf16_us": None}))
+    raise SystemExit(0)
+import numpy as np
+import jax
+from repro.core.matrix_profile import matrix_profile
+from repro.data.pipeline import random_walk
+
+n, m, inner = int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+ts = np.asarray(random_walk(n, seed=9))
+
+def f32():
+    jax.block_until_ready(matrix_profile(ts, m).p)
+
+def bf16():
+    jax.block_until_ready(matrix_profile(ts, m, precision="bf16").p)
+
+f32(); bf16()                                  # compile/warmup both traces
+best = {"f32": float("inf"), "bf16": float("inf")}
+for r in range(inner):
+    arms = ((f32, "f32"), (bf16, "bf16"))
+    for fn, name in (arms if r % 2 == 0 else arms[::-1]):
+        t0 = time.perf_counter()
+        fn()
+        best[name] = min(best[name], time.perf_counter() - t0)
+print(json.dumps({"f32_us": best["f32"] * 1e6, "bf16_us": best["bf16"] * 1e6}))
+"""
+
+
 def _one_rep(src: str, n: int, m: int, inner: int, timeout: float) -> float:
     out = subprocess.run(
         [sys.executable, "-c", _WORKER, src, str(n), str(m), str(inner)],
@@ -205,6 +244,50 @@ def run_fleet_pinned(baseline_src: str, candidate_src: str, *,
             "ratio_ci95": [lo, hi]}
 
 
+def _one_precision_rep(src: str, n: int, m: int, inner: int,
+                       timeout: float) -> tuple[float, float] | None:
+    out = subprocess.run(
+        [sys.executable, "-c", _PRECISION_WORKER, src, str(n), str(m),
+         str(inner)],
+        capture_output=True, text=True, timeout=timeout, cwd=_REPO)
+    if out.returncode != 0:
+        raise RuntimeError(f"pinned precision worker failed for src={src!r}:"
+                           f"\n{out.stderr[-2000:]}")
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    if got["f32_us"] is None:
+        return None
+    return float(got["f32_us"]), float(got["bf16_us"])
+
+
+def run_precision_pinned(src: str, *, n: int = 16384, m: int = 128,
+                         reps: int = 3, inner: int = 2,
+                         timeout: float = 900.0) -> dict:
+    """Same-session bf16-vs-f32 engine speedup on one checkout.
+
+    Each rep is a fresh subprocess interleaving both arms; the headline is
+    min(f32)/min(bf16) with a bootstrap CI over the per-rep speedups — the
+    drift-proof number the perf gate's BENCH_PR9 ratio should agree with.
+    Returns `unsupported=True` for checkouts without PrecisionSpec."""
+    pairs = []
+    for _ in range(reps):
+        got = _one_precision_rep(src, n, m, inner, timeout)
+        if got is None:
+            return {"workload": f"mp_engine_bf16_vs_f32_n{n}",
+                    "unsupported": True}
+        pairs.append(got)
+    f32s = [p[0] for p in pairs]
+    b16s = [p[1] for p in pairs]
+    speedups = [f / b for f, b in pairs]
+    lo, hi = bootstrap_ci(speedups)
+    return {"workload": f"mp_engine_bf16_vs_f32_n{n}",
+            "n": n, "m": m, "reps": reps, "inner": inner,
+            "unsupported": False,
+            "f32_us": f32s, "bf16_us": b16s,
+            "speedup_min": min(f32s) / min(b16s),
+            "speedup_mean": float(np.mean(speedups)),
+            "speedup_ci95": [lo, hi]}
+
+
 def checkout_baseline(ref: str, tmpdir: str) -> str:
     """Materialize `ref` as a detached git worktree; returns its src/."""
     dest = os.path.join(tmpdir, "baseline")
@@ -256,6 +339,8 @@ def main(argv=None) -> None:
         result["fleet"] = run_fleet_pinned(base_src, cand_src,
                                            reps=args.reps, inner=args.inner)
         result["baseline"] = args.baseline_path
+    # candidate-only arm-vs-arm workload (both dtypes share this checkout)
+    result["precision"] = run_precision_pinned(cand_src)
     result["wall_s"] = time.perf_counter() - t0
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -5,10 +5,13 @@ from repro.core import analytics  # noqa: F401
 from repro.core.fleet import StreamingFleet  # noqa: F401
 from repro.core.matrix_profile import (  # noqa: F401
     ProfileState, TopKState, ab_join, batch_ab_join, batch_profile,
-    matrix_profile, matrix_profile_nonnorm, top_discords, top_motif,
+    matrix_profile, top_discords, top_motif,
 )
 from repro.core.plan import (  # noqa: F401
     SweepPlan, SweepResult, execute, plan_sweep, round_executor,
+)
+from repro.core.precision import (  # noqa: F401
+    DEFAULT_PRECISION, PrecisionSpec, as_precision,
 )
 from repro.core.result import HarvestSpec, ProfileResult  # noqa: F401
 from repro.core.zstats import (  # noqa: F401
@@ -20,7 +23,9 @@ from repro.core.zstats import (  # noqa: F401
 # deliberate (extend the snapshot), removals/renames are breaking.
 __all__ = [
     "CrossStats",
+    "DEFAULT_PRECISION",
     "HarvestSpec",
+    "PrecisionSpec",
     "ProfileResult",
     "ProfileState",
     "StreamingFleet",
@@ -30,16 +35,16 @@ __all__ = [
     "ZStats",
     "ab_join",
     "analytics",
+    "as_precision",
     "batch_ab_join",
     "batch_profile",
     "compute_cross_stats_host",
     "compute_stats",
     "corr_to_dist",
     "execute",
+    # matrix_profile_nonnorm (deprecated shim) removed this release —
+    # matrix_profile(..., normalize=False) is the one nonnorm entry
     "matrix_profile",
-    # matrix_profile_nonnorm stays importable as a deprecated shim but is
-    # no longer public surface — collapsed into matrix_profile(...,
-    # normalize=False)
     "plan_sweep",
     "round_executor",
     "self_cross",

@@ -64,7 +64,12 @@ def worker_chunk(stats: ZStats, k0: jax.Array, k1: jax.Array,
                  reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
     """Two-sided harvest over band-aligned diagonals [k0, k1), <= n_bands
     bands. Both the row and the column updates of every swept cell land in
-    the returned state."""
+    the returned state.
+
+    Precision: worker chunks run the band engine's pinned-f32 accumulation
+    path (no `accum_dtype` override) — `plan_sweep` rejects any non-f32
+    accum for the distributed backend, so the pmap'd bodies stay a single
+    compiled specialization per geometry."""
     l = stats.n_subsequences
     wc = centered_windows(stats) if reseed_every is not None else None
 

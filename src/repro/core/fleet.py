@@ -69,11 +69,15 @@ _DTYPES = dict(buf=np.float64, cnt=np.int32, wk=np.float64, aux=np.float64,
 
 @lru_cache(maxsize=32)
 def _build_update(window: int, exclusion: int, capacity: int,
-                  normalize: bool):
-    """Jitted multi-round fleet update for one (m, excl, cap, normalize)
-    config — cached at module level so many fleets (tests!) share traces.
-    Returns run(state_tuple, vmat (R, N) f64, amat (R, N) bool) -> state.
-    Call ONLY under `zstats.x64_scope()` (state is f64 end to end)."""
+                  normalize: bool, stream: str = "float64"):
+    """Jitted multi-round fleet update for one (m, excl, cap, normalize,
+    stream) config — cached at module level so many fleets (tests!) share
+    traces. Returns run(state_tuple, vmat (R, N) f64, amat (R, N) bool)
+    -> state. Call ONLY under `zstats.x64_scope()` (accumulation is f64
+    end to end; `stream` is the dtype the cached-window stack `wk`
+    arrives/persists in — the plan-time stream precision. Reduced `wk`
+    is upcast to f64 right before the distance kernels, the fleet
+    analogue of the Pallas kernel's post-VMEM-load upcast)."""
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -122,16 +126,17 @@ def _build_update(window: int, exclusion: int, capacity: int,
         start = jnp.clip(j, 0, cap - m)
         w = buf[rows[:, None], start[:, None] + jnp.arange(m)[None, :]]
         okj = zstats.window_finite_mask(w[:, None])[:, 0]     # (N,)
+        wkf = wk.astype(jnp.float64)       # no-op at the default precision
         if normalize:
             wkj, auxj = zstats.centered_block(w[:, None])  # (N,1,m),(N,1)
             d2 = zstats.sqdist_znorm_from_parts(
-                wkj, auxj, wk, aux, window=m)[:, 0]           # (N, lcap)
+                wkj, auxj, wkf, aux, window=m)[:, 0]          # (N, lcap)
         else:
             wkj = w[:, None]
             auxj = zstats.window_sumsq(wkj)
             d2 = zstats.sqdist_nonnorm_from_parts(wkj, auxj,
-                                                  wk, aux)[:, 0]
-        wk_n = wk.at[rows, sj].set(wkj[:, 0])
+                                                  wkf, aux)[:, 0]
+        wk_n = wk.at[rows, sj].set(wkj[:, 0].astype(jnp.dtype(stream)))
         aux_n = aux.at[rows, sj].set(auxj[:, 0])
         ok_n = ok.at[rows, sj].set(okj)
         # admissible: col <= j - excl (also excludes stale post-restart
@@ -185,7 +190,10 @@ class StreamingFleet:
     semantics)."""
 
     def __init__(self, n: int, window: int, capacity: int,
-                 exclusion: int | None = None, normalize: bool = True):
+                 exclusion: int | None = None, normalize: bool = True,
+                 precision=None):
+        from repro.core.precision import as_precision
+
         if int(window) < 2:
             raise ValueError(f"window must be >= 2, got {window}")
         if int(capacity) < int(window):
@@ -198,9 +206,26 @@ class StreamingFleet:
         self.capacity = int(capacity)
         self.excl = max(1, self.m // 4) if exclusion is None else int(exclusion)
         self.normalize = bool(normalize)
+        # only the `stream` role applies here: it is the dtype of the
+        # O(N*lcap*m) cached-window stack `wk` — the fleet's dominant HBM
+        # resident. Accumulation stays f64 (the fleet's exactness
+        # contract); the default spec keeps wk f64, bitwise as before.
+        self.precision = as_precision(precision)
+        if self.precision.reduced_stream and not self.normalize:
+            raise ValueError(
+                "reduced stream precision requires normalize=True: raw "
+                "window distances have no [-1, 1] bound to absorb the "
+                "stream rounding (see PrecisionSpec)")
         self.lcap = self.capacity - self.m + 1
         self._ingests = 0
         self._state = self._init_state(self.n)
+
+    @property
+    def _wk_stream(self) -> str:
+        """wk storage dtype name: the plan-time stream precision when
+        reduced, else the fleet's historical f64."""
+        return (self.precision.stream if self.precision.reduced_stream
+                else "float64")
 
     # -- state plumbing ------------------------------------------------------
 
@@ -230,11 +255,18 @@ class StreamingFleet:
         from repro.core import zstats
 
         with zstats.x64_scope():
-            return tuple(jnp.asarray(np.asarray(host[f], _DTYPES[f]))
-                         for f in _FIELDS)
+            # wk alone may live reduced on device; the host mirror (and
+            # every checkpoint) is canonical f64, so restores work across
+            # precisions and reduced values round-trip exactly
+            return tuple(
+                jnp.asarray(np.asarray(host[f], _DTYPES[f]))
+                .astype(jnp.dtype(self._wk_stream)) if f == "wk"
+                else jnp.asarray(np.asarray(host[f], _DTYPES[f]))
+                for f in _FIELDS)
 
     def _to_host(self) -> dict:
-        return {f: np.asarray(a) for f, a in zip(_FIELDS, self._state)}
+        return {f: np.asarray(a).astype(np.float64) if f == "wk"
+                else np.asarray(a) for f, a in zip(_FIELDS, self._state)}
 
     # -- ingestion -----------------------------------------------------------
 
@@ -276,7 +308,8 @@ class StreamingFleet:
         amat = np.zeros((rpad, self.n), np.bool_)
         vmat[rounds, st] = sv
         amat[rounds, st] = True
-        run = _build_update(self.m, self.excl, self.capacity, self.normalize)
+        run = _build_update(self.m, self.excl, self.capacity, self.normalize,
+                            self._wk_stream)
         import jax.numpy as jnp
         with zstats.x64_scope():
             self._state = run(self._state, jnp.asarray(vmat),
@@ -341,7 +374,7 @@ class StreamingFleet:
 
         meta = dict(n=self.n, window=self.m, capacity=self.capacity,
                     exclusion=self.excl, normalize=self.normalize,
-                    ingests=self._ingests)
+                    ingests=self._ingests, stream=self._wk_stream)
         return ckpt.save(directory, step=self._ingests, tree=self._to_host(),
                          keep=keep, metadata=meta, injector=injector)
 
@@ -352,12 +385,17 @@ class StreamingFleet:
         `ckpt.restore` caller. Returns (fleet, step)."""
         from repro.checkpoint import ckpt
 
+        from repro.core.precision import PrecisionSpec
+
         tree_like = {f: np.zeros((), _DTYPES[f]) for f in _FIELDS}
         tree, got, meta = ckpt.restore(directory, tree_like, step=step)
+        stream = str(meta.get("stream", "float64"))
+        prec = (PrecisionSpec(stream=stream)
+                if stream not in ("float32", "float64") else None)
         fleet = cls(n=int(meta["n"]), window=int(meta["window"]),
                     capacity=int(meta["capacity"]),
                     exclusion=int(meta["exclusion"]),
-                    normalize=bool(meta["normalize"]))
+                    normalize=bool(meta["normalize"]), precision=prec)
         fleet._ingests = int(meta["ingests"])
         fleet._state = fleet._to_device({f: np.asarray(tree[f])
                                          for f in _FIELDS})

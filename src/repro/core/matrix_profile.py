@@ -46,12 +46,13 @@ NEG = -2.0  # corr lives in [-1, 1]; NEG marks "not yet computed"
 class ProfileState:
     """Running anytime profile in correlation space (max corr == min dist)."""
 
-    corr: jax.Array   # (l,) f32 running max correlation
+    corr: jax.Array   # (l,) running max correlation (accum dtype, f32 default)
     index: jax.Array  # (l,) i32 argmax position j (or -1)
 
     @classmethod
-    def empty(cls, l: int, fill: float = NEG) -> "ProfileState":
-        return cls(corr=jnp.full((l,), fill, jnp.float32),
+    def empty(cls, l: int, fill: float = NEG,
+              dtype=jnp.float32) -> "ProfileState":
+        return cls(corr=jnp.full((l,), fill, dtype),
                    index=jnp.full((l,), -1, jnp.int32))
 
     def merge(self, other: "ProfileState") -> "ProfileState":
@@ -98,12 +99,13 @@ class TopKState:
     masked all-NEG windows merge as no-ops.
     """
 
-    corr: jax.Array    # (L, k) f32, best-first along the last axis
+    corr: jax.Array    # (L, k) accum dtype, best-first along the last axis
     index: jax.Array   # (L, k) i32 neighbor (or -1)
 
     @classmethod
-    def empty(cls, l: int, k: int, fill: float = NEG) -> "TopKState":
-        return cls(corr=jnp.full((l, k), fill, jnp.float32),
+    def empty(cls, l: int, k: int, fill: float = NEG,
+              dtype=jnp.float32) -> "TopKState":
+        return cls(corr=jnp.full((l, k), fill, dtype),
                    index=jnp.full((l, k), -1, jnp.int32))
 
     @property
@@ -196,7 +198,7 @@ def _col_window(corr: jax.Array, fill: float) -> tuple[jax.Array, jax.Array]:
     win, d_win = _row_harvest(skew)
     win_i = (jnp.arange(W) - d_win).astype(jnp.int32)  # i = t - d_best
     win_i = jnp.where(win > fill, win_i, -1)
-    return win.astype(jnp.float32), win_i
+    return win, win_i
 
 
 @jax.tree_util.register_dataclass
@@ -218,9 +220,9 @@ class ColState:
 
     @classmethod
     def empty(cls, pad_left: int, l_out: int, pad_right: int,
-              fill: float = NEG) -> "ColState":
+              fill: float = NEG, dtype=jnp.float32) -> "ColState":
         n = pad_left + l_out + pad_right
-        return cls(corr=jnp.full((n,), fill, jnp.float32),
+        return cls(corr=jnp.full((n,), fill, dtype),
                    index=jnp.full((n,), -1, jnp.int32))
 
     def merge_window(self, win: jax.Array, win_i: jax.Array,
@@ -259,13 +261,13 @@ class BankedColState:
 
     @classmethod
     def empty(cls, flat_len: int, width: int, w_max: int,
-              fill: float = NEG) -> "BankedColState":
+              fill: float = NEG, dtype=jnp.float32) -> "BankedColState":
         if width <= w_max:
             raise ValueError(f"bank width {width} must exceed the merge "
                              f"window bound {w_max}")
         stride = width - w_max
         n_banks = max(1, max(flat_len - w_max, 0) // stride + 1)
-        return cls(corr=jnp.full((n_banks, width), fill, jnp.float32),
+        return cls(corr=jnp.full((n_banks, width), fill, dtype),
                    index=jnp.full((n_banks, width), -1, jnp.int32),
                    stride=stride)
 
@@ -288,7 +290,7 @@ class BankedColState:
     def to_flat(self, flat_len: int,
                 fill: float = NEG) -> tuple[jax.Array, jax.Array]:
         n_banks, width = self.corr.shape
-        flat_c = jnp.full((flat_len,), fill, jnp.float32)
+        flat_c = jnp.full((flat_len,), fill, self.corr.dtype)
         flat_i = jnp.full((flat_len,), -1, jnp.int32)
         for b in range(n_banks):
             s = b * self.stride
@@ -315,7 +317,8 @@ jax.tree_util.register_dataclass(BankedColState,
 
 def _band_corr(stats: ZStats, k0, band: int,
                reseed_every: int | None = None,
-               windows_c: jax.Array | None = None) -> jax.Array:
+               windows_c: jax.Array | None = None,
+               accum_dtype=jnp.float32) -> jax.Array:
     """The (D, l) correlation tile of the diagonal band [k0, k0+band) —
     the shared substrate of `band_rowmax` (k = 1 harvest) and `band_topk`
     (top-k harvest). Invalid cells (j >= l) are masked to NEG.
@@ -327,18 +330,25 @@ def _band_corr(stats: ZStats, k0, band: int,
     solves the same drift with fp64, which the TPU VPU does not have.
     """
     l = stats.n_subsequences
+    acc = jnp.dtype(accum_dtype)
     ks = k0 + jnp.arange(band)                     # (D,)
     i = jnp.arange(l)                              # (l,)
     j = i[None, :] + ks[:, None]                   # (D, l)
     jc = jnp.minimum(j, l - 1)                     # clamp for gathers
     valid = j < l
 
-    dfj = jnp.take(stats.df, jc)
-    dgj = jnp.take(stats.dg, jc)
-    invnj = jnp.take(stats.invn, jc)
-    cov0b = jnp.take(stats.cov0, jnp.minimum(ks, l - 1))
+    # streams arrive in the plan's (possibly reduced) stream dtype; every
+    # product/cumsum below runs in the accum dtype (no-op upcast when both
+    # are f32 — the default path is bitwise-unchanged)
+    dfa = stats.df.astype(acc)
+    dga = stats.dg.astype(acc)
+    invna = stats.invn.astype(acc)
+    dfj = jnp.take(dfa, jc)
+    dgj = jnp.take(dga, jc)
+    invnj = jnp.take(invna, jc)
+    cov0b = jnp.take(stats.cov0.astype(acc), jnp.minimum(ks, l - 1))
 
-    delta = stats.df[None, :] * dgj + dfj * stats.dg[None, :]
+    delta = dfa[None, :] * dgj + dfj * dga[None, :]
     delta = jnp.where(valid & (i[None, :] >= 1), delta, 0.0)
     cov = cov0b[:, None] + jnp.cumsum(delta, axis=1)
 
@@ -357,18 +367,19 @@ def _band_corr(stats: ZStats, k0, band: int,
         seg = jnp.minimum(i // R, n_seg - 1)                      # (l,)
         cov = cov + jnp.take(drift, seg, axis=1)
 
-    corr = cov * stats.invn[None, :] * invnj
+    corr = cov * invna[None, :] * invnj
     # invn < 0 is the missing-data sentinel (zstats): pairs touching a
     # masked subsequence are excluded like out-of-range cells. Applied only
     # HERE, never to the delta mask — the cumsum recurrence must still pass
     # through masked cells to reach later valid cells on the diagonal.
-    keep = valid & (stats.invn >= 0)[None, :] & (invnj >= 0)
-    return jnp.where(keep, corr, NEG)
+    keep = valid & (invna >= 0)[None, :] & (invnj >= 0)
+    return jnp.where(keep, corr, jnp.asarray(NEG, acc))
 
 
 def band_rowmax(stats: ZStats, k0, band: int, *,
                 reseed_every: int | None = None,
-                windows_c: jax.Array | None = None
+                windows_c: jax.Array | None = None,
+                accum_dtype=jnp.float32
                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Two-sided harvest of the diagonal band [k0, k0+band).
 
@@ -381,13 +392,13 @@ def band_rowmax(stats: ZStats, k0, band: int, *,
     traced (dynamic), `band` is static. Diagonals >= l contribute nothing.
     """
     l = stats.n_subsequences
-    corr = _band_corr(stats, k0, band, reseed_every, windows_c)
+    corr = _band_corr(stats, k0, band, reseed_every, windows_c, accum_dtype)
     i = jnp.arange(l)
     corr_best, d_win = _row_harvest(corr)
     idx_best = (i + k0 + d_win).astype(jnp.int32)
     idx_best = jnp.where(corr_best > NEG, idx_best, -1)
     win, win_i = _col_window(corr, NEG)
-    return corr_best.astype(jnp.float32), idx_best, win, win_i
+    return corr_best, idx_best, win, win_i
 
 
 def _topk_rows(tile: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
@@ -411,24 +422,25 @@ def _topk_col_window(corr: jax.Array, k: int,
     win, d_win = _topk_rows(skew, k)
     win_i = (jnp.arange(W)[:, None] - d_win).astype(jnp.int32)
     win_i = jnp.where(win > fill, win_i, -1)
-    return win.astype(jnp.float32), win_i
+    return win, win_i
 
 
 def band_topk(stats: ZStats, k0, band: int, k: int, *,
               reseed_every: int | None = None,
-              windows_c: jax.Array | None = None
+              windows_c: jax.Array | None = None,
+              accum_dtype=jnp.float32
               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """`band_rowmax` widened to exact top-k: (row (l, k), row_idx, win
     ((l+band, k)), win_i) off the same correlation tile. Within one tile a
     position's candidates live on distinct diagonals, so the per-tile top-k
     is exact and the cross-band `TopKState` union stays exact."""
     l = stats.n_subsequences
-    corr = _band_corr(stats, k0, band, reseed_every, windows_c)
+    corr = _band_corr(stats, k0, band, reseed_every, windows_c, accum_dtype)
     vals, d = _topk_rows(corr, k)
     idx = (jnp.arange(l)[:, None] + k0 + d).astype(jnp.int32)
     idx = jnp.where(vals > NEG, idx, -1)
     win, win_i = _topk_col_window(corr, k)
-    return vals.astype(jnp.float32), idx, win, win_i
+    return vals, idx, win, win_i
 
 
 DEFAULT_RESEED = 512
@@ -439,7 +451,8 @@ DEFAULT_BAND = 256
 
 
 def chunk_rowmax_split(stats: ZStats, k0, k1_static: int, band: int,
-                       reseed_every: int | None = DEFAULT_RESEED
+                       reseed_every: int | None = DEFAULT_RESEED,
+                       accum_dtype=jnp.float32
                        ) -> tuple[ProfileState, ProfileState]:
     """Two-sided harvest over diagonals [k0, k1) with the sides kept
     SEPARATE — (row_state, col_profile): the row harvest is the RIGHT
@@ -452,8 +465,12 @@ def chunk_rowmax_split(stats: ZStats, k0, k1_static: int, band: int,
     update the chunk's cells imply (no reversed pass owed).
     """
     l = stats.n_subsequences
+    acc = jnp.dtype(accum_dtype)
     n_bands = -(-k1_static // band)
-    wc = centered_windows(stats) if reseed_every is not None else None
+    # reseed seeds accumulate m-term dots: upcast the (possibly reduced)
+    # centered windows to the accum dtype before the einsum
+    wc = (centered_windows(stats).astype(acc)
+          if reseed_every is not None else None)
     # self-join diagonals are non-negative: no left pad; the right pad
     # absorbs the last window (start <= l-1) and overshooting all-fill bands
     pad_r = l + band
@@ -462,51 +479,61 @@ def chunk_rowmax_split(stats: ZStats, k0, k1_static: int, band: int,
         state, col = carry
         start = k0 + b * band
         rc, ri, win, wi = band_rowmax(stats, start, band,
-                                      reseed_every=reseed_every, windows_c=wc)
+                                      reseed_every=reseed_every, windows_c=wc,
+                                      accum_dtype=acc)
         state = state.merge(ProfileState(rc, ri))
         col = col.merge_window(win, wi, start)
         return (state, col), None
 
-    init = (ProfileState.empty(l), ColState.empty(0, l, pad_r))
+    init = (ProfileState.empty(l, dtype=acc),
+            ColState.empty(0, l, pad_r, dtype=acc))
     (state, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
     return state, col.to_profile(0, l)
 
 
 def chunk_rowmax(stats: ZStats, k0, k1_static: int, band: int,
-                 reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
+                 reseed_every: int | None = DEFAULT_RESEED,
+                 accum_dtype=jnp.float32) -> ProfileState:
     """Merged two-sided profile over diagonals [k0, k1) — the anytime unit
     of work (`chunk_rowmax_split` with the sides folded back together)."""
-    rows, col = chunk_rowmax_split(stats, k0, k1_static, band, reseed_every)
+    rows, col = chunk_rowmax_split(stats, k0, k1_static, band, reseed_every,
+                                   accum_dtype)
     return rows.merge(col)
 
 
 def chunk_topk(stats: ZStats, k0, k1_static: int, band: int, k: int,
-               reseed_every: int | None = DEFAULT_RESEED
-               ) -> tuple[TopKState, TopKState]:
+               reseed_every: int | None = DEFAULT_RESEED,
+               accum_dtype=jnp.float32) -> tuple[TopKState, TopKState]:
     """Top-k analogue of `chunk_rowmax_split`: (right (l, k), left (l, k))
     exact best-first neighbor sets over diagonals [k0, k1)."""
     l = stats.n_subsequences
+    acc = jnp.dtype(accum_dtype)
     n_bands = -(-k1_static // band)
-    wc = centered_windows(stats) if reseed_every is not None else None
+    wc = (centered_windows(stats).astype(acc)
+          if reseed_every is not None else None)
 
     def body(carry, b):
         rows, col = carry
         start = k0 + b * band
         rc, ri, win, wi = band_topk(stats, start, band, k,
-                                    reseed_every=reseed_every, windows_c=wc)
+                                    reseed_every=reseed_every, windows_c=wc,
+                                    accum_dtype=acc)
         rows = rows.merge(TopKState(rc, ri))
         col = col.merge_window(win, wi, start)
         return (rows, col), None
 
-    init = (TopKState.empty(l, k), TopKState.empty(2 * l + band, k))
+    init = (TopKState.empty(l, k, dtype=acc),
+            TopKState.empty(2 * l + band, k, dtype=acc))
     (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
     return rows, col.to_state(0, l)
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3))
+@partial(jax.jit, static_argnums=(1, 2, 3),
+         static_argnames=("accum_dtype",))
 def profile_from_stats(stats: ZStats, exclusion: int,
                        band: int = DEFAULT_BAND,
-                       reseed_every: int | None = DEFAULT_RESEED) -> SplitProfile:
+                       reseed_every: int | None = DEFAULT_RESEED, *,
+                       accum_dtype: str = "float32") -> SplitProfile:
     """Jitted exact-profile core: ONE streamed sweep of k in [excl, l).
 
     Each cell (i, j) of the upper triangle updates both P[i] (row harvest)
@@ -520,15 +547,18 @@ def profile_from_stats(stats: ZStats, exclusion: int,
     l = stats.n_subsequences
     span = l - exclusion
     rows, col = chunk_rowmax_split(stats, jnp.int32(exclusion), span, band,
-                                   reseed_every)
+                                   reseed_every, accum_dtype)
     return SplitProfile(merged=rows.merge(col), right=rows, left=col)
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@partial(jax.jit, static_argnums=(1, 2, 3, 4),
+         static_argnames=("accum_dtype",))
 def profile_topk_from_stats(stats: ZStats, exclusion: int,
                             band: int = DEFAULT_BAND,
                             reseed_every: int | None = DEFAULT_RESEED,
-                            k: int = 4) -> tuple[TopKState, TopKState, TopKState]:
+                            k: int = 4, *,
+                            accum_dtype: str = "float32"
+                            ) -> tuple[TopKState, TopKState, TopKState]:
     """Jitted exact top-k self-join core -> (merged, right, left) `(l, k)`
     best-first neighbor sets from the same single sweep. Slot 0 of `merged`
     carries the same VALUES as the k = 1 profile (max == top-1); with
@@ -540,15 +570,131 @@ def profile_topk_from_stats(stats: ZStats, exclusion: int,
     l = stats.n_subsequences
     span = l - exclusion
     rows, col = chunk_topk(stats, jnp.int32(exclusion), span, band, k,
-                           reseed_every)
+                           reseed_every, accum_dtype)
     return rows.merge(col), rows, col
+
+
+# Matmul-tile edge for the reduced-precision sweep: 512 reduced-dtype window
+# rows per GEMM operand measured fastest at n = 16384 on XLA CPU (256 and
+# 1024 within ~10%); any positive edge is valid, multiples of 128 keep the
+# operands lane-aligned on TPU.
+TILE_EDGE = 512
+
+
+@partial(jax.jit, static_argnums=(1,),
+         static_argnames=("tile", "stream_dtype", "accum_dtype"))
+def tile_profile_from_stats(stats: ZStats, exclusion: int, *,
+                            tile: int = TILE_EDGE,
+                            stream_dtype: str = "bfloat16",
+                            accum_dtype: str = "float32") -> SplitProfile:
+    """Reduced-precision self-join sweep: QT by blocked GEMM, no recurrence.
+
+    The diagonal O(1)-update recurrence exists to avoid the 2m FLOPs of a
+    direct dot per cell — the right trade at f32, where bytes and FLOPs are
+    both scarce. Under a 16-bit stream the trade flips the NATSA way: FLOPs
+    are abundant (reduced-dtype GEMM throughput) while bytes stay scarce, so
+    this path computes every QT(i, j) tile DIRECTLY as a (tile, m) x
+    (m, tile) product of reduced-dtype centered windows with wide
+    accumulation (`preferred_element_type`). What that buys over threading
+    bf16 through the recurrence:
+
+      * NO drift — each cell is one m-term dot in the accum dtype, so the
+        error bound is the closed-form `precision.corr_tolerance` (absolute,
+        by Cauchy-Schwarz), with no O(diagonal-length) growth and none of
+        the reseed machinery (`reseed_every` does not apply here);
+      * the streamed traffic is the (l, m) centered-window matrix in the
+        stream dtype — half the f32 bytes at bf16, which is the entire
+        NATSA thesis applied at the dtype level;
+      * measured ~2.9x the f32 band engine on the n = 16384 CI sweep (the
+        `mp_engine_bf16_n16384` bench row gates >= 1.5x).
+
+    Harvests both sides of each upper-triangle (r, c) tile pair — the row
+    max is the RIGHT profile, the column max the LEFT — merged into running
+    (l,) states at static offsets, so the output `SplitProfile` is
+    interchangeable with `profile_from_stats`'s. Windows are centered at
+    the stats' full precision FIRST and rounded once to the stream dtype
+    (rounding raw ts would scale the error by the series level, not the
+    window deviation). Missing-data (invn < 0) and flat-window (invn = 0)
+    conventions are inherited unchanged; tile padding reuses the invn = -1
+    sentinel so padded rows can never be selected.
+    """
+    import numpy as np
+
+    acc = jnp.dtype(accum_dtype)
+    sdt = jnp.dtype(stream_dtype)
+    m = stats.window
+    l = stats.n_subsequences
+    excl = int(exclusion)
+    neg = jnp.asarray(NEG, acc)
+
+    wc = centered_windows(stats).astype(sdt)         # (l, m) streamed reduced
+    invn = stats.invn.astype(acc)                    # O(l), stays wide
+
+    nt = -(-l // tile)
+    lp = nt * tile
+    wcp = jnp.zeros((lp, m), sdt).at[:l].set(wc)
+    invp = jnp.full((lp,), -1.0, acc).at[:l].set(invn)
+    # upper-triangle tile pairs, row-major — trace-time schedule
+    pairs = jnp.asarray([(r, c) for r in range(nt) for c in range(r, nt)],
+                        jnp.int32)
+    la = jnp.arange(tile, dtype=jnp.int32)
+    del np
+
+    def merge_at(prof_c, prof_i, vals, idxs, off):
+        seg_c = jax.lax.dynamic_slice(prof_c, (off,), (tile,))
+        seg_i = jax.lax.dynamic_slice(prof_i, (off,), (tile,))
+        take = vals > seg_c
+        return (jax.lax.dynamic_update_slice(
+                    prof_c, jnp.where(take, vals, seg_c), (off,)),
+                jax.lax.dynamic_update_slice(
+                    prof_i, jnp.where(take, idxs, seg_i), (off,)))
+
+    def body(carry, pair):
+        rc_, ri_, cc_, ci_ = carry
+        i0 = pair[0] * tile
+        j0 = pair[1] * tile
+        # literal 0 would promote to int64 under an x64 scope — indices to
+        # dynamic_slice must share one integer type
+        z = jnp.zeros((), i0.dtype)
+        a = jax.lax.dynamic_slice(wcp, (i0, z), (tile, m))
+        b = jax.lax.dynamic_slice(wcp, (j0, z), (tile, m))
+        ia = jax.lax.dynamic_slice(invp, (i0,), (tile,))
+        ib = jax.lax.dynamic_slice(invp, (j0,), (tile,))
+        qt = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=acc)
+        corr = qt * ia[:, None] * ib[None, :]
+        ig = i0 + la
+        jg = j0 + la
+        ok = ((jg[None, :] - ig[:, None]) >= excl) \
+            & (ia[:, None] >= 0) & (ib[None, :] >= 0)
+        corr = jnp.where(ok, corr, neg)
+        # plain max + equality-recovered arg, as everywhere in this engine
+        rbest = jnp.max(corr, axis=1)
+        rarg = jnp.max(jnp.where(corr == rbest[:, None], jg[None, :], -1),
+                       axis=1)
+        rarg = jnp.where(rbest > neg, rarg, -1).astype(jnp.int32)
+        cbest = jnp.max(corr, axis=0)
+        carg = jnp.max(jnp.where(corr == cbest[None, :], ig[:, None], -1),
+                       axis=0)
+        carg = jnp.where(cbest > neg, carg, -1).astype(jnp.int32)
+        rc_, ri_ = merge_at(rc_, ri_, rbest, rarg, i0)
+        cc_, ci_ = merge_at(cc_, ci_, cbest, carg, j0)
+        return (rc_, ri_, cc_, ci_), None
+
+    init = (jnp.full((lp,), NEG, acc), jnp.full((lp,), -1, jnp.int32),
+            jnp.full((lp,), NEG, acc), jnp.full((lp,), -1, jnp.int32))
+    (rc_, ri_, cc_, ci_), _ = jax.lax.scan(body, init, pairs)
+    rows = ProfileState(rc_[:l], ri_[:l])
+    col = ProfileState(cc_[:l], ci_[:l])
+    return SplitProfile(merged=rows.merge(col), right=rows, left=col)
 
 
 def matrix_profile(ts, window: int, exclusion: int | None = None,
                    band: int = DEFAULT_BAND,
                    reseed_every: int | None = DEFAULT_RESEED, *,
                    k: int = 1, harvest: str = "merged",
-                   normalize: bool = True) -> "ProfileResult":
+                   normalize: bool = True,
+                   precision=None) -> "ProfileResult":
     """Full exact matrix profile -> `ProfileResult`.
 
     `result.p` / `result.i` are the classic merged profile (bit-identical
@@ -560,17 +706,24 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
     `(l, k)` top-k neighbor sets ride along in `result.topk_p/topk_i`.
 
     `normalize=False` selects plain euclidean distances (the ONE entry
-    point for both modes — `matrix_profile_nonnorm` is a deprecated alias):
+    point for both modes since the `matrix_profile_nonnorm` alias retired):
     same `ProfileResult`, nonnorm self-join plan underneath. The nonnorm
     sweep requires finite samples, ignores `reseed_every` (its recurrence
     reseeds implicitly), and supports only `k=1`.
 
+    `precision` — None, a preset name ("bf16", "f16", "f64"), or a
+    `PrecisionSpec` — selects the stream/accumulator dtype policy; it is
+    FROZEN into the plan (see core.precision). The default reproduces the
+    all-f32 pipeline bitwise; "bf16" halves the streamed bytes per cell and
+    switches the sweep to the recurrence-free dot-product tile path.
+
     Thin entry: builds a `SweepPlan` (core.plan) and runs it through the
-    executor — the band-engine choice, exclusion default, and harvest wiring
-    all live in the planner. Stream precompute happens host-side in f64 (see
-    zstats.compute_stats_host — f32 cancellation is catastrophic on offset
-    data); the O(l^2) diagonal engine runs on device in f32, touching each
-    upper-triangle cell once and harvesting both profile sides from it.
+    executor — the band-engine choice, exclusion default, harvest wiring and
+    precision policy all live in the planner. Stream precompute happens
+    host-side in f64 (see zstats.compute_stats_host — f32 cancellation is
+    catastrophic on offset data); the O(l^2) diagonal engine runs on device
+    streaming the plan's stream dtype, touching each upper-triangle cell
+    once and harvesting both profile sides from it.
     """
     from repro.core import plan as plan_mod
     from repro.core.result import build_result
@@ -582,17 +735,18 @@ def matrix_profile(ts, window: int, exclusion: int | None = None,
         if k != 1:
             raise ValueError(f"normalize=False supports only k=1, got k={k}")
         validate_series(ts, m, require_finite=True)
-        arr = jnp.asarray(ts, jnp.float32)
-        plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1,
+        plan = plan_mod.plan_sweep(m, jnp.asarray(ts).shape[0] - m + 1,
                                    exclusion=exclusion, normalize=False,
-                                   band=band, harvest=harvest)
+                                   band=band, harvest=harvest,
+                                   precision=precision)
+        arr = jnp.asarray(ts, plan.precision.stream_dtype)
         res = plan_mod.execute(plan, arr)
         return build_result(plan, res, arr)
     arr = validate_series(ts, m)
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
                                band=band, reseed_every=reseed_every, k=k,
-                               harvest=harvest)
-    stats = compute_stats_host(arr, m)
+                               harvest=harvest, precision=precision)
+    stats = compute_stats_host(arr, m, **plan_mod.stats_dtypes_for(plan))
     res = plan_mod.execute(plan, stats)
     return build_result(plan, res, stats)
 
@@ -680,10 +834,15 @@ def _band_corr_ab(cross: CrossStats, k0, band: int, *,
                   k_hi=None, reseed_every: int | None = None,
                   wa: jax.Array | None = None,
                   wb: jax.Array | None = None, clamp_rows: bool = True,
-                  padded=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+                  padded=None, accum_dtype=jnp.float32
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """The (D, li) correlation tile of signed diagonals [k0, k0+band) of the
     AB rectangle, row-clamped — the shared substrate of `band_rowmax_ab`
-    and `band_topk_ab`. Returns (corr, i (li,) absolute A rows, i0)."""
+    and `band_topk_ab`. Returns (corr, i (li,) absolute A rows, i0).
+    Streams arrive in the stats' (possibly reduced) dtype and are upcast to
+    `accum_dtype` right after the slice loads, so the cumsum recurrence and
+    harvest comparisons always run wide."""
+    acc = jnp.dtype(accum_dtype)
     sa, sb = cross.a, cross.b
     la, lb = sa.n_subsequences, sb.n_subsequences
     li = ab_row_tile(la, lb, band) if clamp_rows else la
@@ -701,7 +860,7 @@ def _band_corr_ab(cross: CrossStats, k0, band: int, *,
         valid = valid & (ks < k_hi)[:, None]
 
     def row(x):                                    # (li,) contiguous A slice
-        return jax.lax.dynamic_slice(x, (i0,), (li,))
+        return jax.lax.dynamic_slice(x, (i0,), (li,)).astype(acc)
 
     dfi, dgi, invni = row(dfa_p), row(dga_p), row(invna_p)
 
@@ -709,10 +868,12 @@ def _band_corr_ab(cross: CrossStats, k0, band: int, *,
     W = li + band
 
     def strips(x):                                 # (D, li) skewed B windows
-        return _unskew(jax.lax.dynamic_slice(x, (off,), (W,)), band, li)
+        return _unskew(jax.lax.dynamic_slice(x, (off,), (W,)),
+                       band, li).astype(acc)
 
     dfj, dgj, invnj = strips(dfb_p), strips(dgb_p), strips(invnb_p)
-    cov0b = jnp.take(cross.cov0s, jnp.clip(ks + la - 1, 0, la + lb - 2))
+    cov0b = jnp.take(cross.cov0s.astype(acc),
+                     jnp.clip(ks + la - 1, 0, la + lb - 2))
 
     delta = dfi[None, :] * dgj + dfj * dgi[None, :]
     # predecessor cell (i-1, j-1) must exist; before a negative diagonal's
@@ -734,8 +895,8 @@ def _band_corr_ab(cross: CrossStats, k0, band: int, *,
         rows_c = jnp.minimum(rows_abs, la - 1)
         jrow = rows_abs[None, :] + ks[:, None]                    # (D, S)
         jr = jnp.clip(jrow, 0, lb - 1)
-        w_r = wa[rows_c]                                          # (S, m)
-        w_j = wb[jr]                                              # (D, S, m)
+        w_r = wa[rows_c].astype(acc)                              # (S, m)
+        w_j = wb[jr].astype(acc)                                  # (D, S, m)
         seeds = jnp.einsum("sm,dsm->ds", w_r, w_j)                # (D, S)
         drift = seeds - jnp.take(cov, rows_rel, axis=1)           # (D, S)
         # segments whose start cell is outside the rectangle keep the raw
@@ -750,14 +911,15 @@ def _band_corr_ab(cross: CrossStats, k0, band: int, *,
     # only — the delta mask above must not change, or the recurrence would
     # break for valid cells past a masked stretch of the diagonal
     keep = valid & (invni >= 0)[None, :] & (invnj >= 0)
-    return jnp.where(keep, corr, NEG), i, i0
+    return jnp.where(keep, corr, jnp.asarray(NEG, acc)), i, i0
 
 
 def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
                    k_hi=None, reseed_every: int | None = None,
                    wa: jax.Array | None = None,
                    wb: jax.Array | None = None, harvest_cols: bool = True,
-                   clamp_rows: bool = True, padded=None
+                   clamp_rows: bool = True, padded=None,
+                   accum_dtype=jnp.float32
                    ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                               jax.Array]:
     """Two-sided harvest of A vs B over signed diagonals [k0, k0+band).
@@ -780,7 +942,8 @@ def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
     """
     corr, i, i0 = _band_corr_ab(cross, k0, band, k_hi=k_hi,
                                 reseed_every=reseed_every, wa=wa, wb=wb,
-                                clamp_rows=clamp_rows, padded=padded)
+                                clamp_rows=clamp_rows, padded=padded,
+                                accum_dtype=accum_dtype)
     corr_best, d_win = _row_harvest(corr)
     idx_best = (i + k0 + d_win).astype(jnp.int32)
     idx_best = jnp.where(corr_best > NEG, idx_best, -1)
@@ -788,21 +951,23 @@ def band_rowmax_ab(cross: CrossStats, k0, band: int, *,
     if harvest_cols:
         win, win_i = _col_window(corr, NEG)
         win_i = jnp.where(win > NEG, win_i + i0, -1)  # local row -> absolute
-    return corr_best.astype(jnp.float32), idx_best, win, win_i, i0
+    return corr_best, idx_best, win, win_i, i0
 
 
 def band_topk_ab(cross: CrossStats, k0, band: int, k: int, *,
                  k_hi=None, reseed_every: int | None = None,
                  wa: jax.Array | None = None,
                  wb: jax.Array | None = None, harvest_cols: bool = True,
-                 clamp_rows: bool = True, padded=None
+                 clamp_rows: bool = True, padded=None,
+                 accum_dtype=jnp.float32
                  ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                             jax.Array]:
     """`band_rowmax_ab` widened to exact top-k — ((li, k) row window,
     row_idx, (li+band, k) col window, win_i, i0) off the same tile."""
     corr, i, i0 = _band_corr_ab(cross, k0, band, k_hi=k_hi,
                                 reseed_every=reseed_every, wa=wa, wb=wb,
-                                clamp_rows=clamp_rows, padded=padded)
+                                clamp_rows=clamp_rows, padded=padded,
+                                accum_dtype=accum_dtype)
     vals, d = _topk_rows(corr, k)
     idx = (i[:, None] + k0 + d).astype(jnp.int32)
     idx = jnp.where(vals > NEG, idx, -1)
@@ -810,13 +975,14 @@ def band_topk_ab(cross: CrossStats, k0, band: int, k: int, *,
     if harvest_cols:
         win, win_i = _topk_col_window(corr, k)
         win_i = jnp.where(win > NEG, win_i + i0, -1)
-    return vals.astype(jnp.float32), idx, win, win_i, i0
+    return vals, idx, win, win_i, i0
 
 
 def chunk_rowmax_ab(cross: CrossStats, k0, width_static: int, band: int,
                     reseed_every: int | None = DEFAULT_RESEED,
                     k_hi=None, two_sided: bool = True,
-                    clamp_rows: bool = True, col_tile: int | None = None
+                    clamp_rows: bool = True, col_tile: int | None = None,
+                    accum_dtype=jnp.float32
                     ) -> tuple[ProfileState, ProfileState | None]:
     """Two-sided states over signed diagonals [k0, k0+width), band-scanned.
 
@@ -831,6 +997,7 @@ def chunk_rowmax_ab(cross: CrossStats, k0, width_static: int, band: int,
     of that bank width instead of one flat vector — the engine twin of the
     kernel's banked accumulator (must exceed li + band).
     """
+    acc = jnp.dtype(accum_dtype)
     la, lb = cross.l_a, cross.l_b
     n_bands = -(-width_static // band)
     reseed_every = ab_reseed(la, lb, reseed_every)
@@ -849,7 +1016,8 @@ def chunk_rowmax_ab(cross: CrossStats, k0, width_static: int, band: int,
                                              wa=wa, wb=wb,
                                              harvest_cols=two_sided,
                                              clamp_rows=clamp_rows,
-                                             padded=padded)
+                                             padded=padded,
+                                             accum_dtype=acc)
         rows = rows.merge_window(ra, ia, i0)
         if two_sided:
             col = col.merge_window(win, wi, start + i0 + pad_l)
@@ -859,21 +1027,24 @@ def chunk_rowmax_ab(cross: CrossStats, k0, width_static: int, band: int,
         # ColState and BankedColState share merge_window/to_profile, so the
         # scan body is agnostic to which accumulator layout is in play
         init_col = (BankedColState.empty(pad_l + lb + li + band, col_tile,
-                                         li + band)
+                                         li + band, dtype=acc)
                     if col_tile is not None
-                    else ColState.empty(pad_l, lb, pad_r))
-    init = (ColState.empty(0, la, li), init_col if two_sided else None)
+                    else ColState.empty(pad_l, lb, pad_r, dtype=acc))
+    init = (ColState.empty(0, la, li, dtype=acc),
+            init_col if two_sided else None)
     (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
     return (rows.to_profile(0, la),
             col.to_profile(pad_l, lb) if two_sided else None)
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6))
+@partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6),
+         static_argnames=("accum_dtype",))
 def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
                        band: int = DEFAULT_BAND,
                        reseed_every: int | None = DEFAULT_RESEED,
                        two_sided: bool = True, clamp_rows: bool = True,
-                       col_tile: int | None = None
+                       col_tile: int | None = None, *,
+                       accum_dtype: str = "float32"
                        ) -> tuple[ProfileState, ProfileState | None]:
     """Jitted AB-join core: BOTH profiles of the rectangle from one sweep.
 
@@ -887,10 +1058,11 @@ def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
     the cheap path when B's profile is not wanted. `clamp_rows=False`
     restores the pre-clamp full-height sweep (A/B testing only).
     """
+    acc = jnp.dtype(accum_dtype)
     la, lb = cross.l_a, cross.l_b
     excl = int(exclusion)
-    state_a = ProfileState.empty(la)
-    state_b = ProfileState.empty(lb) if two_sided else None
+    state_a = ProfileState.empty(la, dtype=acc)
+    state_b = ProfileState.empty(lb, dtype=acc) if two_sided else None
 
     def merge(sa, sb):
         nonlocal state_a, state_b
@@ -902,7 +1074,7 @@ def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
         merge(*chunk_rowmax_ab(cross, jnp.int32(-(la - 1)), la - 1 + lb,
                                band, reseed_every, k_hi=lb,
                                two_sided=two_sided, clamp_rows=clamp_rows,
-                               col_tile=col_tile))
+                               col_tile=col_tile, accum_dtype=acc))
         return state_a, state_b
     neg_width = la - excl          # diagonals [-(l_a-1), -excl]
     pos_width = lb - excl          # diagonals [excl, l_b)
@@ -910,17 +1082,19 @@ def ab_join_from_stats(cross: CrossStats, exclusion: int = 0,
         merge(*chunk_rowmax_ab(cross, jnp.int32(-(la - 1)), neg_width, band,
                                reseed_every, k_hi=-excl + 1,
                                two_sided=two_sided, clamp_rows=clamp_rows,
-                               col_tile=col_tile))
+                               col_tile=col_tile, accum_dtype=acc))
     if pos_width > 0:
         merge(*chunk_rowmax_ab(cross, jnp.int32(excl), pos_width, band,
                                reseed_every, k_hi=lb, two_sided=two_sided,
-                               clamp_rows=clamp_rows, col_tile=col_tile))
+                               clamp_rows=clamp_rows, col_tile=col_tile,
+                               accum_dtype=acc))
     return state_a, state_b
 
 
 def chunk_topk_ab(cross: CrossStats, k0, width_static: int, band: int, k: int,
                   reseed_every: int | None = DEFAULT_RESEED,
-                  k_hi=None, two_sided: bool = True
+                  k_hi=None, two_sided: bool = True,
+                  accum_dtype=jnp.float32
                   ) -> tuple[TopKState, TopKState | None]:
     """Top-k analogue of `chunk_rowmax_ab`: (state_a (l_a, k), state_b
     (l_b, k)) exact best-first neighbor sets over signed diagonals
@@ -928,6 +1102,7 @@ def chunk_topk_ab(cross: CrossStats, k0, width_static: int, band: int, k: int,
     accumulate as bounded `(w, k)` windows in padded `TopKState`s (the
     banked column accumulator stays k = 1-only, so `col_tile` has no
     top-k variant — the planner pins flat accumulation for k > 1)."""
+    acc = jnp.dtype(accum_dtype)
     la, lb = cross.l_a, cross.l_b
     n_bands = -(-width_static // band)
     reseed_every = ab_reseed(la, lb, reseed_every)
@@ -944,35 +1119,39 @@ def chunk_topk_ab(cross: CrossStats, k0, width_static: int, band: int, k: int,
                                            reseed_every=reseed_every,
                                            wa=wa, wb=wb,
                                            harvest_cols=two_sided,
-                                           padded=padded)
+                                           padded=padded,
+                                           accum_dtype=acc)
         rows = rows.merge_window(ra, ia, i0)
         if two_sided:
             col = col.merge_window(win, wi, start + i0 + pad_l)
         return (rows, col), None
 
-    init = (TopKState.empty(la + li, k),
-            TopKState.empty(pad_l + lb + li + 2 * band, k)
+    init = (TopKState.empty(la + li, k, dtype=acc),
+            TopKState.empty(pad_l + lb + li + 2 * band, k, dtype=acc)
             if two_sided else None)
     (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
     return (rows.to_state(0, la),
             col.to_state(pad_l, lb) if two_sided else None)
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
+@partial(jax.jit, static_argnums=(1, 2, 3, 4, 5),
+         static_argnames=("accum_dtype",))
 def ab_join_topk_from_stats(cross: CrossStats, exclusion: int = 0,
                             band: int = DEFAULT_BAND,
                             reseed_every: int | None = DEFAULT_RESEED,
-                            two_sided: bool = True, k: int = 4
+                            two_sided: bool = True, k: int = 4, *,
+                            accum_dtype: str = "float32"
                             ) -> tuple[TopKState, TopKState | None]:
     """Jitted exact top-k AB-join core: `(l_a, k)` (and `(l_b, k)` with
     `two_sided`) best-first neighbor sets from one signed-diagonal sweep.
     Same span structure as `ab_join_from_stats` (an exclusion band splits
     the signed space in two; with exclusion == 0 diagonal k = 0 is
     evaluated exactly once, keeping the union top-k exact)."""
+    acc = jnp.dtype(accum_dtype)
     la, lb = cross.l_a, cross.l_b
     excl = int(exclusion)
-    state_a = TopKState.empty(la, k)
-    state_b = TopKState.empty(lb, k) if two_sided else None
+    state_a = TopKState.empty(la, k, dtype=acc)
+    state_b = TopKState.empty(lb, k, dtype=acc) if two_sided else None
 
     def merge(sa, sb):
         nonlocal state_a, state_b
@@ -983,17 +1162,18 @@ def ab_join_topk_from_stats(cross: CrossStats, exclusion: int = 0,
     if excl == 0:
         merge(*chunk_topk_ab(cross, jnp.int32(-(la - 1)), la - 1 + lb,
                              band, k, reseed_every, k_hi=lb,
-                             two_sided=two_sided))
+                             two_sided=two_sided, accum_dtype=acc))
         return state_a, state_b
     neg_width = la - excl          # diagonals [-(l_a-1), -excl]
     pos_width = lb - excl          # diagonals [excl, l_b)
     if neg_width > 0:
         merge(*chunk_topk_ab(cross, jnp.int32(-(la - 1)), neg_width, band, k,
                              reseed_every, k_hi=-excl + 1,
-                             two_sided=two_sided))
+                             two_sided=two_sided, accum_dtype=acc))
     if pos_width > 0:
         merge(*chunk_topk_ab(cross, jnp.int32(excl), pos_width, band, k,
-                             reseed_every, k_hi=lb, two_sided=two_sided))
+                             reseed_every, k_hi=lb, two_sided=two_sided,
+                             accum_dtype=acc))
     return state_a, state_b
 
 
@@ -1005,9 +1185,10 @@ def ab_join_topk_from_stats(cross: CrossStats, exclusion: int = 0,
 AB_ROWSTREAM_MAX_ROWS = 4096
 
 
-@partial(jax.jit, static_argnums=(1, 2))
+@partial(jax.jit, static_argnums=(1, 2), static_argnames=("accum_dtype",))
 def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
-                      reseed_every: int | None = DEFAULT_RESEED
+                      reseed_every: int | None = DEFAULT_RESEED, *,
+                      accum_dtype: str = "float32"
                       ) -> tuple[ProfileState, ProfileState]:
     """Row-streamed AB join: ONE lax.scan over A's rows, each step a fully
     vectorized O(l_b) update — the rectangle's other natural 2-D tiling
@@ -1032,24 +1213,32 @@ def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
     band-diagonal engine remains the path for huge near-square rectangles
     and for every partitioned/anytime/distributed schedule.
     """
+    acc = jnp.dtype(accum_dtype)
     sa, sb = cross.a, cross.b
     la, lb = cross.l_a, cross.l_b
     excl = int(exclusion)
     R = ab_reseed(la, lb, reseed_every)
-    dfb, dgb, invnb = sb.df, sb.dg, sb.invn
-    row0 = cross.cov0s[la - 1:]                        # cov(0, j), (l_b,)
-    seeds_neg = cross.cov0s[:la][::-1]                 # cov(i, 0), (l_a,)
+    # streams upcast to the accum dtype at load — the carried recurrence,
+    # reseeds and harvests never run reduced
+    dfb, dgb, invnb = (sb.df.astype(acc), sb.dg.astype(acc),
+                       sb.invn.astype(acc))
+    cov0s = cross.cov0s.astype(acc)
+    row0 = cov0s[la - 1:]                              # cov(0, j), (l_b,)
+    seeds_neg = cov0s[:la][::-1]                       # cov(i, 0), (l_a,)
     if R is not None:
-        wa = centered_windows(sa)
-        wb = centered_windows(sb)
+        wa = centered_windows(sa).astype(acc)
+        wb = centered_windows(sb).astype(acc)
         import numpy as np
         rows = np.arange(0, la, int(R))                # static row ids
         exact = jnp.einsum("sm,lm->sl", wa[rows], wb)  # (S, l_b) reseed rows
     jj = jnp.arange(lb)
+    neg = jnp.asarray(NEG, acc)
 
     def step(carry, xs):
         qt, pb, ib = carry
         dfi, dgi, invni, seed0, i = xs
+        dfi, dgi, invni = dfi.astype(acc), dgi.astype(acc), invni.astype(acc)
+        seed0 = seed0.astype(acc)
         delta = dfi * dgb + dfb * dgi
         qt = jnp.concatenate([seed0[None], qt[:-1] + delta[1:]])
         if R is not None:
@@ -1060,9 +1249,9 @@ def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
             qt = jnp.where(i == 0, row0, qt)
         corr = qt * invnb * invni
         # missing-data sentinel (invn < 0): masked pairs lose unconditionally
-        corr = jnp.where((invni >= 0) & (invnb >= 0), corr, NEG)
+        corr = jnp.where((invni >= 0) & (invnb >= 0), corr, neg)
         if excl > 0:
-            corr = jnp.where(jnp.abs(jj - i) >= excl, corr, NEG)
+            corr = jnp.where(jnp.abs(jj - i) >= excl, corr, neg)
         take = corr > pb
         pb = jnp.where(take, corr, pb)
         ib = jnp.where(take, i, ib)
@@ -1072,21 +1261,21 @@ def ab_join_rowstream(cross: CrossStats, exclusion: int = 0,
         am = jnp.max(jnp.where(corr >= mx, jj, -1))
         return (qt, pb, ib), (mx, am)
 
-    init = (jnp.zeros((lb,), jnp.float32),
-            jnp.full((lb,), NEG, jnp.float32),
+    init = (jnp.zeros((lb,), acc),
+            jnp.full((lb,), NEG, acc),
             jnp.full((lb,), -1, jnp.int32))
     xs = (sa.df, sa.dg, sa.invn, seeds_neg,
           jnp.arange(la, dtype=jnp.int32))
     (_, pb, ib), (pa, ja) = jax.lax.scan(step, init, xs)
     ja = jnp.where(pa > NEG, ja, -1).astype(jnp.int32)
-    return (ProfileState(pa.astype(jnp.float32), ja),
-            ProfileState(pb, ib))
+    return (ProfileState(pa, ja), ProfileState(pb, ib))
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3))
+@partial(jax.jit, static_argnums=(1, 2, 3), static_argnames=("accum_dtype",))
 def ab_join_rowstream_topk(cross: CrossStats, exclusion: int = 0,
                            reseed_every: int | None = DEFAULT_RESEED,
-                           k: int = 4) -> tuple[TopKState, TopKState]:
+                           k: int = 4, *, accum_dtype: str = "float32"
+                           ) -> tuple[TopKState, TopKState]:
     """Row-streamed AB join with exact top-k on BOTH sides — the same ONE
     lax.scan over A's rows as `ab_join_rowstream` (identical carried
     covariance recurrence and reseeds), but each row keeps its k best
@@ -1094,24 +1283,30 @@ def ab_join_rowstream_topk(cross: CrossStats, exclusion: int = 0,
     that row is present) and the B side runs the `(l_b, k)` insertion
     merge: each row offers every column exactly one new candidate, so
     union-with-one-candidate per step is an exact running top-k."""
+    acc = jnp.dtype(accum_dtype)
     sa, sb = cross.a, cross.b
     la, lb = cross.l_a, cross.l_b
     excl = int(exclusion)
     R = ab_reseed(la, lb, reseed_every)
-    dfb, dgb, invnb = sb.df, sb.dg, sb.invn
-    row0 = cross.cov0s[la - 1:]                        # cov(0, j), (l_b,)
-    seeds_neg = cross.cov0s[:la][::-1]                 # cov(i, 0), (l_a,)
+    dfb, dgb, invnb = (sb.df.astype(acc), sb.dg.astype(acc),
+                       sb.invn.astype(acc))
+    cov0s = cross.cov0s.astype(acc)
+    row0 = cov0s[la - 1:]                              # cov(0, j), (l_b,)
+    seeds_neg = cov0s[:la][::-1]                       # cov(i, 0), (l_a,)
     if R is not None:
-        wa = centered_windows(sa)
-        wb = centered_windows(sb)
+        wa = centered_windows(sa).astype(acc)
+        wb = centered_windows(sb).astype(acc)
         import numpy as np
         rows = np.arange(0, la, int(R))                # static row ids
         exact = jnp.einsum("sm,lm->sl", wa[rows], wb)  # (S, l_b) reseed rows
     jj = jnp.arange(lb)
+    neg = jnp.asarray(NEG, acc)
 
     def step(carry, xs):
         qt, pbc, pbi = carry
         dfi, dgi, invni, seed0, i = xs
+        dfi, dgi, invni = dfi.astype(acc), dgi.astype(acc), invni.astype(acc)
+        seed0 = seed0.astype(acc)
         delta = dfi * dgb + dfb * dgi
         qt = jnp.concatenate([seed0[None], qt[:-1] + delta[1:]])
         if R is not None:
@@ -1122,9 +1317,9 @@ def ab_join_rowstream_topk(cross: CrossStats, exclusion: int = 0,
             qt = jnp.where(i == 0, row0, qt)
         corr = qt * invnb * invni
         # missing-data sentinel (invn < 0): masked pairs lose unconditionally
-        corr = jnp.where((invni >= 0) & (invnb >= 0), corr, NEG)
+        corr = jnp.where((invni >= 0) & (invnb >= 0), corr, neg)
         if excl > 0:
-            corr = jnp.where(jnp.abs(jj - i) >= excl, corr, NEG)
+            corr = jnp.where(jnp.abs(jj - i) >= excl, corr, neg)
         # B side: one new candidate per column, insertion-merged
         cand_i = jnp.where(corr > NEG, i, -1).astype(jnp.int32)
         pbc, pbi = _topk_union(pbc, pbi, corr[:, None], cand_i[:, None], k)
@@ -1133,20 +1328,20 @@ def ab_join_rowstream_topk(cross: CrossStats, exclusion: int = 0,
         ja = jnp.where(vals > NEG, pos, -1).astype(jnp.int32)
         return (qt, pbc, pbi), (vals, ja)
 
-    init = (jnp.zeros((lb,), jnp.float32),
-            jnp.full((lb, k), NEG, jnp.float32),
+    init = (jnp.zeros((lb,), acc),
+            jnp.full((lb, k), NEG, acc),
             jnp.full((lb, k), -1, jnp.int32))
     xs = (sa.df, sa.dg, sa.invn, seeds_neg,
           jnp.arange(la, dtype=jnp.int32))
     (_, pbc, pbi), (pa, ja) = jax.lax.scan(step, init, xs)
-    return (TopKState(pa.astype(jnp.float32), ja), TopKState(pbc, pbi))
+    return (TopKState(pa, ja), TopKState(pbc, pbi))
 
 
 def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
             band: int = DEFAULT_BAND,
             reseed_every: int | None = DEFAULT_RESEED,
             normalize: bool = True, return_b: bool = False,
-            k: int = 1) -> "ProfileResult":
+            k: int = 1, precision=None) -> "ProfileResult":
     """AB join: for every subsequence of A, its nearest neighbour in B.
 
     Returns a `ProfileResult`: `result.p[i]` the distance, `result.i[i]`
@@ -1180,9 +1375,11 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
     plan = plan_mod.plan_sweep(m, a.shape[0] - m + 1, b.shape[0] - m + 1,
                                exclusion=exclusion, normalize=normalize,
                                harvest="both" if return_b else "merged",
-                               band=band, reseed_every=reseed_every, k=k)
+                               band=band, reseed_every=reseed_every, k=k,
+                               precision=precision)
     if not normalize:
-        stats = (jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))
+        sdt = plan.precision.stream_dtype
+        stats = (jnp.asarray(a, sdt), jnp.asarray(b, sdt))
     else:
         stats = plan_mod.cross_stats_for(plan, a, b)
     res = plan_mod.execute(plan, stats)
@@ -1192,7 +1389,8 @@ def ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
 def batch_profile(series, window: int, *, exclusion: int | None = None,
                   band: int = DEFAULT_BAND,
                   reseed_every: int | None = DEFAULT_RESEED,
-                  k: int = 1, harvest: str = "merged") -> "ProfileResult":
+                  k: int = 1, harvest: str = "merged",
+                  precision=None) -> "ProfileResult":
     """Self-join matrix profiles for a (B, n) stack in ONE vmapped program.
 
     Per-series host f64 stream prep (forward only — the fused sweep needs no
@@ -1217,8 +1415,10 @@ def batch_profile(series, window: int, *, exclusion: int | None = None,
     validate_series(arr[0], m, name="series[0]")
     plan = plan_mod.plan_sweep(m, arr.shape[1] - m + 1, exclusion=exclusion,
                                band=band, reseed_every=reseed_every,
-                               batch=arr.shape[0], k=k, harvest=harvest)
-    stats = [compute_stats_host(s, m) for s in arr]
+                               batch=arr.shape[0], k=k, harvest=harvest,
+                               precision=precision)
+    dt_kw = plan_mod.stats_dtypes_for(plan)
+    stats = [compute_stats_host(s, m, **dt_kw) for s in arr]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *stats)
     res = plan_mod.execute(plan, stack)
     return build_result(plan, res, stack)
@@ -1227,7 +1427,8 @@ def batch_profile(series, window: int, *, exclusion: int | None = None,
 def batch_ab_join(stack_a, stack_b, window: int, *,
                   exclusion: int | None = None, band: int = DEFAULT_BAND,
                   reseed_every: int | None = DEFAULT_RESEED,
-                  return_b: bool = False, k: int = 1) -> "ProfileResult":
+                  return_b: bool = False, k: int = 1,
+                  precision=None) -> "ProfileResult":
     """Vmapped AB joins: row b of (B, n_a) against row b of (B, n_b).
 
     Returns a stacked `ProfileResult`; with `return_b=True` the (B, l_b)
@@ -1253,8 +1454,10 @@ def batch_ab_join(stack_a, stack_b, window: int, *,
                                exclusion=exclusion, band=band,
                                reseed_every=reseed_every,
                                harvest="both" if return_b else "merged",
-                               batch=a.shape[0], k=k)
-    crosses = [compute_cross_stats_host(ra, rb, m) for ra, rb in zip(a, b)]
+                               batch=a.shape[0], k=k, precision=precision)
+    dt_kw = plan_mod.stats_dtypes_for(plan)
+    crosses = [compute_cross_stats_host(ra, rb, m, **dt_kw)
+               for ra, rb in zip(a, b)]
     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *crosses)
     res = plan_mod.execute(plan, stack)
     return build_result(plan, res, stack)
@@ -1303,24 +1506,7 @@ def band_rowmin_nonnorm(ts: jax.Array, window: int, k0, band: int):
     idx = jnp.where(jnp.isfinite(neg_best),
                     (i + k0 + d_win).astype(jnp.int32), -1)
     win, win_i = _col_window(neg, -jnp.inf)
-    return neg_best.astype(jnp.float32), idx, win, win_i
-
-
-def matrix_profile_nonnorm(ts, window: int, exclusion: int | None = None,
-                           band: int = DEFAULT_BAND, *,
-                           harvest: str = "merged") -> "ProfileResult":
-    """DEPRECATED alias for `matrix_profile(..., normalize=False)` —
-    the two entries were both thin `SweepPlan` builders, so the nonnorm
-    mode collapsed into the one entry point. This shim forwards with a
-    one-release `DeprecationWarning` and will be removed next release."""
-    import warnings
-
-    warnings.warn(
-        "matrix_profile_nonnorm() is deprecated and will be removed in "
-        "the next release; call matrix_profile(..., normalize=False).",
-        DeprecationWarning, stacklevel=2)
-    return matrix_profile(ts, window, exclusion, band, harvest=harvest,
-                          normalize=False)
+    return neg_best, idx, win, win_i
 
 
 def nonnorm_to_distance(state: ProfileState) -> jax.Array:
@@ -1330,17 +1516,21 @@ def nonnorm_to_distance(state: ProfileState) -> jax.Array:
     return jnp.where(jnp.isfinite(state.corr), dist, jnp.inf)
 
 
-@partial(jax.jit, static_argnums=(1, 2, 3))
+@partial(jax.jit, static_argnums=(1, 2, 3), static_argnames=("accum_dtype",))
 def nonnorm_profile_from_ts(ts: jax.Array, window: int, exclusion: int,
-                            band: int = DEFAULT_BAND) -> SplitProfile:
+                            band: int = DEFAULT_BAND, *,
+                            accum_dtype: str = "float32") -> SplitProfile:
     """Jitted nonnorm self-join core: one two-sided sweep of k in [excl, l).
     Executor-facing (core.plan); `exclusion` is concrete here — defaults are
     the planner's job. Returns a `SplitProfile` of states in NEGATED
     squared-distance space (merge max-semantics); finish each side with
-    `nonnorm_to_distance`."""
+    `nonnorm_to_distance`. Raw squared distances have no [-1, 1] bound, so
+    reduced streams are rejected at plan time for nonnorm sweeps — the whole
+    computation runs in `accum_dtype`."""
     m = int(window)
     excl = int(exclusion)
-    ts = jnp.asarray(ts, jnp.float32)
+    acc = jnp.dtype(accum_dtype)
+    ts = jnp.asarray(ts, acc)
     l = ts.shape[0] - m + 1
     span = l - excl
     n_bands = -(-span // band)
@@ -1353,8 +1543,8 @@ def nonnorm_profile_from_ts(ts: jax.Array, window: int, exclusion: int,
         col = col.merge_window(win, wi, excl + b * band)
         return (state, col), None
 
-    init = (ProfileState.empty(l, -jnp.inf),
-            ColState.empty(0, l, l + band, -jnp.inf))
+    init = (ProfileState.empty(l, -jnp.inf, dtype=acc),
+            ColState.empty(0, l, l + band, -jnp.inf, dtype=acc))
     (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
     left = col.to_profile(0, l)
     return SplitProfile(merged=rows.merge(left), right=rows, left=left)

@@ -53,7 +53,9 @@ from repro.core.matrix_profile import (
     ab_join_nonnorm, ab_join_rowstream, ab_join_rowstream_topk,
     ab_join_topk_from_stats, default_exclusion, nonnorm_profile_from_ts,
     nonnorm_to_distance, profile_from_stats, profile_topk_from_stats,
+    tile_profile_from_stats,
 )
+from repro.core.precision import DEFAULT_PRECISION, PrecisionSpec, as_precision
 from repro.core.result import HarvestSpec
 from repro.core.zstats import CrossStats, ZStats, corr_to_dist
 # tile-geometry defaults only — repro.kernels itself imports nothing
@@ -101,6 +103,12 @@ class SweepPlan:
     backend: str = "engine"         # engine | rowstream | kernel | distributed
     interpret: bool = True          # kernel backend: Pallas interpret mode
     batch: int | None = None        # vmapped stack size (engine backend only)
+    # -- precision ---------------------------------------------------------
+    # stream/accum/seed dtypes, decided HERE at plan time (default: the
+    # historical all-f32 pipeline, bitwise). A reduced (16-bit) stream
+    # switches the self-join engine to the recurrence-free dot-product tile
+    # sweep (`tile_profile_from_stats`); see core/precision.py.
+    precision: PrecisionSpec = DEFAULT_PRECISION
 
     @property
     def k_min(self) -> int:
@@ -175,7 +183,8 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
                reseed_every: int | None = DEFAULT_RESEED,
                it: int = DEFAULT_IT, dt: int = DEFAULT_DT,
                interpret: bool = True,
-               batch: int | None = None) -> SweepPlan:
+               batch: int | None = None,
+               precision: PrecisionSpec | str | None = None) -> SweepPlan:
     """Heuristic planner: fill in every sweep decision an entry point used to
     make inline. `l_a`/`l_b` are SUBSEQUENCE counts (n - window + 1);
     `backend=None` lets the planner choose (entry points only force a backend
@@ -198,8 +207,19 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
         axis — so k must fit min(l_a, l_b) resp. `band`;
       * the nonnorm recurrence has no top-k harvest (nobody asked for
         amplitude-anomaly k-NN yet) — explicit ValueError.
+
+    `precision` is a `PrecisionSpec`, a preset name ("bf16"/"f16"/"f64"),
+    or None (the bitwise-default f32 spec). Precision rules pinned here:
+      * 16-bit streams are z-normalized only (raw squared distances have
+        no [-1, 1] bound, so reduced streams lose unbounded relative
+        precision there) and k = 1 only (the top-k accumulators ride the
+        drift-prone recurrence with no bounded-error story yet);
+      * the kernel backend accumulates in f32 VMEM scratch — it accepts
+        any stream dtype but rejects `accum="float64"`;
+      * distributed worker chunks likewise keep f32 running states.
     """
     m = int(window)
+    prec = as_precision(precision)
     kind = "self" if l_b is None else "ab"
     if exclusion is None:
         excl = default_exclusion(m) if kind == "self" else 0
@@ -264,6 +284,23 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
     if topk and not clamp_rows:
         raise ValueError("clamp_rows=False is the k=1 A/B-comparison sweep; "
                          "top-k plans always row-clamp")
+    if prec.reduced_stream and not normalize:
+        raise ValueError("16-bit streams are z-normalized only: raw squared "
+                         "distances have no [-1, 1] bound, so reduced "
+                         "streams lose unbounded relative precision")
+    if not normalize and kind == "ab" and not prec.is_default:
+        raise ValueError("nonnorm AB joins run the fixed f32 pipeline; "
+                         "precision specs apply to z-normalized sweeps and "
+                         "the nonnorm self-join accumulator only")
+    if prec.reduced_stream and topk:
+        raise ValueError("top-k harvests with 16-bit streams are not "
+                         "supported: the top-k accumulators ride the "
+                         "recurrence, which has no bounded-error analysis "
+                         "under reduced streams — use f32 streams")
+    if backend in ("kernel", "distributed") and prec.accum != "float32":
+        raise ValueError(f"backend {backend!r} accumulates in f32 (VMEM "
+                         f"scratch / worker chunk states); "
+                         f"accum={prec.accum!r} is engine/rowstream-only")
 
     # short side onto rows for the backends whose row axis is streamed
     swap_ab = (kind == "ab" and backend in ("rowstream", "kernel")
@@ -278,7 +315,25 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
                      normalize=normalize, harvest=spec, swap_ab=swap_ab,
                      band=int(band), clamp_rows=clamp_rows, col_tile=col_tile,
                      it=int(it), dt=int(dt), reseed_every=reseed_every,
-                     backend=backend, interpret=interpret, batch=batch)
+                     backend=backend, interpret=interpret, batch=batch,
+                     precision=prec)
+
+
+def stats_dtypes_for(plan: SweepPlan) -> dict:
+    """The `(out_dtype, seed_dtype)` kwargs host stream prep needs under a
+    plan — the one place the stream-emission dtype is decided.
+
+    One subtlety: the reduced-stream SELF-JOIN path (the dot-product tile
+    sweep) must receive f32 stats and round only the CENTERED windows to the
+    16-bit stream dtype inside the sweep — rounding `ts` itself first would
+    scale the centering error by the series LEVEL rather than the window
+    deviation. Every other backend streams the stats arrays themselves, so
+    those are emitted directly in the plan's stream dtype."""
+    prec = plan.precision
+    if (plan.kind == "self" and plan.normalize and prec.reduced_stream
+            and plan.backend == "engine"):
+        return dict(out_dtype=jnp.float32, seed_dtype=prec.seed_dtype)
+    return dict(out_dtype=prec.stream_dtype, seed_dtype=prec.seed_dtype)
 
 
 def cross_stats_for(plan: SweepPlan, ts_a, ts_b) -> CrossStats:
@@ -295,9 +350,11 @@ def cross_stats_for(plan: SweepPlan, ts_a, ts_b) -> CrossStats:
                          f"got kind={plan.kind!r} "
                          f"normalize={plan.normalize}")
     m = plan.window
+    prec = plan.precision
+    dt_kw = dict(out_dtype=prec.stream_dtype, seed_dtype=prec.seed_dtype)
     if plan.swap_ab:               # stream the short side as rows
-        return compute_cross_stats_host(ts_b, ts_a, m)
-    return compute_cross_stats_host(ts_a, ts_b, m)
+        return compute_cross_stats_host(ts_b, ts_a, m, **dt_kw)
+    return compute_cross_stats_host(ts_a, ts_b, m, **dt_kw)
 
 
 # -- executor -----------------------------------------------------------------
@@ -373,7 +430,8 @@ def _execute_self(plan: SweepPlan, stats) -> SweepResult:
     eager_split = plan.harvest.sides == "both"
     if not plan.normalize:
         split = nonnorm_profile_from_ts(
-            jnp.asarray(stats, jnp.float32), m, plan.exclusion, plan.band)
+            jnp.asarray(stats, plan.precision.stream_dtype), m,
+            plan.exclusion, plan.band, accum_dtype=plan.precision.accum)
         res = SweepResult(nonnorm_to_distance(split.merged),
                           split.merged.index)
 
@@ -402,7 +460,8 @@ def _execute_self(plan: SweepPlan, stats) -> SweepResult:
         return _attach(res, ("split",), fin_split, eager_split)
     if plan.harvest.k > 1:
         fn = lambda s: profile_topk_from_stats(             # noqa: E731
-            s, plan.exclusion, plan.band, plan.reseed_every, plan.harvest.k)
+            s, plan.exclusion, plan.band, plan.reseed_every, plan.harvest.k,
+            accum_dtype=plan.precision.accum)
         if plan.batch is not None:
             fn = jax.vmap(fn)
         merged, rows, col = fn(stats)
@@ -419,8 +478,17 @@ def _execute_self(plan: SweepPlan, stats) -> SweepResult:
                         right_i=rows.index[..., 0])
 
         return _attach(res, ("split",), fin_split, eager_split)
-    fn = lambda s: profile_from_stats(                      # noqa: E731
-        s, plan.exclusion, plan.band, plan.reseed_every)
+    if plan.precision.reduced_stream:
+        # recurrence-free dot-product tile sweep: the ONLY self-join engine
+        # path for 16-bit streams (bounded absolute corr error, no drift,
+        # no reseed machinery — see tile_profile_from_stats)
+        fn = lambda s: tile_profile_from_stats(             # noqa: E731
+            s, plan.exclusion, stream_dtype=plan.precision.stream,
+            accum_dtype=plan.precision.accum)
+    else:
+        fn = lambda s: profile_from_stats(                  # noqa: E731
+            s, plan.exclusion, plan.band, plan.reseed_every,
+            accum_dtype=plan.precision.accum)
     if plan.batch is not None:
         fn = jax.vmap(fn)
     split = fn(stats)
@@ -449,7 +517,8 @@ def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
     if plan.harvest.k > 1:
         return _execute_ab_topk(plan, stats, two_sided)
     if plan.backend == "rowstream":
-        sa, sb = ab_join_rowstream(stats, plan.exclusion, plan.reseed_every)
+        sa, sb = ab_join_rowstream(stats, plan.exclusion, plan.reseed_every,
+                                   accum_dtype=plan.precision.accum)
         if plan.swap_ab:
             sa, sb = sb, sa
         res = SweepResult(sa.to_distance(m), sa.index)
@@ -480,7 +549,7 @@ def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
     # the same plan with sides="both"
     fn = lambda c: ab_join_from_stats(                      # noqa: E731
         c, plan.exclusion, plan.band, plan.reseed_every, two_sided,
-        plan.clamp_rows, plan.col_tile)
+        plan.clamp_rows, plan.col_tile, accum_dtype=plan.precision.accum)
     if plan.batch is not None:
         fn = jax.vmap(fn)
     sa, sb = fn(stats)
@@ -498,12 +567,14 @@ def _execute_ab_topk(plan: SweepPlan, stats, two_sided: bool) -> SweepResult:
     k = plan.harvest.k
     if plan.backend == "rowstream":
         ta, tb = ab_join_rowstream_topk(stats, plan.exclusion,
-                                        plan.reseed_every, k)
+                                        plan.reseed_every, k,
+                                        accum_dtype=plan.precision.accum)
         if plan.swap_ab:
             ta, tb = tb, ta
     else:
         fn = lambda c: ab_join_topk_from_stats(             # noqa: E731
-            c, plan.exclusion, plan.band, plan.reseed_every, two_sided, k)
+            c, plan.exclusion, plan.band, plan.reseed_every, two_sided, k,
+            accum_dtype=plan.precision.accum)
         if plan.batch is not None:
             fn = jax.vmap(fn)
         ta, tb = fn(stats)

@@ -1,0 +1,170 @@
+"""Mixed-precision policy for streamed sweeps — decided at PLAN time.
+
+NATSA's thesis is that the matrix profile is memory-bandwidth-bound: the
+win comes from moving fewer bytes past cheap FP units, not from more
+FLOPs.  Our NDP-in-spirit lever is the same one the PIM follow-on work
+pulls (arXiv:2211.04369): stream the big per-window arrays in a REDUCED
+dtype while keeping every accumulation in a wide one.  `PrecisionSpec`
+names the three dtype roles once, and `plan_sweep` freezes the choice
+into the `SweepPlan` — backends never re-decide precision at call time:
+
+  * `stream`   — the dtype of everything O(l·m) or O(l) that streams
+    from HBM per swept cell: z-stat streams (`df`/`dg`/`invn`), centered
+    windows, the kernel's diagonal slabs, a fleet's cached-window stack.
+    Halving this halves the bytes/cell the roofline model charges.
+  * `accum`    — the dtype QT/covariance updates and harvest reductions
+    accumulate in (cumsum carries, dot accumulation, running profile
+    states).  Never below float32.
+  * `seed_dot` — the dtype diagonal seed covariances (`cov0`/`cov0s`)
+    are EMITTED in.  Seeds are always COMPUTED in float64 host-side
+    (zstats); this is only the storage dtype of the O(l) seed array.
+
+The DEFAULT spec reproduces the historical all-float32 pipeline
+bitwise — `tests/test_precision.py` pins that — so precision is purely
+opt-in.  The reduced presets:
+
+  "bf16" — bfloat16 streams, float32 accumulation/seeds.  Safe for
+      z-normalized profiles: correlations live in [-1, 1], so the
+      stream rounding enters as an ABSOLUTE corr error bounded by
+      `corr_tolerance` below, independent of series scale or length
+      (the self-join engine drops the recurrence entirely under a
+      16-bit stream and computes QT tiles as direct dots with `accum`
+      accumulation — no O(n) drift to control, no reseed machinery).
+      NOT recommended for `normalize=False` sweeps, whose raw squared
+      distances lose relative precision with no [-1, 1] bound.
+  "f16"  — float16 streams (8x tighter mantissa than bf16, narrower
+      exponent; fine for centered z-stat streams, which are O(1)).
+  "f64"  — float64 everything: the oracle spec the precision tests
+      compare against.  Requires `JAX_ENABLE_X64` (see README
+      "Precision modes" for the `JAX_DEFAULT_DTYPE_BITS` interaction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# dtype names accepted for each role; stored as STRINGS so the frozen
+# spec hashes cheaply into jit static args and never depends on whether
+# x64 is enabled at construction time
+_STREAM_DTYPES = ("float16", "bfloat16", "float32", "float64")
+_ACCUM_DTYPES = ("float32", "float64")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionSpec:
+    """Frozen (stream, accum, seed_dot) dtype policy for one sweep."""
+
+    stream: str = "float32"
+    accum: str = "float32"
+    seed_dot: str = "float32"
+
+    def __post_init__(self):
+        if self.stream not in _STREAM_DTYPES:
+            raise ValueError(f"stream dtype must be one of {_STREAM_DTYPES}, "
+                             f"got {self.stream!r}")
+        if self.accum not in _ACCUM_DTYPES:
+            raise ValueError(f"accum dtype must be one of {_ACCUM_DTYPES}, "
+                             f"got {self.accum!r}")
+        if self.seed_dot not in _STREAM_DTYPES:
+            raise ValueError(f"seed_dot dtype must be one of "
+                             f"{_STREAM_DTYPES}, got {self.seed_dot!r}")
+
+    # -- jnp dtype views (import deferred: the spec is host-side metadata) --
+
+    @property
+    def stream_dtype(self):
+        import jax.numpy as jnp
+        return jnp.dtype(self.stream)
+
+    @property
+    def accum_dtype(self):
+        import jax.numpy as jnp
+        return jnp.dtype(self.accum)
+
+    @property
+    def seed_dtype(self):
+        import jax.numpy as jnp
+        return jnp.dtype(self.seed_dot)
+
+    @property
+    def reduced_stream(self) -> bool:
+        """True when streams are below 32-bit — the planner switches the
+        self-join engine to the dot-product tile sweep and drops the
+        recurrence's reseed machinery (drift is sub-rounding there)."""
+        import numpy as np
+        return np.dtype(self.stream).itemsize < 4
+
+    @property
+    def stream_bytes(self) -> int:
+        import numpy as np
+        return int(np.dtype(self.stream).itemsize)
+
+    @property
+    def is_default(self) -> bool:
+        return self == PrecisionSpec()
+
+
+DEFAULT_PRECISION = PrecisionSpec()
+
+# spelled presets accepted anywhere a `precision` argument is taken
+PRESETS = {
+    "f32": PrecisionSpec(),
+    "default": PrecisionSpec(),
+    "bf16": PrecisionSpec(stream="bfloat16"),
+    "f16": PrecisionSpec(stream="float16"),
+    "f64": PrecisionSpec(stream="float64", accum="float64",
+                         seed_dot="float64"),
+}
+
+
+def as_precision(spec) -> PrecisionSpec:
+    """Coerce None / preset name / PrecisionSpec to a `PrecisionSpec`."""
+    if spec is None:
+        return DEFAULT_PRECISION
+    if isinstance(spec, PrecisionSpec):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return PRESETS[spec]
+        except KeyError:
+            raise ValueError(f"unknown precision preset {spec!r}; choose "
+                             f"from {sorted(PRESETS)} or pass a "
+                             f"PrecisionSpec") from None
+    raise TypeError(f"precision must be None, a preset name, or a "
+                    f"PrecisionSpec, got {type(spec).__name__}")
+
+
+def _eps(name: str) -> float:
+    """Unit roundoff (machine epsilon) of a dtype by name — numpy lacks
+    bfloat16, so it is tabulated."""
+    import numpy as np
+    if name == "bfloat16":
+        return 2.0 ** -8
+    return float(np.finfo(np.dtype(name)).eps)
+
+
+def corr_tolerance(spec: PrecisionSpec, window: int) -> float:
+    """Analytic bound on |corr_spec − corr_f64| for a z-normalized sweep.
+
+    Derivation (ε_s = stream roundoff, ε_a = accum roundoff, m = window):
+    each centered window entry is rounded once to the stream dtype, so a
+    product w_i·w_j carries relative error ≤ 2ε_s + ε_s²; the two
+    `invn` factors add ≤ 2ε_s and their multiplies ≤ 2ε_s more — ~6ε_s
+    total relative error on a quantity whose magnitude is ≤ 1 by
+    Cauchy–Schwarz, hence ≤ 6ε_s ABSOLUTE.  Accumulating the m-term dot
+    (or the length-≤reseed-period cumsum segment, whichever path the
+    plan chose) in the accum dtype adds the standard ≤ 1.1·m·ε_a
+    summation bound; 2·m·ε_a covers it with slack.  The constant is
+    deliberately loose (no attempt at sharpness) so the CI gate holds
+    across hosts and rounding modes, while staying ~20x below any error
+    a real defect (wrong seed, dropped reseed mask, swapped stream)
+    would produce."""
+    return 6.0 * _eps(spec.stream) + 2.0 * float(window) * _eps(spec.accum)
+
+
+def profile_tolerance(spec: PrecisionSpec, window: int) -> float:
+    """Bound on |p_spec − p_f64| in DISTANCE units.  With p² = 2m(1−ρ),
+    |Δ(p²)| ≤ 2m·corr_tolerance; and for any a, e ≥ 0,
+    |sqrt(a + e) − sqrt(a)| ≤ sqrt(e), so the distance-space error is
+    bounded by sqrt(2m·corr_tolerance) regardless of how small p is."""
+    return float((2.0 * window * corr_tolerance(spec, window)) ** 0.5)

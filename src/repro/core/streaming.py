@@ -22,7 +22,6 @@ so the telemetry monitor can stream either mode.
 
 from __future__ import annotations
 
-import warnings
 from collections import OrderedDict
 
 import numpy as np
@@ -305,32 +304,3 @@ class StreamingProfile:
     def result(self) -> "ProfileResult":
         """Alias for `snapshot()` — the v2 result API surface."""
         return self.snapshot()
-
-    # -- deprecated raw accessors (pre-PR-5 surface; remove next release) ----
-
-    def distances(self) -> np.ndarray:
-        warnings.warn(
-            "StreamingProfile.distances() is deprecated and will be removed "
-            "in the next release; use snapshot().p (a ProfileResult).",
-            DeprecationWarning, stacklevel=2)
-        return np.sqrt(np.maximum(self._profile, 0.0))
-
-    def indices(self) -> np.ndarray:
-        warnings.warn(
-            "StreamingProfile.indices() is deprecated and will be removed "
-            "in the next release; use snapshot().i (a ProfileResult).",
-            DeprecationWarning, stacklevel=2)
-        return self._index.copy()
-
-    def top_discord(self) -> tuple[int, float]:
-        warnings.warn(
-            "StreamingProfile.top_discord() is deprecated and will be "
-            "removed in the next release; use "
-            "repro.core.analytics.top_discord(profile.snapshot()).",
-            DeprecationWarning, stacklevel=2)
-        d = np.sqrt(np.maximum(self._profile, 0.0))
-        fin = np.isfinite(d)
-        if not fin.any():
-            return -1, float("nan")
-        i = int(np.argmax(np.where(fin, d, -np.inf)))
-        return i, float(d[i])

@@ -117,7 +117,7 @@ def self_cross(stats: ZStats) -> CrossStats:
 
 
 def cross_stats_from_parts(stats_a: ZStats, wa, stats_b: ZStats, wb,
-                           out_dtype=None) -> CrossStats:
+                           out_dtype=None, seed_dtype=None) -> CrossStats:
     """Assemble a `CrossStats` from per-series parts — the `(stats, centered
     windows)` pairs `compute_stats_host(..., return_centered_windows=True)`
     yields. This is the seam that lets a RESIDENT side be computed once and
@@ -128,17 +128,26 @@ def cross_stats_from_parts(stats_a: ZStats, wa, stats_b: ZStats, wb,
     restarts from well-conditioned values on every diagonal. Each stats pass
     centers its series around its own mean; the seeds are dot products of
     PER-WINDOW-centered rows, which that global shift cannot change.
+
+    `seed_dtype` is the EMITTED dtype of the seed array (`PrecisionSpec`'s
+    `seed_dot` role); it defaults to `out_dtype`. The dots themselves are
+    always computed in f64 and rounded exactly once at the end.
     """
     import numpy as np
 
+    wa = np.asarray(wa, np.float64)
+    wb = np.asarray(wb, np.float64)
     neg = wa[1:] @ wb[0]            # k = -1 .. -(l_a-1), start cells (-k, 0)
     pos = wb @ wa[0]                # k = 0 .. l_b-1,     start cells (0, k)
-    cov0s = np.concatenate([neg[::-1], pos]).astype(np.float32)
-    dt = jnp.float32 if out_dtype is None else out_dtype
-    return CrossStats(a=stats_a, b=stats_b, cov0s=jnp.asarray(cov0s, dt))
+    if seed_dtype is None:
+        seed_dtype = out_dtype
+    dt = jnp.float32 if seed_dtype is None else seed_dtype
+    cov0s = jnp.asarray(np.concatenate([neg[::-1], pos]), dt)
+    return CrossStats(a=stats_a, b=stats_b, cov0s=cov0s)
 
 
-def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None) -> CrossStats:
+def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None,
+                             seed_dtype=None) -> CrossStats:
     """Build AB-join streams host-side in f64 (same rationale as
     `compute_stats_host`), then assemble via `cross_stats_from_parts`.
 
@@ -153,12 +162,15 @@ def compute_cross_stats_host(ts_a, ts_b, window: int, out_dtype=None) -> CrossSt
     """
     m = int(window)
     sa, wa = compute_stats_host(ts_a, m, out_dtype=out_dtype,
+                                seed_dtype=seed_dtype,
                                 min_subsequences=1,
                                 return_centered_windows=True)
     sb, wb = compute_stats_host(ts_b, m, out_dtype=out_dtype,
+                                seed_dtype=seed_dtype,
                                 min_subsequences=1,
                                 return_centered_windows=True)
-    return cross_stats_from_parts(sa, wa, sb, wb, out_dtype=out_dtype)
+    return cross_stats_from_parts(sa, wa, sb, wb, out_dtype=out_dtype,
+                                  seed_dtype=seed_dtype)
 
 
 def moving_mean_var(ts: jax.Array, m: int) -> tuple[jax.Array, jax.Array]:
@@ -250,17 +262,26 @@ def compute_stats_jit(ts: jax.Array, window: int) -> ZStats:
     return compute_stats(ts, window)
 
 
-def compute_stats_host(ts, window: int, out_dtype=None,
+def compute_stats_host(ts, window: int, out_dtype=None, seed_dtype=None,
                        min_subsequences: int | None = None, *,
                        return_centered_windows: bool = False):
-    """Build the NATSA streams in float64 on the HOST, emit f32 streams.
+    """Build the NATSA streams in float64 on the HOST, emit `out_dtype`
+    streams (default f32).
 
     The in-graph `compute_stats` suffers catastrophic cancellation in f32
     (E[x^2]-E[x]^2 and qt0 - m*mu0*muk) whenever the series has a large
     offset/level — e.g. random walks. z-normalized distance only depends on
     per-window deviations, so the O(n) precompute is done once in f64 numpy
     (stream preparation = data ingestion; TPUs never see f64) and the device
-    recurrence consumes well-conditioned f32 streams.
+    recurrence consumes well-conditioned reduced-precision streams.
+
+    `out_dtype` is the emitted STREAM dtype (`PrecisionSpec.stream`): every
+    array is computed in f64 and rounded exactly ONCE to it — the default
+    f32 emission is bitwise-identical to the historical behavior, and a
+    16-bit request never double-rounds through f32. `seed_dtype` overrides
+    the dtype of the `cov0` seed array only (`PrecisionSpec.seed_dot`);
+    seeds tolerate less rounding than the O(1)-magnitude centered streams
+    because they carry full covariance magnitudes.
 
     `min_subsequences` relaxes the self-join-oriented n >= 2m check: the B
     side of an AB join only needs n >= m + min_subsequences - 1.
@@ -325,9 +346,11 @@ def compute_stats_host(ts, window: int, out_dtype=None,
     dg = np.concatenate([[0.0], (tail[: l - 1] - mu[1:]) + (head - mu[:-1])])
     cov0 = w @ w[0]
     dt = jnp.float32 if out_dtype is None else out_dtype
-    f = lambda x: jnp.asarray(np.asarray(x, np.float32), dt)
+    sdt = dt if seed_dtype is None else seed_dtype
+    # single rounding f64 -> target dtype (never through an f32 staging cast)
+    f = lambda x, d=dt: jnp.asarray(np.asarray(x, np.float64), d)
     stats = ZStats(ts=f(t), mu=f(mu), invn=f(invn), df=f(df), dg=f(dg),
-                   cov0=f(cov0), window=m)
+                   cov0=f(cov0, sdt), window=m)
     if return_centered_windows:
         return stats, w
     return stats

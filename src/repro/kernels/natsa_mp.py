@@ -52,9 +52,25 @@ bank is revisited consecutively within one row tile and re-fetched when the
 row loop wraps the bank index back down (correct on the sequential TPU grid;
 the wrap costs one HBM round-trip per bank per row tile).
 
+The j-side streams are DOUBLE-BUFFERED diagonal slabs, not whole-array VMEM
+residents: each of df_j/dg_j/invn_j is passed TWICE with (JB,)-blocked
+specs whose index maps select consecutive blocks `s // JB` and
+`s // JB + 1` (s the tile's flat window start, JB = it+dt rounded up to the
+lane width). The pair concatenates in-kernel into one contiguous 2*JB
+window covering every strip of the tile, so the VMEM working set of the j
+side is two JB blocks however long the series grows — and Pallas's grid
+pipeline prefetches the NEXT tile's blocks while the current tile computes
+(multi-buffered BlockSpecs), the software shape of NATSA's
+stream-while-compute PU front end. Consecutive diag steps mostly revisit
+the same block pair, which the pipeline recognizes and skips re-fetching.
+
 Layout note: tiles are (DT, IT) with diagonals on sublanes and rows on lanes;
-IT is a multiple of 128. Validated with interpret=True on CPU; compiled path
-targets TPU Mosaic.
+IT is a multiple of 128. Streams may arrive in a REDUCED dtype (the plan's
+stream precision, e.g. bf16 — that is the HBM traffic the roofline model
+charges); every arithmetic step upcasts to f32 right after the VMEM loads,
+and the covariance scratch/outputs stay f32 (the plan layer rejects
+accum="float64" for this backend). Validated with interpret=True on CPU;
+compiled path targets TPU Mosaic (AOT-lowered in CI via jax.export).
 """
 
 from __future__ import annotations
@@ -68,38 +84,86 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG = -2.0  # correlations live in [-1, 1]
 
+LANE = 128  # TPU lane width; JB blocks are multiples of this
 
-def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
+
+def j_block(it: int, dt: int) -> int:
+    """Width of one j-side stream block: the (it+dt)-wide tile window,
+    rounded up to the lane width so blocked loads stay aligned. Any tile's
+    window [s, s+it+dt) then spans at most the two consecutive blocks
+    s // JB and s // JB + 1."""
+    return -(-(it + dt) // LANE) * LANE
+
+
+def _cumsum_lanes(x, dt: int, it: int):
+    """Inclusive prefix sum along lanes (axis=1) as a Hillis-Steele
+    log-step doubling of static shift-adds — Mosaic has no cumsum
+    primitive, and log2(IT) lane-shifted vector adds keep the whole scan
+    at VREG distance (the re-association note in the module docstring)."""
+    k = 1
+    while k < it:
+        shifted = jnp.concatenate(
+            [jnp.zeros((dt, k), x.dtype),
+             jax.lax.slice_in_dim(x, 0, it - k, axis=1)], axis=1)
+        x = x + shifted
+        k *= 2
+    return x
+
+
+def _kernel(df_row, dg_row, invn_row, df_j0, dg_j0, invn_j0,
+            df_j1, dg_j1, invn_j1, cov0,
             _colc_init, _coli_init, out_corr, out_idx, out_colc, out_coli,
-            carry, *, it: int, dt: int, k_start: int, k_end: int, l_i: int,
-            l_j: int, jpad: int, col_stride: int):
+            carry, *, it: int, dt: int, jb: int, k_start: int, k_end: int,
+            l_i: int, l_j: int, jpad: int, col_stride: int):
     i_idx = pl.program_id(0)
     d_idx = pl.program_id(1)
     i0 = i_idx * it
     k0 = k_start + d_idx * dt          # signed diagonal offset of this tile
 
-    # seed the diagonal registers at the first row tile
+    # seed the diagonal registers at the first row tile (cov0 rides along as
+    # one full-array block — a (DT,)-blocked spec would violate Mosaic's
+    # lane-divisibility rule)
     @pl.when(i_idx == 0)
     def _seed():
-        carry[d_idx, :] = cov0[:]
+        carry[d_idx, :] = cov0[pl.ds(d_idx * dt, dt)]
 
-    dfi = df_row[0, :]                      # (IT,)
-    dgi = dg_row[0, :]
-    invni = invn_row[0, :]
+    # reduced-dtype streams upcast at VREG distance — HBM moved the narrow
+    # bytes, the VPU computes wide
+    dfi = df_row[:].astype(jnp.float32)  # (IT,)
+    dgi = dg_row[:].astype(jnp.float32)
+    invni = invn_row[:].astype(jnp.float32)
 
-    # gather the j-side strips for each diagonal in the tile: row dd reads
-    # [i0+k0+dd, i0+k0+dd+IT) — overlapping windows, hence dynamic loads.
-    # `jpad` shifts signed positions into the zero-prepadded arrays.
-    def strip(ref, dd):
-        return ref[pl.ds(i0 + k0 + dd + jpad, it)]
+    # j-side strips for each diagonal in the tile: row dd covers
+    # [i0+k0+dd, i0+k0+dd+IT) — all of them inside the concatenated
+    # double-buffer window [p*JB, (p+2)*JB), p = s // JB, s the tile's flat
+    # start (`jpad` shifts signed positions into the zero-prepadded space).
+    # ONE dynamic left-rotate (pltpu.roll — Mosaic's DynamicRotate; value
+    # dynamic_slice does not lower) aligns the window start at 0, then each
+    # strip is a STATIC slice.
+    s = i0 + k0 + jpad
+    local = s - (s // jb) * jb
 
-    dfj = jnp.stack([strip(df_full, dd) for dd in range(dt)])      # (DT, IT)
-    dgj = jnp.stack([strip(dg_full, dd) for dd in range(dt)])
-    invnj = jnp.stack([strip(invn_full, dd) for dd in range(dt)])
+    # pltpu.roll(x, s) is a RIGHT rotate (out[i] = x[i - s]); aligning the
+    # window start at 0 needs a LEFT rotate by `local`, i.e. 2*JB - local
+    lshift = jax.lax.rem(2 * jb - local, 2 * jb)
+
+    def strips(r0, r1):
+        w = jnp.concatenate([r0[:], r1[:]]).astype(jnp.float32)  # (2*JB,)
+        w = pltpu.roll(w, lshift, 0)          # w[t] <- window[local + t]
+        return jnp.stack([
+            jax.lax.slice_in_dim(w, dd, dd + it)
+            for dd in range(dt)])                                # (DT, IT)
+
+    dfj = strips(df_j0, df_j1)
+    dgj = strips(dg_j0, dg_j1)
+    invnj = strips(invn_j0, invn_j1)
 
     delta = dfi[None, :] * dgj + dfj * dgi[None, :]                # (DT, IT)
-    cov = carry[d_idx, :][:, None] + jnp.cumsum(delta, axis=1)
-    carry[d_idx, :] = cov[:, -1]
+    cov = carry[d_idx, :][:, None] + _cumsum_lanes(delta, dt, it)
+    # jnp's x[:, -1] rewrites to (constant-start) dynamic_slice, which
+    # Mosaic does not lower — spell the static slice + squeeze out
+    carry[d_idx, :] = jax.lax.squeeze(
+        jax.lax.slice_in_dim(cov, it - 1, it, axis=1), (1,))
 
     corr = cov * invni[None, :] * invnj
 
@@ -117,23 +181,27 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
     corr = jnp.where(valid, corr, NEG)
 
     # plain max + equality-recovered arg: cheaper than a variadic argmax
-    # reduce on both the interpret (XLA CPU) and Mosaic paths
+    # reduce on both the interpret (XLA CPU) and Mosaic paths; the arg
+    # reduce runs in f32 (Mosaic has no integer reductions) — diagonal
+    # offsets are < DT, exactly representable
     tile_best = jnp.max(corr, axis=0)                              # (IT,)
-    best_d = jnp.max(jnp.where(corr == tile_best[None, :], dd, -1), axis=0)
+    best_d = jnp.max(
+        jnp.where(corr == tile_best[None, :], dd.astype(jnp.float32), -1.0),
+        axis=0).astype(jnp.int32)
     tile_idx = (i0 + jnp.arange(it) + k0 + best_d).astype(jnp.int32)
     tile_idx = jnp.where(tile_best > NEG, tile_idx, -1)
 
     @pl.when(d_idx == 0)
     def _init():
-        out_corr[0, :] = tile_best
-        out_idx[0, :] = tile_idx
+        out_corr[:] = tile_best
+        out_idx[:] = tile_idx
 
     @pl.when(d_idx != 0)
     def _acc():
-        prev = out_corr[0, :]
+        prev = out_corr[:]
         take = tile_best > prev
-        out_corr[0, :] = jnp.where(take, tile_best, prev)
-        out_idx[0, :] = jnp.where(take, tile_idx, out_idx[0, :])
+        out_corr[:] = jnp.where(take, tile_best, prev)
+        out_idx[:] = jnp.where(take, tile_idx, out_idx[:])
 
     # -- column harvest of the SAME tile --------------------------------------
     # the tile covers columns j in [i0+k0, i0+k0+IT+DT); the best value ending
@@ -143,23 +211,45 @@ def _kernel(df_row, dg_row, invn_row, df_full, dg_full, invn_full, cov0,
     # s = i0 + k0 + jpad; its bank is s // col_stride (the out-spec fetched
     # exactly that bank), and the bank overlap guarantees local + W fits.
     w = it + dt
-    shifted = jnp.stack([
-        jnp.concatenate([jnp.full((d_,), NEG, jnp.float32), corr[d_, :],
-                         jnp.full((dt - d_,), NEG, jnp.float32)])
-        for d_ in range(dt)])                                      # (DT, W)
+
+    def _shift_row(d_):
+        # skip zero-length pads: Mosaic rejects zero-sized vectors
+        row = jax.lax.squeeze(jax.lax.slice_in_dim(corr, d_, d_ + 1, axis=0),
+                              (0,))
+        parts = ([jnp.full((d_,), NEG, jnp.float32)] if d_ else []) + [row] \
+            + ([jnp.full((dt - d_,), NEG, jnp.float32)] if dt - d_ else [])
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    shifted = jnp.stack([_shift_row(d_) for d_ in range(dt)])      # (DT, W)
     col_best = jnp.max(shifted, axis=0)                            # (W,)
-    ddw = jax.lax.broadcasted_iota(jnp.int32, (dt, w), 0)
-    col_d = jnp.max(jnp.where(shifted == col_best[None, :], ddw, -1), axis=0)
+    ddw = jax.lax.broadcasted_iota(jnp.float32, (dt, w), 0)
+    col_d = jnp.max(jnp.where(shifted == col_best[None, :], ddw, -1.0),
+                    axis=0).astype(jnp.int32)
     col_i = (i0 + jnp.arange(w) - col_d).astype(jnp.int32)
     col_i = jnp.where(col_best > NEG, col_i, -1)
 
+    # the store window [local, local+w) is addressed STATICALLY: pad the
+    # candidates to the full bank width with NEG/-1 (max-merge no-ops),
+    # right-rotate them into place (left-rotate by bank_w - local), and
+    # read-modify-max the WHOLE bank block — Mosaic has no dynamic-start
+    # lane store, but a full-block rmw with a dynamic rotate lowers
     s = i0 + k0 + jpad
     local = s - (s // col_stride) * col_stride
-    prev_c = out_colc[0, pl.ds(local, w)]
-    prev_i = out_coli[0, pl.ds(local, w)]
-    take_c = col_best > prev_c
-    out_colc[0, pl.ds(local, w)] = jnp.where(take_c, col_best, prev_c)
-    out_coli[0, pl.ds(local, w)] = jnp.where(take_c, col_i, prev_i)
+    bank_w = out_colc.shape[0]
+
+    def _pad_bank(x, fill, dtype):
+        if bank_w == w:
+            return x
+        return jnp.concatenate([x, jnp.full((bank_w - w,), fill, dtype)])
+
+    cand_c = pltpu.roll(_pad_bank(col_best, NEG, jnp.float32),
+                        local, 0)             # cand_c[local + t] = col_best[t]
+    cand_i = pltpu.roll(_pad_bank(col_i, -1, jnp.int32), local, 0)
+    prev_c = out_colc[:]
+    prev_i = out_coli[:]
+    take_c = cand_c > prev_c
+    out_colc[:] = jnp.where(take_c, cand_c, prev_c)
+    out_coli[:] = jnp.where(take_c, cand_i, prev_i)
 
 
 def col_bank_layout(col_len: int, it: int, dt: int,
@@ -210,10 +300,12 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
     in ONE launch.
 
     Inputs are the padded streams:
-      df_i/dg_i/invn_i : (n_row_tiles*IT,) f32 — A-side row streams
-      df_j/dg_j/invn_j : (JP,) f32 — B-side, zero-prepadded by `jpad` with
+      df_i/dg_i/invn_i : (n_row_tiles*IT,) — A-side row streams
+      df_j/dg_j/invn_j : (JP,) — B-side, zero-prepadded by `jpad` with
           JP >= n_row_tiles*IT + k_start + n_diag_tiles*DT + jpad
       cov0             : (n_diag_tiles*DT,) f32 — CrossStats.cov0s slice
+    Streams may be any float dtype (the plan's stream precision — bf16
+    halves the HBM bytes per cell); the kernel upcasts to f32 in VMEM.
     Returns (corr (n_row_tiles*IT,), idx, col_corr (col_len,), col_idx):
     `idx` is the best j in B per row of A (-1 where no diagonal covers the
     row); `col_corr[j + jpad]` is the best correlation ending at column j of
@@ -242,49 +334,67 @@ def rowmax_profile_ab(df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0, *,
     assert k_start + jpad >= 0, (k_start, jpad)
     n_banks, bank_w, stride = col_bank_layout(col_len, it, dt, col_tile)
 
-    df_row = df_i.reshape(n_rows, it)
-    dg_row = dg_i.reshape(n_rows, it)
-    invn_row = invn_i.reshape(n_rows, it)
+    # double-buffered j side: zero-extend the streams so the LAST tile's
+    # second block (index s_max // JB + 1) is still in range, then hand the
+    # same arrays in twice under consecutive block index maps
+    jb = j_block(it, dt)
+    s_max = (n_rows - 1) * it + k_start + (n_diags - 1) * dt + jpad
+    j_len = (s_max // jb + 2) * jb
+    if j_len > jp:
+        df_j = jnp.pad(df_j, (0, j_len - jp))
+        dg_j = jnp.pad(dg_j, (0, j_len - jp))
+        invn_j = jnp.pad(invn_j, (0, j_len - jp))
 
+    # every blocked ref is 1-D with a lane-aligned (or full-array) block —
+    # the shapes Mosaic's divisibility rule accepts, so interpret=False
+    # lowers (a (1, it)-blocked 2-D row view does not)
     grid = (n_rows, n_diags)
-    row_spec = pl.BlockSpec((1, it), lambda i, d: (i, 0))
-    full_spec = pl.BlockSpec((jp,), lambda i, d: (0,))
-    cov0_spec = pl.BlockSpec((dt,), lambda i, d: (d,))
+    row_spec = pl.BlockSpec((it,), lambda i, d: (i,))
+    j_spec0 = pl.BlockSpec(
+        (jb,), lambda i, d: ((i * it + k_start + d * dt + jpad) // jb,))
+    j_spec1 = pl.BlockSpec(
+        (jb,), lambda i, d: ((i * it + k_start + d * dt + jpad) // jb + 1,))
+    cov0_spec = pl.BlockSpec((n_diags * dt,), lambda i, d: (0,))
+    # the flat (n_banks*bank_w,) layout concatenates the overlapped banks;
+    # block index b = window_start // stride selects bank b's bank_w-wide
+    # slice (the kernel's local offset is computed against `stride`)
     col_spec = pl.BlockSpec(
-        (1, bank_w),
-        lambda i, d: ((i * it + k_start + d * dt + jpad) // stride, 0))
-    out_specs = [pl.BlockSpec((1, it), lambda i, d: (i, 0))] * 2 + \
-        [col_spec, col_spec]
+        (bank_w,),
+        lambda i, d: ((i * it + k_start + d * dt + jpad) // stride,))
+    out_specs = [row_spec, row_spec, col_spec, col_spec]
 
     # banks are initialized through aliasing: an index-mapped bank has no
     # cheap "first visit" predicate, so the NEG/-1 fill arrives as an
     # aliased input instead of an in-kernel @pl.when store
-    colc_init = jnp.full((n_banks, bank_w), NEG, jnp.float32)
-    coli_init = jnp.full((n_banks, bank_w), -1, jnp.int32)
+    colc_init = jnp.full((n_banks * bank_w,), NEG, jnp.float32)
+    coli_init = jnp.full((n_banks * bank_w,), -1, jnp.int32)
 
-    kernel = functools.partial(_kernel, it=it, dt=dt, k_start=k_start,
+    kernel = functools.partial(_kernel, it=it, dt=dt, jb=jb, k_start=k_start,
                                k_end=k_end, l_i=l_i, l_j=l_j, jpad=jpad,
                                col_stride=stride)
     corr, idx, colc, coli = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[row_spec, row_spec, row_spec,
-                  full_spec, full_spec, full_spec, cov0_spec,
+                  j_spec0, j_spec0, j_spec0,
+                  j_spec1, j_spec1, j_spec1, cov0_spec,
                   col_spec, col_spec],
         out_specs=out_specs,
-        out_shape=[jax.ShapeDtypeStruct((n_rows, it), jnp.float32),
-                   jax.ShapeDtypeStruct((n_rows, it), jnp.int32),
-                   jax.ShapeDtypeStruct((n_banks, bank_w), jnp.float32),
-                   jax.ShapeDtypeStruct((n_banks, bank_w), jnp.int32)],
+        out_shape=[jax.ShapeDtypeStruct((n_rows * it,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_rows * it,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_banks * bank_w,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_banks * bank_w,), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((n_diags, dt), jnp.float32)],
-        input_output_aliases={7: 2, 8: 3},
+        input_output_aliases={10: 2, 11: 3},
         interpret=interpret,
-    )(df_row, dg_row, invn_row, df_j, dg_j, invn_j, cov0,
-      colc_init, coli_init)
+    )(df_i, dg_i, invn_i, df_j, dg_j, invn_j,
+      df_j, dg_j, invn_j, cov0, colc_init, coli_init)
+    colc = colc.reshape(n_banks, bank_w)
+    coli = coli.reshape(n_banks, bank_w)
     if return_banked:
-        return corr.reshape(-1), idx.reshape(-1), colc, coli, stride
+        return corr, idx, colc, coli, stride
     flat_c, flat_i = reduce_col_banks(colc, coli, stride, col_len)
-    return corr.reshape(-1), idx.reshape(-1), flat_c, flat_i
+    return corr, idx, flat_c, flat_i
 
 
 def rowmax_profile(df, dg, invn, cov0, *, it: int, dt: int, excl: int, l: int,

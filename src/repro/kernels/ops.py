@@ -19,10 +19,15 @@ real TPU pass interpret=False.
 
 from __future__ import annotations
 
+import functools
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core.zstats import CrossStats, ZStats, compute_stats_host
+from repro.core.zstats import (
+    CrossStats, ZStats, compute_cross_stats_host, compute_stats_host,
+)
 from repro.kernels import DEFAULT_DT, DEFAULT_IT, natsa_mp
 
 NEG = natsa_mp.NEG
@@ -40,7 +45,10 @@ def _pad_streams(stats: ZStats, it: int, dt: int, excl: int):
     def p(x):
         return jnp.pad(x, (0, pad))
 
-    cov0p = jnp.pad(stats.cov0[excl:], (0, n_diags * dt - n_diag_total))
+    # seeds feed the f32 covariance scratch directly — always widened here,
+    # whatever (possibly reduced) dtype the streams arrive in
+    cov0p = jnp.pad(stats.cov0.astype(jnp.float32)[excl:],
+                    (0, n_diags * dt - n_diag_total))
     return (p(stats.df), p(stats.dg), p(stats.invn), cov0p,
             n_rows, n_diags, l)
 
@@ -54,15 +62,17 @@ AUTO_COL_BANK_MIN = 8192
 def auto_col_tile(col_len: int, it: int, dt: int,
                   col_tile: int | None) -> int | None:
     """Resolve the col_tile policy: None = auto (bank long spaces into
-    max(4096, 2*(it+dt)) blocks, keep short ones unbanked), 0 = force one
-    full-length bank, any other int = explicit block bound."""
+    max(4096, 2*(it+dt)) blocks rounded up to the lane width — Mosaic's
+    compiled path needs lane-aligned bank blocks — keep short ones
+    unbanked), 0 = force one full-length bank, any other int = explicit
+    block bound."""
     if col_tile == 0:
         return None
     if col_tile is not None:
         return int(col_tile)
     if col_len <= AUTO_COL_BANK_MIN:
         return None
-    return max(4096, 2 * (it + dt))
+    return -(-max(4096, 2 * (it + dt)) // 128) * 128
 
 
 def rowmax_from_stats(stats: ZStats, *, excl: int, it: int = DEFAULT_IT,
@@ -93,7 +103,8 @@ def _merge_corr(corr_a, idx_a, corr_b, idx_b):
 def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
                          it: int = DEFAULT_IT, dt: int = DEFAULT_DT,
                          col_tile: int | None = None, interpret: bool = True,
-                         k: int = 1, harvest: str = "merged"):
+                         k: int = 1, harvest: str = "merged",
+                         precision=None):
     """Full matrix profile via the Pallas kernel -> `ProfileResult` (the
     left/right split — the kernel's column/row halves — finishes lazily
     from the launch's retained halves on first access; `harvest="both"`
@@ -115,8 +126,8 @@ def natsa_matrix_profile(ts, window: int, *, exclusion: int | None = None,
     plan = plan_mod.plan_sweep(m, arr.shape[0] - m + 1, exclusion=exclusion,
                                backend="kernel", it=it, dt=dt,
                                col_tile=col_tile, interpret=interpret, k=k,
-                               harvest=harvest)
-    stats = compute_stats_host(arr, m)
+                               harvest=harvest, precision=precision)
+    stats = compute_stats_host(arr, m, **plan_mod.stats_dtypes_for(plan))
     res = plan_mod.execute(plan, stats)
     return build_result(plan, res, stats)
 
@@ -149,7 +160,7 @@ def _pad_streams_ab(cross: CrossStats, it: int, dt: int, s0: int, s1: int):
         return jnp.pad(x, (jpad, back))
 
     u = np.clip(np.arange(s0, s0 + n_diags * dt) + la - 1, 0, la + lb - 2)
-    cov0p = jnp.take(cross.cov0s, jnp.asarray(u))
+    cov0p = jnp.take(cross.cov0s.astype(jnp.float32), jnp.asarray(u))
     return (prow(cross.a.df), prow(cross.a.dg), prow(cross.a.invn),
             pj(cross.b.df), pj(cross.b.dg), pj(cross.b.invn), cov0p,
             n_rows, n_diags, jpad)
@@ -200,7 +211,7 @@ def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
                   it: int = DEFAULT_IT, dt: int = DEFAULT_DT,
                   col_tile: int | None = None,
                   interpret: bool = True, return_b: bool = False,
-                  k: int = 1):
+                  k: int = 1, precision=None):
     """AB join via the Pallas kernel -> `ProfileResult`.
 
     With `return_b=True` the result eagerly carries B's profile against A
@@ -222,7 +233,7 @@ def natsa_ab_join(ts_a, ts_b, window: int, *, exclusion: int | None = None,
                                exclusion=exclusion, backend="kernel",
                                harvest="both" if return_b else "merged",
                                it=it, dt=dt, col_tile=col_tile,
-                               interpret=interpret, k=k)
+                               interpret=interpret, k=k, precision=precision)
     # swap_ab: row tiles cover the SHORT side — an (l_a/it x (l_a+l_b)/dt)
     # grid shrinks to (l_b/it x (l_a+l_b)/dt), the kernel-side row clamp
     stats = plan_mod.cross_stats_for(plan, a, b)
@@ -252,34 +263,38 @@ def kernel_vmem_bytes(l: int, it: int, dt: int,
 
 
 def hbm_bytes_per_cell(l: int, excl: int, it: int = DEFAULT_IT,
-                       dt: int = DEFAULT_DT) -> float:
+                       dt: int = DEFAULT_DT, *,
+                       stream_bytes: int = 4) -> float:
     """Roofline model of HBM traffic per distance-matrix cell.
 
     ONE pass now computes both profile sides (the reversed second pass is
     gone), so the per-cell traffic of the streams is half the old scheme's
-    while each cell yields two profile updates. Two regimes
-    (§Roofline-NATSA):
+    while each cell yields two profile updates. `stream_bytes` is the
+    per-element width of the df/dg/invn streams — the plan's stream
+    precision (2 for bf16/f16 halves every stream term below; seeds,
+    outputs and accumulators stay 4-byte). Two regimes (§Roofline-NATSA):
       * VMEM-resident (l small enough): every stream element crosses
         HBM->VMEM ONCE — bytes/cell ~ O(1/l) -> effectively free.
         This is the TPU realization of NATSA's near-data principle.
       * streamed (l beyond VMEM): the engine row-blocks the space; the
         j-side strips and the column-accumulator window are re-fetched once
         per (row-tile, diag-tile), so bytes/cell ~ c*(it+dt)/(it*dt) —
-        driven down by larger tiles.
+        driven down by larger tiles and narrower streams.
     Used by benchmarks and EXPERIMENTS.md §Roofline-NATSA.
     """
     n_rows = -(-l // it)
     n_diags = -(-(l - excl) // dt)
     cells = float(sum(l - k for k in range(excl, l)))
     f32 = 4
+    sb = int(stream_bytes)
     if kernel_vmem_bytes(l, it, dt) <= VMEM_BYTES:
-        total = (3 * (l + it + dt) * f32                # streams, once
+        total = (3 * (l + it + dt) * sb                 # streams, once
                  + n_diags * dt * f32                   # seeds
                  + n_rows * it * (f32 + 4) * 2          # row outputs rw
                  + (l + it + dt) * (f32 + 4) * 2)       # col accumulators rw
         return total / max(cells, 1.0)
-    i_side = n_rows * it * 3 * f32                      # once per row tile
-    j_side = n_rows * n_diags * (it + dt) * 3 * f32     # per (row, diag) tile
+    i_side = n_rows * it * 3 * sb                       # once per row tile
+    j_side = n_rows * n_diags * (it + dt) * 3 * sb      # per (row, diag) tile
     outs = n_rows * n_diags * it * (f32 + 4) * 2        # rw of row corr+idx
     cols = n_rows * n_diags * (it + dt) * (f32 + 4) * 2  # rw of col window
     seeds = n_diags * dt * f32
@@ -292,17 +307,112 @@ def hbm_bytes_per_cell(l: int, excl: int, it: int = DEFAULT_IT,
 FLOPS_PER_CELL = 9.0
 
 
-def kernel_roofline(l: int, excl: int, it: int, dt: int) -> dict:
+def kernel_roofline(l: int, excl: int, it: int, dt: int, *,
+                    stream_bytes: int = 4) -> dict:
     """Compute- and memory-term seconds for the full profile at (l, it, dt),
     single chip (197 TFLOP/s, 819 GB/s) — the paper-technique §Perf cell.
-    Each cell is visited ONCE and contributes both profile sides."""
+    Each cell is visited ONCE and contributes both profile sides;
+    `stream_bytes` models the plan's stream precision (see
+    `hbm_bytes_per_cell`)."""
     cells = float(sum(l - k for k in range(excl, l)))
-    bpc = hbm_bytes_per_cell(l, excl, it, dt)
+    bpc = hbm_bytes_per_cell(l, excl, it, dt, stream_bytes=stream_bytes)
     return {
         "cells": cells,
         "bytes_per_cell": bpc,
+        "stream_bytes": int(stream_bytes),
         "t_compute_s": cells * FLOPS_PER_CELL / 197e12,
         "t_memory_s": cells * bpc / 819e9,
         "vmem_bytes": kernel_vmem_bytes(l, it, dt),
         "resident": kernel_vmem_bytes(l, it, dt) <= VMEM_BYTES,
     }
+
+
+# -- compiled (interpret=False) lowering --------------------------------------
+
+
+def aot_export_tpu(fn, *args):
+    """AOT-lower a jitted callable for TPU on ANY host — the compiled-path
+    smoke. `jax.jit(...).lower()` on a CPU-only host stops at "Only
+    interpret mode is supported on CPU backend" before Mosaic ever runs;
+    `jax.export` instead drives the FULL TPU lowering pipeline (Pallas ->
+    Mosaic -> StableHLO custom calls) cross-platform, so CI proves
+    `interpret=False` compiles without owning a TPU.
+
+    Returns the `Exported` artifact; `.mlir_module()` is the lowered module
+    (the CI gate asserts it is non-trivial and carries the Mosaic kernel).
+    Raises RuntimeError when this jax build has no export API — callers
+    skip gracefully (the 0.4.34 CI leg predates the stable module).
+    """
+    jitted = jax.jit(fn)
+    try:
+        from jax import export as _export
+        return _export.export(jitted, platforms=["tpu"])(*args)
+    except (ImportError, AttributeError, TypeError):
+        pass
+    try:
+        from jax.experimental import export as _exp
+        try:
+            return _exp.export(jitted, lowering_platforms=("tpu",))(*args)
+        except TypeError:
+            return _exp.export(jitted, platforms=["tpu"])(*args)
+    except ImportError as e:
+        raise RuntimeError(
+            "no jax.export API in this jax build; compiled-path smoke "
+            "requires jax >= 0.4.30") from e
+
+
+def compiled_lowering_smoke(n: int = 4096, window: int = 128, *,
+                            it: int = DEFAULT_IT,
+                            dt: int = DEFAULT_DT) -> dict:
+    """Prove both kernel entries LOWER with interpret=False, end to end.
+
+    Builds real stats for an (n,) self-join and an (n, n//2) AB join, then
+    AOT-exports the exact jitted kernel cores a compiled run would execute.
+    Returns {"self_module_bytes", "ab_module_bytes", "mosaic"} — all
+    nonzero/true on success (the CI compiled-smoke job gates on this).
+    Raises RuntimeError when the jax build cannot export (caller skips)."""
+    import time
+
+    from repro.core import plan as plan_mod
+
+    rng = np.random.default_rng(7)
+    ts = np.cumsum(rng.standard_normal(n))
+    m = int(window)
+    out = {}
+    t0 = time.perf_counter()
+
+    plan = plan_mod.plan_sweep(m, n - m + 1, backend="kernel", it=it, dt=dt,
+                               interpret=False)
+    stats = compute_stats_host(ts, m)
+    df, dg, invn, cov0p, n_rows, n_diags, l = _pad_streams(
+        stats, it, dt, plan.exclusion)
+    ct = auto_col_tile(n_rows * it + plan.exclusion + n_diags * dt, it, dt,
+                       plan.col_tile)
+    fn = functools.partial(natsa_mp.rowmax_profile, it=it, dt=dt,
+                           excl=plan.exclusion, l=l, col_tile=ct,
+                           interpret=False)
+    exp = aot_export_tpu(fn, df, dg, invn, cov0p)
+    mod = exp.mlir_module()
+    out["self_module_bytes"] = len(mod)
+    out["mosaic"] = ("tpu_custom_call" in mod) or ("mosaic" in mod)
+
+    ts_b = np.cumsum(rng.standard_normal(n // 2))
+    cross = compute_cross_stats_host(ts, ts_b, m)
+    (df_i, dg_i, invn_i, df_j, dg_j, invn_j, cov0p,
+     n_rows, n_diags, jpad) = _pad_streams_ab(
+        cross, it, dt, -(cross.l_a - 1), cross.l_b)
+    ct = auto_col_tile(
+        max(n_rows * it - (cross.l_a - 1) + n_diags * dt + jpad,
+            cross.l_b + jpad), it, dt, None)
+    fn_ab = functools.partial(
+        natsa_mp.rowmax_profile_ab, it=it, dt=dt,
+        k_start=-(cross.l_a - 1), k_end=cross.l_b, l_i=cross.l_a,
+        l_j=cross.l_b, jpad=jpad, col_tile=ct, interpret=False)
+    exp_ab = aot_export_tpu(fn_ab, df_i, dg_i, invn_i, df_j, dg_j, invn_j,
+                            cov0p)
+    mod_ab = exp_ab.mlir_module()
+    out["ab_module_bytes"] = len(mod_ab)
+    out["mosaic"] = out["mosaic"] and (("tpu_custom_call" in mod_ab)
+                                       or ("mosaic" in mod_ab))
+    out["lower_s"] = time.perf_counter() - t0
+    return out

@@ -168,7 +168,8 @@ class RooflineTerms:
 
 def matrix_profile_roofline(l: int, excl: int, it: int | None = None,
                             dt: int | None = None,
-                            n_chips: int = 1) -> RooflineTerms:
+                            n_chips: int = 1,
+                            stream_bytes: int = 4) -> RooflineTerms:
     """`RooflineTerms` for one NATSA matrix-profile sweep of `l` rows.
 
     Bridges the kernel's analytic data-movement model into the same
@@ -184,6 +185,11 @@ def matrix_profile_roofline(l: int, excl: int, it: int | None = None,
     — NATSA's motivating claim that the sweep is memory-bound on a
     conventional memory system once tiles outgrow VMEM residency — is what
     this function is for, not absolute seconds.
+
+    `stream_bytes` is the per-element width of the df/dg/invn streams (4
+    for the f32 default, 2 under a reduced `PrecisionSpec`); seeds,
+    profiles and column banks stay 4-byte regardless — see
+    `ops.hbm_bytes_per_cell`.
     """
     from repro.kernels import DEFAULT_DT, DEFAULT_IT, ops
 
@@ -193,9 +199,30 @@ def matrix_profile_roofline(l: int, excl: int, it: int | None = None,
     # profile sides per cell) — the same count kernel_roofline uses
     cells = float(sum(l - k for k in range(excl, l)))
     flops = cells * ops.FLOPS_PER_CELL
-    hbm_bytes = cells * ops.hbm_bytes_per_cell(l, excl, it=it, dt=dt)
+    hbm_bytes = cells * ops.hbm_bytes_per_cell(l, excl, it=it, dt=dt,
+                                               stream_bytes=stream_bytes)
     return RooflineTerms(flops_per_chip=flops / n_chips,
                          bytes_per_chip=hbm_bytes / n_chips,
                          wire_bytes_per_chip=0.0,
                          model_flops_total=flops,
                          n_chips=n_chips)
+
+
+def roofline_fraction(l: int, excl: int, elapsed_s: float,
+                      it: int | None = None, dt: int | None = None,
+                      stream_bytes: int = 4) -> float:
+    """Achieved fraction of the HBM bandwidth roofline for one measured
+    sweep: (analytic HBM bytes / `HBM_BW`) / elapsed wall seconds.
+
+    1.0 means the sweep ran exactly at the memory roofline of the modeled
+    chip; CPU-host interpret/compiled runs land far below it, but the row
+    must be NONZERO and finite — that is the CI gate: the analytic model,
+    the tile geometry, and the timer all agree on units. Reduced streams
+    (`stream_bytes=2`) lower the numerator, which is the point: the same
+    elapsed time earns a SMALLER fraction because less traffic was needed.
+    """
+    if elapsed_s <= 0.0:
+        raise ValueError(f"elapsed_s must be positive, got {elapsed_s}")
+    terms = matrix_profile_roofline(l, excl, it=it, dt=dt,
+                                    stream_bytes=stream_bytes)
+    return terms.t_memory / float(elapsed_s)

@@ -15,7 +15,6 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.matrix_profile import (
     ab_join, batch_ab_join, batch_profile, matrix_profile,
-    matrix_profile_nonnorm,
 )
 from repro.core.zstats import compute_cross_stats_host, dist_to_corr
 from repro.kernels import ops
@@ -145,7 +144,7 @@ def test_self_join_is_ab_special_case(n, m, excl, kind):
 def test_self_join_is_ab_special_case_nonnorm():
     ts = _series(300, seed=9, kind="sine")
     p_ab = ab_join(ts, ts, 16, exclusion=4, normalize=False).p
-    p_mp = matrix_profile_nonnorm(jnp.asarray(ts), 16, 4).p
+    p_mp = matrix_profile(jnp.asarray(ts), 16, 4, normalize=False).p
     np.testing.assert_allclose(np.asarray(p_ab), np.asarray(p_mp),
                                rtol=2e-3, atol=2e-3)
 

@@ -17,7 +17,9 @@ from repro.core.result import HarvestSpec, ProfileResult
 
 CORE_ALL = [
     "CrossStats",
+    "DEFAULT_PRECISION",
     "HarvestSpec",
+    "PrecisionSpec",
     "ProfileResult",
     "ProfileState",
     "StreamingFleet",
@@ -27,16 +29,17 @@ CORE_ALL = [
     "ZStats",
     "ab_join",
     "analytics",
+    "as_precision",
     "batch_ab_join",
     "batch_profile",
     "compute_cross_stats_host",
     "compute_stats",
     "corr_to_dist",
     "execute",
+    # matrix_profile_nonnorm: collapsed into matrix_profile(normalize=False)
+    # in PR 8; its one-release forwarding shim retired this release
+    # (checked below)
     "matrix_profile",
-    # matrix_profile_nonnorm: collapsed into matrix_profile(normalize=False);
-    # the deprecated shim stays importable (checked below) but is no longer
-    # public surface
     "plan_sweep",
     "round_executor",
     "self_cross",
@@ -105,6 +108,7 @@ SWEEP_PLAN_FIELDS = [
     "backend",
     "interpret",
     "batch",
+    "precision",
 ]
 
 
@@ -118,26 +122,39 @@ def test_core_all_is_pinned():
         assert hasattr(core, name), name
 
 
-def test_nonnorm_shim_importable_and_warns():
-    """One-release deprecation contract for the collapsed entry point:
-    still importable from the old locations, forwards with a warning."""
-    import warnings
-
+def test_nonnorm_shim_retired():
+    """The one-release deprecation shim has served its release and is gone
+    from BOTH old locations; matrix_profile(normalize=False) is the one
+    nonnorm entry."""
     import numpy as np
+    import pytest
 
-    from repro.core import matrix_profile_nonnorm
-    from repro.core.matrix_profile import matrix_profile_nonnorm as shim2
-
-    assert matrix_profile_nonnorm is shim2
+    with pytest.raises(ImportError):
+        from repro.core import matrix_profile_nonnorm  # noqa: F401
+    with pytest.raises(ImportError):
+        from repro.core.matrix_profile import (  # noqa: F401
+            matrix_profile_nonnorm as shim2,
+        )
     ts = np.sin(np.arange(128, dtype=np.float32) / 5.0)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        old = matrix_profile_nonnorm(ts, 16)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
     new = core.matrix_profile(ts, 16, normalize=False)
-    assert np.array_equal(np.asarray(old.p), np.asarray(new.p))
-    assert np.array_equal(np.asarray(old.i), np.asarray(new.i))
     assert not new.normalize
+
+
+def test_precision_surface_is_pinned():
+    """PrecisionSpec is plan-time state: frozen, hashable, string dtype
+    fields, presets resolvable through as_precision."""
+    from repro.core import DEFAULT_PRECISION, PrecisionSpec, as_precision
+
+    assert _fields(PrecisionSpec) == ["stream", "accum", "seed_dot"]
+    assert DEFAULT_PRECISION == PrecisionSpec()
+    assert DEFAULT_PRECISION.is_default
+    assert hash(DEFAULT_PRECISION) == hash(PrecisionSpec())
+    for preset in ("f32", "default", "bf16", "f16", "f64"):
+        spec = as_precision(preset)
+        assert isinstance(spec, PrecisionSpec), preset
+    assert as_precision(None) is DEFAULT_PRECISION
+    assert as_precision("bf16").reduced_stream
+    assert not as_precision("f32").reduced_stream
 
 
 def test_profile_result_surface_is_pinned():

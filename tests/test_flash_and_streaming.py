@@ -55,10 +55,21 @@ def test_flash_block_size_invariance():
 
 def _batch_profile(ts, m, excl, normalize):
     import jax.numpy as jnp
-    from repro.core.matrix_profile import matrix_profile, matrix_profile_nonnorm
+    from repro.core.matrix_profile import matrix_profile
     if normalize:
         return np.asarray(matrix_profile(ts, m, excl).p)
-    return np.asarray(matrix_profile_nonnorm(jnp.asarray(ts), m, excl).p)
+    return np.asarray(matrix_profile(jnp.asarray(ts), m, excl,
+                                     normalize=False).p)
+
+
+def _sp_d(sp):
+    """Streaming merged distances via the v2 surface (the raw accessors
+    retired after their deprecation release)."""
+    return np.asarray(sp.snapshot().p, np.float64)
+
+
+def _sp_i(sp):
+    return np.asarray(sp.snapshot().i)
 
 
 @pytest.mark.parametrize("normalize", [True, False])
@@ -71,7 +82,7 @@ def test_streaming_matches_batch(normalize):
     sp.append(ts[:100])
     sp.append(ts[100:])                      # mixed batch sizes
     batch = _batch_profile(ts, m, excl, normalize)
-    np.testing.assert_allclose(sp.distances(), batch, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(_sp_d(sp), batch, rtol=3e-3, atol=3e-3)
 
 
 def test_streaming_monotone_and_incremental():
@@ -79,9 +90,9 @@ def test_streaming_monotone_and_incremental():
     rng = np.random.default_rng(5)
     sp = StreamingProfile(8, 2, normalize=False)
     sp.append(rng.normal(size=60))
-    d1 = sp.distances().copy()
+    d1 = _sp_d(sp).copy()
     sp.append(rng.normal(size=20))
-    d2 = sp.distances()
+    d2 = _sp_d(sp)
     assert (d2[: d1.size] <= d1 + 1e-12).all(), "appends may only improve"
     assert d2.size > d1.size
 
@@ -93,8 +104,10 @@ def test_streaming_discord_detection():
     base[200:216] += np.linspace(0, 1.0, 16)
     sp = StreamingProfile(16, 4, normalize=False)
     sp.append(base)
-    pos, score = sp.top_discord()
-    assert 185 <= pos <= 216, (pos, score)
+    from repro.core import analytics
+    top = analytics.top_discord(sp.snapshot(), exclusion=1)
+    assert top is not None
+    assert 185 <= top.position <= 216, (top.position, top.score)
 
 
 @pytest.mark.parametrize("normalize", [True, False])
@@ -123,11 +136,11 @@ def test_streaming_query_does_not_mutate_state():
     rng = np.random.default_rng(4)
     sp = StreamingProfile(8, 2)
     sp.append(rng.normal(size=80))
-    before_d = sp.distances().copy()
+    before_d = _sp_d(sp).copy()
     before_n = sp.n_subsequences
     sp.query(rng.normal(size=30))
     assert sp.n_subsequences == before_n
-    np.testing.assert_array_equal(sp.distances(), before_d)
+    np.testing.assert_array_equal(_sp_d(sp), before_d)
 
 
 def test_streaming_query_validation():
@@ -163,8 +176,8 @@ def test_streaming_property_valid_pairs(seed):
     ts = rng.normal(size=120)
     sp = StreamingProfile(8, 2, normalize=False)
     sp.append(ts)
-    d = sp.distances()
-    idx = sp.indices()
+    d = _sp_d(sp)
+    idx = _sp_i(sp)
     for i in range(len(d)):
         if not np.isfinite(d[i]):
             continue
@@ -190,11 +203,6 @@ def test_streaming_snapshot_profile_result(normalize):
     assert res.kind == "self" and res.backend == "streaming"
     assert res.window == 8 and res.exclusion == 2
     assert res.normalize == normalize
-    import warnings
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        np.testing.assert_array_equal(res.p, sp.distances())
-        np.testing.assert_array_equal(res.i, sp.indices())
     lp = np.where(np.isfinite(res.left_p), res.left_p, np.inf)
     rp = np.where(np.isfinite(res.right_p), res.right_p, np.inf)
     merged = np.where(np.isfinite(res.p), res.p, np.inf)
@@ -208,32 +216,28 @@ def test_streaming_snapshot_profile_result(normalize):
     assert res.p.size < res2.p.size
 
 
-def test_streaming_raw_accessors_deprecated():
-    import warnings
+def test_streaming_raw_accessors_retired():
+    """The one-release deprecation shims (distances/indices/top_discord)
+    are gone — snapshot()/analytics is the only surface."""
     from repro.core.streaming import StreamingProfile
     sp = StreamingProfile(4, 1)
     sp.append(np.sin(np.arange(20.0)))
-    for call in (sp.distances, sp.indices, sp.top_discord):
-        with warnings.catch_warnings(record=True) as caught:
-            warnings.simplefilter("always")
-            call()
-        assert any(issubclass(w.category, DeprecationWarning)
-                   for w in caught), call
+    for name in ("distances", "indices", "top_discord"):
+        assert not hasattr(sp, name), name
 
 
-def test_streaming_top_discord_matches_analytics():
-    import warnings
+def test_streaming_top_discord_via_analytics():
     from repro.core import analytics
     from repro.core.streaming import StreamingProfile
     rng = np.random.default_rng(12)
     sp = StreamingProfile(8, 2, normalize=False)
     sp.append(rng.normal(size=100))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        pos, score = sp.top_discord()
     top = analytics.top_discord(sp.snapshot(), exclusion=1)
-    assert top is not None and top.position == pos
-    np.testing.assert_allclose(top.score, score)
+    d = _sp_d(sp)
+    assert top is not None
+    assert np.isfinite(top.score)
+    np.testing.assert_allclose(
+        top.score, np.max(np.where(np.isfinite(d), d, -np.inf)))
 
 
 def test_streaming_ref_cache_keyed_by_generation():

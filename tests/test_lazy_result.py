@@ -29,7 +29,7 @@ from test_ab_join import _series
 
 from repro.core import plan as plan_mod
 from repro.core.matrix_profile import (
-    ab_join, batch_profile, matrix_profile, matrix_profile_nonnorm,
+    ab_join, batch_profile, matrix_profile,
 )
 from repro.core.result import HarvestSpec, ProfileResult, build_result
 from repro.core.zstats import compute_cross_stats_host
@@ -106,8 +106,8 @@ def test_rowstream_ab_b_side_lazy_equals_eager_no_recompute():
 
 def test_nonnorm_self_split_lazy_equals_eager_no_recompute():
     ts = _series(300, seed=6, kind="noise")
-    lazy = matrix_profile_nonnorm(ts, 16, 4)
-    eager = matrix_profile_nonnorm(ts, 16, 4, harvest="both")
+    lazy = matrix_profile(ts, 16, 4, normalize=False)
+    eager = matrix_profile(ts, 16, 4, normalize=False, harvest="both")
     _eq(lazy.left_p, eager.left_p)
     _eq(lazy.right_p, eager.right_p)
     assert _lazy(lazy).recomputes == 0

@@ -180,8 +180,9 @@ def test_streaming_append_masks_and_matches_batch():
     sp = StreamingProfile(m, exclusion=3)
     sp.append(t[:100])
     sp.append(t[100:])
-    d = sp.distances()
-    i = sp.indices()
+    snap = sp.snapshot()
+    d = np.asarray(snap.p, np.float64)
+    i = np.asarray(snap.i)
     bad = _bad_windows(t, m)
     assert np.isinf(d[bad]).all()
     assert (i[bad] == -1).all()
@@ -215,10 +216,9 @@ def test_all_nan_series_yields_all_masked_profile():
 
 
 def test_nonnorm_entry_rejects_nonfinite():
-    from repro.core.matrix_profile import matrix_profile_nonnorm
     t = _series(120, 12, [(30, np.nan)])
     with pytest.raises(ValueError, match="non-finite"):
-        matrix_profile_nonnorm(t, 8)
+        matrix_profile(t, 8, normalize=False)
 
 
 if __name__ == "__main__":

@@ -23,8 +23,7 @@ from repro.core import plan as plan_mod
 from repro.core.matrix_profile import (
     DEFAULT_BAND, DEFAULT_RESEED, ab_join, ab_join_from_stats,
     ab_join_rowstream, batch_ab_join, batch_profile, matrix_profile,
-    matrix_profile_nonnorm, nonnorm_profile_from_ts, nonnorm_to_distance,
-    profile_from_stats,
+    nonnorm_profile_from_ts, nonnorm_to_distance, profile_from_stats,
 )
 from repro.core.zstats import (
     compute_cross_stats_host, compute_stats_host, corr_to_dist,
@@ -58,7 +57,7 @@ def test_matrix_profile_equals_direct_engine_call():
 def test_matrix_profile_nonnorm_equals_direct_engine_call():
     ts = _series(300, seed=2, kind="noise")
     m, excl = 16, 4
-    res = matrix_profile_nonnorm(jnp.asarray(ts), m, excl)
+    res = matrix_profile(jnp.asarray(ts), m, excl, normalize=False)
     split = nonnorm_profile_from_ts(jnp.asarray(ts, jnp.float32), m, excl)
     np.testing.assert_array_equal(np.asarray(res.p),
                                   np.asarray(nonnorm_to_distance(split.merged)))

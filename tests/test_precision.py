@@ -1,0 +1,308 @@
+"""Mixed-precision streamed sweeps: the PrecisionSpec contract.
+
+Four pinned behaviors:
+
+  * table-driven (stream, accum) pairs across every backend — band engine
+    (and its reduced-stream tile route), rowstream AB, kernel (interpret),
+    streaming fleet — against the f64 oracle, each within its ANALYTIC
+    error budget (`profile_tolerance`: derived from unit roundoffs, not
+    fitted to observations);
+  * the default spec is BITWISE-identical to the historical all-f32
+    pipeline — precision=None, "f32", "default", and an explicit
+    `PrecisionSpec()` all produce the same bits;
+  * seed dots are exact f64 regardless of the emitted stream dtype
+    (`compute_cross_stats_host` vs a longdouble oracle — the cov0s cast
+    bug regression);
+  * the plan-time validation rules (reduced streams are z-normalized
+    k=1-only; kernel/distributed pin f32 accumulation; the fleet's
+    reduced wk cache requires normalization).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.fleet import StreamingFleet
+from repro.core.matrix_profile import ab_join, matrix_profile
+from repro.core.precision import (DEFAULT_PRECISION, PrecisionSpec,
+                                  as_precision, corr_tolerance,
+                                  profile_tolerance)
+from repro.core.zstats import compute_cross_stats_host, x64_scope
+from repro.kernels import ops
+
+M = 32
+
+
+def _walk(n, seed, offset=0.0):
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.normal(size=n)) + offset
+
+
+# (stream, accum) table: every supported engine/rowstream combination.
+# The kernel and fleet prune their inapplicable rows inline (kernel pins
+# f32 accum; the fleet pins f64 accum and only the stream role applies).
+PAIRS = [
+    ("float32", "float32"),
+    ("bfloat16", "float32"),
+    ("float16", "float32"),
+    ("float32", "float64"),
+    ("float64", "float64"),
+]
+
+
+def _budget(stream, accum, window):
+    spec = PrecisionSpec(stream=stream, accum=accum)
+    return spec, profile_tolerance(spec, window)
+
+
+@pytest.fixture(scope="module")
+def self_series():
+    return _walk(1536, seed=3)
+
+
+@pytest.fixture(scope="module")
+def self_oracle(self_series):
+    with x64_scope():
+        res = matrix_profile(self_series.astype(np.float64), M,
+                             precision="f64")
+        return np.asarray(res.p, np.float64), np.asarray(res.i)
+
+
+@pytest.fixture(scope="module")
+def ab_series():
+    return _walk(900, seed=4), _walk(260, seed=5)
+
+
+@pytest.fixture(scope="module")
+def ab_oracle(ab_series):
+    a, b = ab_series
+    with x64_scope():
+        res = ab_join(a.astype(np.float64), b.astype(np.float64), M,
+                      precision="f64", return_b=True)
+        return (np.asarray(res.p, np.float64),
+                np.asarray(res.b_p, np.float64))
+
+
+@pytest.mark.parametrize("stream,accum", PAIRS)
+def test_engine_self_within_budget(self_series, self_oracle, stream, accum):
+    spec, tol = _budget(stream, accum, M)
+    with x64_scope():             # accum="float64" must be REAL f64
+        p = np.asarray(matrix_profile(self_series, M, precision=spec).p,
+                       np.float64)
+    p64, _ = self_oracle
+    finite = np.isfinite(p64) & np.isfinite(p)
+    assert finite.any()
+    assert np.max(np.abs(p[finite] - p64[finite])) <= tol, (stream, accum)
+
+
+@pytest.mark.parametrize("stream,accum", PAIRS)
+def test_rowstream_ab_within_budget(ab_series, ab_oracle, stream, accum):
+    a, b = ab_series
+    spec, tol = _budget(stream, accum, M)
+    with x64_scope():
+        plan = plan_mod.plan_sweep(M, len(a) - M + 1, len(b) - M + 1,
+                                   backend="rowstream", precision=spec)
+        res = ab_join(a, b, M, precision=spec, return_b=True)
+        pa = np.asarray(res.p, np.float64)
+        pb = np.asarray(res.b_p, np.float64)
+    assert plan.backend == "rowstream"
+    for got, want in ((pa, ab_oracle[0]), (pb, ab_oracle[1])):
+        finite = np.isfinite(want) & np.isfinite(got)
+        assert finite.any()
+        assert np.max(np.abs(got[finite] - want[finite])) <= tol, (stream,
+                                                                   accum)
+
+
+@pytest.mark.parametrize("stream,accum",
+                         [p for p in PAIRS if p[1] == "float32"])
+def test_kernel_interp_within_budget(self_series, self_oracle, stream, accum):
+    spec, tol = _budget(stream, accum, M)
+    p = np.asarray(ops.natsa_matrix_profile(self_series, M, it=64, dt=8,
+                                            precision=spec).p, np.float64)
+    p64, _ = self_oracle
+    finite = np.isfinite(p64) & np.isfinite(p)
+    assert finite.any()
+    assert np.max(np.abs(p[finite] - p64[finite])) <= tol, (stream, accum)
+
+
+@pytest.mark.parametrize("stream", ["float64", "bfloat16", "float16"])
+def test_fleet_within_budget(stream):
+    """Only the `stream` role applies to the fleet (the wk window cache);
+    accumulation is pinned f64, so the budget uses accum='float64'."""
+    ts = _walk(200, seed=6)
+    m, cap = 8, 200
+    spec = PrecisionSpec(stream=stream)
+    tol = profile_tolerance(PrecisionSpec(stream=stream, accum="float64"), m)
+    oracle = StreamingFleet(1, window=m, capacity=cap, exclusion=2)
+    oracle.ingest(np.zeros(len(ts), np.int64), ts)
+    reduced = StreamingFleet(1, window=m, capacity=cap, exclusion=2,
+                             precision=spec)
+    reduced.ingest(np.zeros(len(ts), np.int64), ts)
+    p0 = np.asarray(oracle.snapshot(0).p, np.float64)
+    p1 = np.asarray(reduced.snapshot(0).p, np.float64)
+    finite = np.isfinite(p0) & np.isfinite(p1)
+    assert finite.any()
+    assert np.max(np.abs(p0[finite] - p1[finite])) <= tol, stream
+
+
+def test_bf16_epsilon_argmin(self_series, self_oracle):
+    """bf16's chosen neighbor must be within tolerance of the oracle's
+    best distance for (nearly) every row — near-ties may flip the index,
+    the achieved DISTANCE may not degrade."""
+    spec, tol = _budget("bfloat16", "float32", M)
+    res = matrix_profile(self_series, M, precision=spec)
+    i16 = np.asarray(res.i)
+    p64, _ = self_oracle
+    finite = np.isfinite(p64) & (i16 >= 0)
+    ts = self_series.astype(np.float64)
+    w = np.lib.stride_tricks.sliding_window_view(ts, M)
+    wz = w - w.mean(axis=1, keepdims=True)
+    wz /= np.linalg.norm(wz, axis=1, keepdims=True)
+    corr = np.einsum("ij,ij->i", wz[finite], wz[i16[finite]])
+    d_chosen = np.sqrt(np.maximum(2.0 * M * (1.0 - corr), 0.0))
+    agree = np.mean(d_chosen <= p64[finite] + tol)
+    assert agree >= 0.99, agree
+
+
+def test_planted_motif_exact_under_bf16():
+    ts = _walk(1024, seed=7)
+    a_pos, b_pos = 100, 700
+    ts[b_pos:b_pos + M] = ts[a_pos:a_pos + M]
+    res = matrix_profile(ts, M, precision="bf16")
+    i = np.asarray(res.i)
+    assert i[a_pos] == b_pos and i[b_pos] == a_pos
+
+
+# -- the bitwise default pin --------------------------------------------------
+
+
+def test_default_precision_is_bitwise_f32(self_series):
+    base = matrix_profile(self_series, M)
+    for prec in ("f32", "default", PrecisionSpec(), DEFAULT_PRECISION):
+        res = matrix_profile(self_series, M, precision=prec)
+        np.testing.assert_array_equal(np.asarray(base.p), np.asarray(res.p))
+        np.testing.assert_array_equal(np.asarray(base.i), np.asarray(res.i))
+
+
+def test_default_precision_is_bitwise_f32_ab(ab_series):
+    a, b = ab_series
+    base = ab_join(a, b, M, return_b=True)
+    res = ab_join(a, b, M, return_b=True, precision=PrecisionSpec())
+    np.testing.assert_array_equal(np.asarray(base.p), np.asarray(res.p))
+    np.testing.assert_array_equal(np.asarray(base.b_p), np.asarray(res.b_p))
+    np.testing.assert_array_equal(np.asarray(base.b_i), np.asarray(res.b_i))
+
+
+def test_default_fleet_wk_stays_f64():
+    fleet = StreamingFleet(2, window=8, capacity=32)
+    assert fleet._wk_stream == "float64"
+    assert fleet.precision.is_default
+
+
+# -- exact f64 seed dots (the cov0s cast-bug regression) ----------------------
+
+
+def test_cross_seed_dots_are_exact_f64():
+    """Seeds must be f64 dots of per-window-centered rows rounded exactly
+    once — checked against a longdouble oracle on an ill-conditioned
+    series (large level offset: the classic f32-cast catastrophic-
+    cancellation trigger this regression test exists for)."""
+    m = 16
+    a = _walk(120, seed=8, offset=1.0e6)
+    b = _walk(80, seed=9, offset=-7.5e5)
+    with x64_scope():
+        cross = compute_cross_stats_host(a, b, m, out_dtype=np.float64)
+        cov0s = np.asarray(cross.cov0s, np.float64)
+        assert cov0s.dtype == np.float64
+    wa = np.lib.stride_tricks.sliding_window_view(a.astype(np.longdouble), m)
+    wb = np.lib.stride_tricks.sliding_window_view(b.astype(np.longdouble), m)
+    wa = wa - wa.mean(axis=1, keepdims=True)
+    wb = wb - wb.mean(axis=1, keepdims=True)
+    neg = wa[1:] @ wb[0]
+    pos = wb @ wa[0]
+    oracle = np.concatenate([neg[::-1], pos])
+    scale = np.maximum(np.abs(oracle.astype(np.float64)), 1.0)
+    err = np.max(np.abs(cov0s - oracle.astype(np.float64)) / scale)
+    assert err <= 1e-12, err
+
+
+def test_cross_seed_dots_f64_even_for_reduced_streams():
+    """A bf16 stream request must not degrade the SEEDS: dots stay f64
+    internally and round once to the requested seed dtype."""
+    m = 16
+    a, b = _walk(100, seed=10, offset=3e5), _walk(90, seed=11, offset=3e5)
+    c32 = compute_cross_stats_host(a, b, m)
+    c16 = compute_cross_stats_host(a, b, m, out_dtype="bfloat16",
+                                   seed_dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(c32.cov0s, np.float32),
+                                  np.asarray(c16.cov0s, np.float32))
+
+
+# -- plan-time validation rules -----------------------------------------------
+
+
+def test_reduced_stream_requires_normalization():
+    with pytest.raises(ValueError, match="z-normalized"):
+        plan_mod.plan_sweep(M, 500, normalize=False, precision="bf16")
+    with pytest.raises(ValueError, match="z-normalized"):
+        matrix_profile(_walk(256, seed=1), M, normalize=False,
+                       precision="bf16")
+
+
+def test_reduced_stream_rejects_topk():
+    with pytest.raises(ValueError, match="top-k"):
+        plan_mod.plan_sweep(M, 500, k=4, precision="bf16")
+
+
+def test_kernel_and_distributed_pin_f32_accum():
+    slow = PrecisionSpec(stream="float32", accum="float64")
+    for backend in ("kernel", "distributed"):
+        with pytest.raises(ValueError, match="f32"):
+            plan_mod.plan_sweep(M, 500, backend=backend, precision=slow)
+
+
+def test_fleet_reduced_requires_normalization():
+    with pytest.raises(ValueError):
+        StreamingFleet(2, window=8, capacity=32, normalize=False,
+                       precision="bf16")
+
+
+def test_precision_spec_rejects_unknown_dtypes():
+    with pytest.raises(ValueError):
+        PrecisionSpec(stream="int8")
+    with pytest.raises(ValueError):
+        PrecisionSpec(accum="bfloat16")
+    with pytest.raises(ValueError):
+        as_precision("f8")
+
+
+def test_tolerances_are_monotone_in_precision():
+    """Analytic budgets must order the presets sensibly: wider streams ->
+    tighter bounds; budgets grow with the window (accumulation length)."""
+    b16 = as_precision("bf16")
+    f16 = as_precision("f16")
+    f32 = as_precision("f32")
+    assert corr_tolerance(b16, M) > corr_tolerance(f16, M) > \
+        corr_tolerance(f32, M)
+    assert profile_tolerance(b16, 4 * M) > profile_tolerance(b16, M)
+
+
+def test_stats_dtypes_follow_the_route():
+    """`stats_dtypes_for` is the one seam deciding stream emission: the
+    reduced SELF-join (tile-sweep route) takes f32 stats and rounds the
+    centered windows in-sweep, while reduced AB plans stream the stats
+    arrays themselves in the reduced dtype."""
+    import jax.numpy as jnp
+
+    self16 = plan_mod.plan_sweep(M, 2000, precision="bf16")
+    assert self16.backend == "engine" and self16.precision.reduced_stream
+    assert stats_out_dtype(self16) == jnp.float32
+    ab16 = plan_mod.plan_sweep(M, 2000, 500, backend="rowstream",
+                               precision="bf16")
+    assert stats_out_dtype(ab16) == jnp.bfloat16
+    default = plan_mod.plan_sweep(M, 2000)
+    assert stats_out_dtype(default) == jnp.float32
+
+
+def stats_out_dtype(plan):
+    return plan_mod.stats_dtypes_for(plan)["out_dtype"]

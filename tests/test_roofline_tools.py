@@ -150,11 +150,11 @@ def test_matrix_profile_roofline_bridges_kernel_model():
 
 
 def test_nonnorm_profile_matches_bruteforce():
-    from repro.core.matrix_profile import matrix_profile_nonnorm
+    from repro.core.matrix_profile import matrix_profile
     rng = np.random.default_rng(3)
     ts = rng.normal(size=300).astype(np.float32)
     m, excl = 16, 4
-    p = matrix_profile_nonnorm(jnp.asarray(ts), m, excl).p
+    p = matrix_profile(jnp.asarray(ts), m, excl, normalize=False).p
     l = 300 - m + 1
     w = np.stack([ts[i:i + m] for i in range(l)])
     d = np.sqrt(((w[:, None] - w[None, :]) ** 2).sum(-1))
@@ -164,9 +164,10 @@ def test_nonnorm_profile_matches_bruteforce():
 
 
 def test_nonnorm_detects_level_anomaly():
-    from repro.core.matrix_profile import matrix_profile_nonnorm
+    from repro.core.matrix_profile import matrix_profile
     rng = np.random.default_rng(0)
     ts = (2.0 + 0.01 * rng.normal(size=400)).astype(np.float32)
     ts[250:266] += np.linspace(0, 1.0, 16).astype(np.float32)
-    p = np.asarray(matrix_profile_nonnorm(jnp.asarray(ts), 16, 4).p)
+    p = np.asarray(matrix_profile(jnp.asarray(ts), 16, 4,
+                                  normalize=False).p)
     assert 235 <= int(np.argmax(np.where(np.isfinite(p), p, -1))) <= 266

@@ -12,8 +12,7 @@ sys.path.insert(0, os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "src")))
 
 from repro.core.matrix_profile import (ab_join, batch_ab_join,  # noqa: E402
-                                       batch_profile, matrix_profile,
-                                       matrix_profile_nonnorm)
+                                       batch_profile, matrix_profile)
 from repro.core.streaming import StreamingProfile               # noqa: E402
 from repro.core.validate import validate_series                 # noqa: E402
 
@@ -89,7 +88,7 @@ def test_nonnorm_entry_requires_finite():
     bad = GOOD.copy()
     bad[10] = np.nan
     with pytest.raises(ValueError, match="non-finite"):
-        matrix_profile_nonnorm(bad, 8)
+        matrix_profile(bad, 8, normalize=False)
 
 
 def test_streaming_profile_validates_construction_and_append():
