@@ -266,7 +266,7 @@ def run_precision_pinned(src: str, *, n: int = 16384, m: int = 128,
 
     Each rep is a fresh subprocess interleaving both arms; the headline is
     min(f32)/min(bf16) with a bootstrap CI over the per-rep speedups — the
-    drift-proof number the perf gate's BENCH_PR9 ratio should agree with.
+    drift-proof number the perf gate's BENCH_PR10 ratio should agree with.
     Returns `unsupported=True` for checkouts without PrecisionSpec."""
     pairs = []
     for _ in range(reps):

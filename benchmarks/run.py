@@ -134,6 +134,12 @@ def bench_scaling():
         eff = base / t / p
         emit(f"mp_scaling_workers{p}", t,
              f"speedup={base/t:.2f}x efficiency={eff:.2f}")
+        if p > 1:
+            # explicit efficiency rows so CI can gate the scaling fix
+            # (dynamic band counts + committed initial sharding) without
+            # parsing the derived string; value is the RATIO, not us
+            emit(f"mp_scaling_efficiency_workers{p}", eff,
+                 "value is speedup/workers, not us")
 
 
 def bench_anytime():
@@ -715,6 +721,49 @@ def bench_lm_decode():
         emit(f"lm_decode_step_smoke_{arch}", us, "cpu-smoke-config")
 
 
+def bench_serve():
+    """Profile service vs one-query-at-a-time: a 64-series resident corpus
+    answering 16 concurrent queries in batched vmapped sweeps, against the
+    naive loop calling `ab_join` per (query, series) pair. The service
+    amortizes corpus-side stats (computed once at load) and sweep dispatch
+    (one batched engine call per shard group), so the gap is the whole
+    point of the serving tier."""
+    from repro.core.matrix_profile import ab_join
+    from repro.serve import ProfileService, ShardedCorpus
+
+    rng = np.random.default_rng(11)
+    m, n_series = 64, 64
+    series = [rng.normal(size=384) for _ in range(n_series)]
+    queries = [rng.normal(size=192) for _ in range(16)]
+
+    corpus = ShardedCorpus(series, m)
+    svc = ProfileService(corpus, max_pending=64, max_batch=16)
+    svc.serve(queries)                   # warm the batch-16 compiled variant
+    t0 = time.perf_counter()
+    answers = svc.serve(queries)
+    t_batched = time.perf_counter() - t0
+    assert all(a.status == "ok" for a in answers)
+    qps_batched = len(queries) / t_batched
+
+    # sequential baseline: the loop a user without the service writes —
+    # fresh entry-point call per pair; 2 queries suffice (every call after
+    # jit warmup costs the same) and keep the bench CI-sized
+    ab_join(queries[0], series[0], m).p        # warm the pair path
+    sample = queries[:2]
+    t0 = time.perf_counter()
+    for q in sample:
+        for s in series:
+            np.asarray(ab_join(q, s, m).p)
+    t_seq = time.perf_counter() - t0
+    qps_seq = len(sample) / t_seq
+    speedup = qps_batched / qps_seq
+    emit("serve_queries_per_sec_c64", qps_batched,
+         f"value is queries/sec, not us; sequential={qps_seq:.2f}q/s "
+         f"speedup={speedup:.2f}x")
+    emit("serve_batched_speedup_c64", speedup,
+         "value is batched/sequential qps ratio, not us")
+
+
 BENCHES = {
     "baseline": bench_vs_baseline,
     "ab_join": bench_ab_join,
@@ -729,6 +778,7 @@ BENCHES = {
     "precision": bench_precision,
     "anytime": bench_anytime,
     "scaling": bench_scaling,
+    "serve": bench_serve,
     "lm_train": bench_lm_train,
     "lm_decode": bench_lm_decode,
 }
@@ -749,10 +799,10 @@ def main(argv: list[str] | None = None) -> None:
     with open(os.path.join(art, "bench_results.csv"), "w") as f:
         f.write("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
     # machine-readable mirror for CI perf gates and cross-PR comparisons —
-    # keyed identically to PR8's table (plus the precision / compiled /
-    # roofline-fraction rows) so trajectory tooling diffs in place
+    # keyed identically to PR9's table (plus the serving-throughput and
+    # scaling-efficiency rows) so trajectory tooling diffs in place
     table = {r.split(",")[0]: float(r.split(",")[1]) for r in ROWS}
-    with open(os.path.join(art, "BENCH_PR9.json"), "w") as f:
+    with open(os.path.join(art, "BENCH_PR10.json"), "w") as f:
         json.dump(table, f, indent=1, sort_keys=True)
 
 

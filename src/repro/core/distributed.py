@@ -12,10 +12,17 @@ respectively), so the round plan needs to cover each diagonal exactly once —
 there is no reversed-series second phase.
 
 Chunks are equal-WORK, not equal-diagonal-count (long diagonals live at small
-k), so workers loop a common static band count and mask bands past their own
-chunk end — the masked bands are the load-imbalance the paper's partitioner
-removes, and `tests/test_partition.py` property-tests that the masked
-fraction stays small.
+k), so chunk widths in BANDS vary wildly (a narrow-in-bands chunk of long
+diagonals carries the same work as a wide chunk of short ones). Workers loop
+a DYNAMIC per-worker band count (`fori_loop` to their own chunk end) instead
+of a common static one: the old static-`n_bands` scan made every worker pay
+for the widest chunk's band count, and because per-band cost is O(l)
+regardless of diagonal length, that masked-band overhead grew with worker
+count and sank multi-worker scaling. Masked bands are exact bitwise no-ops
+(`merge`/`merge_window` take strictly-greater, all-NEG windows lose every
+comparison), so skipping them leaves results bit-identical; the trailing
+partial band keeps its per-diagonal mask. `n_bands` remains a static CAP on
+the trip count, and `tests/test_partition.py` property-tests the balance.
 """
 
 from __future__ import annotations
@@ -59,6 +66,15 @@ def allreduce_topk(state: TopKState, axis: str) -> TopKState:
     return TopKState(corr=vals, index=jnp.take_along_axis(i, pos, axis=-1))
 
 
+def live_bands(k0: jax.Array, k1: jax.Array, n_bands: int,
+               band: int) -> jax.Array:
+    """Number of band tiles a chunk [k0, k1) actually touches, capped at the
+    static `n_bands` bound. Dynamic per worker — this is the `fori_loop`
+    trip count that replaces the old masked static scan."""
+    n = (k1 - k0 + band - 1) // band
+    return jnp.clip(n, 0, n_bands).astype(jnp.int32)
+
+
 def worker_chunk(stats: ZStats, k0: jax.Array, k1: jax.Array,
                  n_bands: int, band: int,
                  reseed_every: int | None = DEFAULT_RESEED) -> ProfileState:
@@ -73,20 +89,21 @@ def worker_chunk(stats: ZStats, k0: jax.Array, k1: jax.Array,
     l = stats.n_subsequences
     wc = centered_windows(stats) if reseed_every is not None else None
 
-    def body(carry, b):
+    def body(b, carry):
         state, col = carry
         start = k0 + b * band
         rc, ri, win, wi = band_rowmax(stats, start, band,
                                       reseed_every=reseed_every, windows_c=wc)
-        live = start < k1            # bands past the chunk end contribute 0
+        live = start < k1            # trailing band may overhang the chunk
         rc = jnp.where(live, rc, NEG)
         win = jnp.where(live, win, NEG)
         state = state.merge(ProfileState(rc, ri))
         col = col.merge_window(win, wi, start)
-        return (state, col), None
+        return (state, col)
 
     init = (ProfileState.empty(l), ColState.empty(0, l, l + band))
-    (state, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    state, col = jax.lax.fori_loop(0, live_bands(k0, k1, n_bands, band),
+                                   body, init)
     return state.merge(col.to_profile(0, l))
 
 
@@ -112,7 +129,7 @@ def worker_chunk_ab(cross: CrossStats, k0: jax.Array, k1: jax.Array,
     padded = _ab_padded_streams(cross, band, li)
     pad_l = la - 1                 # most negative valid diagonal start
 
-    def body(carry, b):
+    def body(b, carry):
         rows, col = carry
         start = k0 + b * band
         ra, ia, win, wi, i0 = band_rowmax_ab(cross, start, band, k_hi=k1,
@@ -123,11 +140,12 @@ def worker_chunk_ab(cross: CrossStats, k0: jax.Array, k1: jax.Array,
         win = jnp.where(live, win, NEG)
         rows = rows.merge_window(ra, ia, i0)
         col = col.merge_window(win, wi, start + i0 + pad_l)
-        return (rows, col), None
+        return (rows, col)
 
     init = (ColState.empty(0, la, li),
             ColState.empty(pad_l, lb, li + 2 * band))
-    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    rows, col = jax.lax.fori_loop(0, live_bands(k0, k1, n_bands, band),
+                                  body, init)
     return rows.to_profile(0, la), col.to_profile(pad_l, lb)
 
 
@@ -139,20 +157,21 @@ def worker_chunk_topk(stats: ZStats, k0: jax.Array, k1: jax.Array,
     l = stats.n_subsequences
     wc = centered_windows(stats) if reseed_every is not None else None
 
-    def body(carry, b):
+    def body(b, carry):
         rows, col = carry
         start = k0 + b * band
         rc, ri, win, wi = band_topk(stats, start, band, k,
                                     reseed_every=reseed_every, windows_c=wc)
-        live = start < k1            # bands past the chunk end contribute 0
+        live = start < k1            # trailing band may overhang the chunk
         rc = jnp.where(live, rc, NEG)
         win = jnp.where(live, win, NEG)
         rows = rows.merge(TopKState(rc, ri))
         col = col.merge_window(win, wi, start)
-        return (rows, col), None
+        return (rows, col)
 
     init = (TopKState.empty(l, k), TopKState.empty(2 * l + band, k))
-    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    rows, col = jax.lax.fori_loop(0, live_bands(k0, k1, n_bands, band),
+                                  body, init)
     return rows.merge(col.to_state(0, l))
 
 
@@ -169,7 +188,7 @@ def worker_chunk_ab_topk(cross: CrossStats, k0: jax.Array, k1: jax.Array,
     padded = _ab_padded_streams(cross, band, li)
     pad_l = la - 1                 # most negative valid diagonal start
 
-    def body(carry, b):
+    def body(b, carry):
         rows, col = carry
         start = k0 + b * band
         ra, ia, win, wi, i0 = band_topk_ab(cross, start, band, k, k_hi=k1,
@@ -180,11 +199,12 @@ def worker_chunk_ab_topk(cross: CrossStats, k0: jax.Array, k1: jax.Array,
         win = jnp.where(live, win, NEG)
         rows = rows.merge_window(ra, ia, i0)
         col = col.merge_window(win, wi, start + i0 + pad_l)
-        return (rows, col), None
+        return (rows, col)
 
     init = (TopKState.empty(la + li, k),
             TopKState.empty(pad_l + lb + li + 2 * band, k))
-    (rows, col), _ = jax.lax.scan(body, init, jnp.arange(n_bands))
+    rows, col = jax.lax.fori_loop(0, live_bands(k0, k1, n_bands, band),
+                                  body, init)
     return rows.to_state(0, la), col.to_state(pad_l, lb)
 
 

@@ -102,7 +102,7 @@ class SweepPlan:
     # -- backend -----------------------------------------------------------
     backend: str = "engine"         # engine | rowstream | kernel | distributed
     interpret: bool = True          # kernel backend: Pallas interpret mode
-    batch: int | None = None        # vmapped stack size (engine backend only)
+    batch: int | None = None        # vmapped stack size (engine/rowstream)
     # -- precision ---------------------------------------------------------
     # stream/accum/seed dtypes, decided HERE at plan time (default: the
     # historical all-f32 pipeline, bitwise). A reduced (16-bit) stream
@@ -271,9 +271,12 @@ def plan_sweep(window: int, l_a: int, l_b: int | None = None, *,
     if backend == "rowstream" and spec.k > min(l_a, l_b):
         raise ValueError(f"rowstream top-k needs k <= min(l_a, l_b) = "
                          f"{min(l_a, l_b)}, got k={spec.k}")
-    if batch is not None and backend != "engine":
-        raise ValueError("batched plans vmap the band engine; "
-                         f"backend {backend!r} cannot batch")
+    if batch is not None and backend not in ("engine", "rowstream"):
+        raise ValueError("batched plans vmap the band engine or the AB "
+                         f"rowstream; backend {backend!r} cannot batch")
+    if batch is not None and backend == "rowstream" and kind != "ab":
+        raise ValueError("rowstream sweeps the AB rectangle; batched "
+                         "self-joins vmap the band engine")
     if batch is not None and not normalize:
         raise ValueError("batched plans are z-normalized only: the nonnorm "
                          "sweeps take raw series, which the executor does "
@@ -340,9 +343,8 @@ def cross_stats_for(plan: SweepPlan, ts_a, ts_b) -> CrossStats:
     """Host-side stream prep for an AB plan, in the plan's SWEPT orientation
     — the one place that honors `swap_ab`, so entry points never hand
     `execute` a transposed rectangle by accident. (Callers with a cached
-    resident side, e.g. StreamingProfile.query, assemble via
-    `zstats.cross_stats_from_parts` and must branch on `plan.swap_ab`
-    themselves.)"""
+    resident corpus side build their payload through `resident_stats`
+    instead — same orientation contract, corpus side precomputed.)"""
     from repro.core.zstats import compute_cross_stats_host
 
     if plan.kind != "ab" or not plan.normalize:
@@ -355,6 +357,48 @@ def cross_stats_for(plan: SweepPlan, ts_a, ts_b) -> CrossStats:
     if plan.swap_ab:               # stream the short side as rows
         return compute_cross_stats_host(ts_b, ts_a, m, **dt_kw)
     return compute_cross_stats_host(ts_a, ts_b, m, **dt_kw)
+
+
+def resident_stats(plan: SweepPlan, query, resident):
+    """`cross_stats_for`'s RESIDENT twin: the `execute` payload for an AB
+    plan whose corpus side (`core.resident.ResidentSide`) was precomputed
+    once and stays cached across queries — the serving seam: only the
+    QUERY's stats are computed here, the corpus side is consumed as-is, and
+    `plan.swap_ab` is honored in this one place so resident callers
+    (`StreamingProfile.query`, `serve.ShardedCorpus`) never orient the
+    rectangle by hand.
+
+    Assembly runs through `zstats.cross_stats_from_parts` — the exact same
+    seed-dot path `compute_cross_stats_host` uses internally, so a
+    resident-side payload is bitwise-identical to building both sides fresh.
+    Raw (nonnorm) plans return the `(query, corpus_ts)` series tuple the
+    nonnorm executor expects. Resident caching stores only the default-
+    precision streams, so non-default precision plans are rejected rather
+    than silently re-deriving dtypes."""
+    if plan.kind != "ab":
+        raise ValueError(f"resident_stats prepares AB plans, got "
+                         f"kind={plan.kind!r}")
+    if not plan.precision.is_default:
+        raise ValueError("resident corpus sides cache default-precision "
+                         "streams only; plan a default-precision sweep or "
+                         "build CrossStats directly via cross_stats_for")
+    if resident.normalize != plan.normalize:
+        raise ValueError(f"resident side is "
+                         f"normalize={resident.normalize}, plan wants "
+                         f"normalize={plan.normalize}")
+    from repro.core.zstats import compute_stats_host
+
+    m = plan.window
+    if not plan.normalize:
+        return (jnp.asarray(query, jnp.float32), resident.ts)
+    from repro.core.zstats import cross_stats_from_parts
+
+    s_q, w_q = compute_stats_host(query, m, min_subsequences=1,
+                                  return_centered_windows=True)
+    if plan.swap_ab:               # corpus shorter than the query: B on rows
+        return cross_stats_from_parts(resident.stats, resident.windows,
+                                      s_q, w_q)
+    return cross_stats_from_parts(s_q, w_q, resident.stats, resident.windows)
 
 
 # -- executor -----------------------------------------------------------------
@@ -517,8 +561,14 @@ def _execute_ab(plan: SweepPlan, stats) -> SweepResult:
     if plan.harvest.k > 1:
         return _execute_ab_topk(plan, stats, two_sided)
     if plan.backend == "rowstream":
-        sa, sb = ab_join_rowstream(stats, plan.exclusion, plan.reseed_every,
-                                   accum_dtype=plan.precision.accum)
+        fn = lambda c: ab_join_rowstream(                   # noqa: E731
+            c, plan.exclusion, plan.reseed_every,
+            accum_dtype=plan.precision.accum)
+        if plan.batch is not None:
+            # vmap keeps every per-row FMA and reduce order, so each lane
+            # stays bitwise-identical to its unbatched rowstream sweep
+            fn = jax.vmap(fn)
+        sa, sb = fn(stats)
         if plan.swap_ab:
             sa, sb = sb, sa
         res = SweepResult(sa.to_distance(m), sa.index)
@@ -566,9 +616,12 @@ def _execute_ab_topk(plan: SweepPlan, stats, two_sided: bool) -> SweepResult:
     m = plan.window
     k = plan.harvest.k
     if plan.backend == "rowstream":
-        ta, tb = ab_join_rowstream_topk(stats, plan.exclusion,
-                                        plan.reseed_every, k,
-                                        accum_dtype=plan.precision.accum)
+        fn = lambda c: ab_join_rowstream_topk(              # noqa: E731
+            c, plan.exclusion, plan.reseed_every, k,
+            accum_dtype=plan.precision.accum)
+        if plan.batch is not None:
+            fn = jax.vmap(fn)
+        ta, tb = fn(stats)
         if plan.swap_ab:
             ta, tb = tb, ta
     else:

@@ -1,0 +1,144 @@
+"""Resident corpus-side sweep state — the ONE cached-reference helper.
+
+A query-against-corpus join has an asymmetric cost structure: the corpus
+side's z-stats and centered windows are invariant between queries, while the
+query side changes every call. Two subsystems keep a corpus resident —
+`StreamingProfile.query` (a growing monitored series queried between
+appends) and `serve.ShardedCorpus` (N series loaded once behind the profile
+service) — and both need the same three-layer cache:
+
+  * a `ResidentSide`: the corpus's host-f64-derived `ZStats` + centered
+    window matrix (z-normalized mode) or its f32 series (raw mode), built
+    exactly once per corpus content;
+  * an LRU of those sides keyed by (generation, normalize) — a GENERATION
+    counter, not a length, so a content change that preserves length (trim,
+    rescale, reshard) can never serve stale stats;
+  * a per-side LRU of `SweepPlan`s keyed by query geometry, so repeated
+    queries of the same shape skip planning entirely.
+
+This module is that cache, factored out of `StreamingProfile`'s two private
+dicts so the streaming and serving tiers share one audited implementation.
+Query-time assembly (query stats + `cross_stats_from_parts`, honoring
+`plan.swap_ab`) lives in `core.plan.resident_stats` — the executor-side
+twin of `cross_stats_for`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidentSide:
+    """One corpus side, precomputed and reusable across queries.
+
+    z-normalized mode carries `(stats, windows)` — the exact
+    `compute_stats_host(..., return_centered_windows=True)` pair, so
+    `cross_stats_from_parts` assembly is bitwise-identical to building both
+    sides fresh with `compute_cross_stats_host`. Raw (nonnorm) mode carries
+    the f32 series instead. `l` is the side's subsequence count — the plan
+    geometry key."""
+
+    window: int
+    normalize: bool
+    l: int
+    stats: Any = None        # ZStats | None
+    windows: Any = None      # (l, m) f64 centered windows | None
+    ts: Any = None           # f32 series (nonnorm mode) | None
+
+
+def build_side(ts, window: int, normalize: bool = True) -> ResidentSide:
+    """Compute one corpus side from a raw series (host f64 stats pass)."""
+    from repro.core.zstats import compute_stats_host
+
+    t = np.asarray(ts, np.float64)
+    if t.ndim != 1 or t.shape[0] < window:
+        raise ValueError(f"resident series must be 1-D with >= {window} "
+                         f"points, got shape {t.shape}")
+    l = t.shape[0] - window + 1
+    if normalize:
+        stats, windows = compute_stats_host(t, window, min_subsequences=1,
+                                            return_centered_windows=True)
+        return ResidentSide(window=window, normalize=True, l=l,
+                            stats=stats, windows=windows)
+    import jax.numpy as jnp
+
+    return ResidentSide(window=window, normalize=False, l=l,
+                        ts=jnp.asarray(t, jnp.float32))
+
+
+class ReferenceCache:
+    """Generation-keyed LRU of `ResidentSide`s + per-side plan LRUs.
+
+    `side_max` bounds how many corpus contents/modes stay resident (a
+    long-lived monitor that appends between queries or flips distance modes
+    would otherwise accrete one O(n·m) window matrix per content it ever
+    queried); `plan_max` bounds the per-side plan cache (one entry per
+    distinct query length ever seen). Both are tiny working sets in
+    practice — the bounds keep degenerate access patterns O(1) memory."""
+
+    def __init__(self, window: int, side_max: int = 4, plan_max: int = 8):
+        self.window = int(window)
+        self.side_max = int(side_max)
+        self.plan_max = int(plan_max)
+        self._sides: OrderedDict = OrderedDict()
+        self._plans: OrderedDict = OrderedDict()   # geometry-keyed
+
+    def side(self, key, build: Callable[[], ResidentSide]) -> ResidentSide:
+        """The resident side for `key` — any hashable that changes whenever
+        the underlying content may have (StreamingProfile keys
+        `(generation, normalize)`; ShardedCorpus keys
+        `(series_id, generation, normalize)`) — building (and LRU-evicting)
+        on miss. `build` must return a `ResidentSide` of this cache's
+        window."""
+        side = self._sides.get(key)
+        if side is None:
+            side = build()
+            if side.window != self.window:
+                raise ValueError(f"built side has window {side.window}, "
+                                 f"cache expects {self.window}")
+            self._sides[key] = side
+            while len(self._sides) > self.side_max:
+                self._sides.popitem(last=False)
+        else:
+            self._sides.move_to_end(key)
+        return side
+
+    def plan_for(self, side: ResidentSide, l_q: int, *, k: int = 1,
+                 batch: int | None = None):
+        """Query-geometry plan off the shared LRU: an AB row-harvest sweep
+        of an l_q-subsequence query against the resident side, no exclusion
+        (different series). Plans depend only on GEOMETRY — (corpus l,
+        normalize, query l, k, batch) — so sides of equal length share one
+        entry (a 64-series equal-length corpus plans once, not 64 times).
+        `batch` plans a vmapped sweep over stacked query×corpus pairs (the
+        serve front-end's path): the AB rowstream when the query side fits
+        its row budget without an orientation swap — each vmap lane is
+        bitwise-identical to the unbatched rowstream `ab_join` defaults to
+        on these geometries — else the band engine."""
+        from repro.core import plan as plan_mod
+        from repro.core.matrix_profile import AB_ROWSTREAM_MAX_ROWS
+
+        key = (side.l, side.normalize, int(l_q), int(k), batch)
+        plan = self._plans.get(key)
+        if plan is None:
+            backend = None
+            if batch is not None:
+                rows_ok = (int(l_q) <= side.l
+                           and int(l_q) <= AB_ROWSTREAM_MAX_ROWS
+                           and int(k) <= min(int(l_q), side.l))
+                backend = "rowstream" if rows_ok else "engine"
+            plan = plan_mod.plan_sweep(
+                self.window, int(l_q), side.l, exclusion=0,
+                normalize=side.normalize, harvest="row", k=k,
+                backend=backend, batch=batch)
+            self._plans[key] = plan
+            while len(self._plans) > self.plan_max:
+                self._plans.popitem(last=False)
+        else:
+            self._plans.move_to_end(key)
+        return plan

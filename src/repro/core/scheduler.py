@@ -31,6 +31,7 @@ import zlib
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import partition
 from repro.core import plan as plan_mod
@@ -184,8 +185,15 @@ class AnytimeScheduler:
         self.supervised_report: SupervisedReport | None = None
 
     def _empty_state(self, l: int):
-        return (TopKState.empty(l, self.k) if self.k > 1
-                else ProfileState.empty(l))
+        state = (TopKState.empty(l, self.k) if self.k > 1
+                 else ProfileState.empty(l))
+        # Commit to the mesh's replicated sharding UP FRONT: the round fn
+        # returns replicated-on-mesh arrays, and feeding round 0 an
+        # uncommitted single-device state would make round 1's input sharding
+        # differ from round 0's — a silent ~seconds recompile of the SPMD
+        # program on the second dispatch of every fresh scheduler.
+        sharding = jax.sharding.NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda x: jax.device_put(x, sharding), state)
 
     def _make_round_fn(self):
         """One SPMD round step via the plan executor — the scheduler never

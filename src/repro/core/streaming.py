@@ -22,21 +22,17 @@ so the telemetry monitor can stream either mode.
 
 from __future__ import annotations
 
-from collections import OrderedDict
-
 import numpy as np
 
 
 class StreamingProfile:
     """Append-only exact matrix profile over a growing series."""
 
-    # LRU bounds for query()'s caches: the resident corpus-side states
-    # (keyed by (n_points, normalize) — a long-lived monitor that appends
-    # between queries, or flips distance modes, would otherwise accrete one
-    # O(n·m) window matrix per corpus shape it ever queried) and the
-    # per-query-shape SweepPlans inside each state (one per distinct query
-    # length ever seen). Both are tiny working sets in practice — the
-    # bounds exist so the degenerate access patterns stay O(1) memory.
+    # LRU bounds for query()'s resident-corpus cache (`core.resident.
+    # ReferenceCache`, shared with serve.ShardedCorpus): how many corpus
+    # contents/modes stay resident, and how many per-query-shape SweepPlans
+    # each side keeps. Both are tiny working sets in practice — the bounds
+    # exist so degenerate access patterns stay O(1) memory.
     REF_CACHE_MAX = 4
     PLAN_CACHE_MAX = 8
 
@@ -60,12 +56,14 @@ class StreamingProfile:
         self._right_index = np.zeros((0,), np.int64)
         # append-generation counter: bumped on EVERY series mutation, so
         # cached corpus-side state can never survive a content change that
-        # preserves length (e.g. a future trim/rescale) — see _ref_state()
+        # preserves length (e.g. a future trim/rescale) — see _ref_side()
         self._gen = 0
-        # query()'s resident corpus-side states: small LRU of
-        # (generation, normalize) -> dict(stats/windows/ts + plans LRU) —
-        # see _ref_state()
-        self._ref_cache: OrderedDict = OrderedDict()
+        # query()'s resident corpus-side cache — the SHARED helper
+        # (core.resident.ReferenceCache): LRU of (generation, normalize) ->
+        # ResidentSide, each with its own per-query-shape plan LRU
+        from repro.core.resident import ReferenceCache
+        self._refs = ReferenceCache(self.m, side_max=self.REF_CACHE_MAX,
+                                    plan_max=self.PLAN_CACHE_MAX)
 
     # -- internals -----------------------------------------------------------
 
@@ -179,57 +177,20 @@ class StreamingProfile:
         self._right_profile[:l_new][rupd] = col_vals[rupd]
         self._right_index[:l_new][rupd] = l_old + col_best[rupd]
 
-    def _ref_state(self) -> dict:
-        """Corpus-side sweep state, invariant between appends — cached keyed
-        by BOTH the append generation and distance mode (generation, not
-        length: a content change that preserves length — a future trim or
-        rescale — must never serve stale stats, and a `normalize` flip after
-        a query used to serve stale centered windows), with the per-query-shape
-        `SweepPlan`s cached alongside so repeated query() calls skip planning
-        entirely. Both layers are LRU-bounded (`REF_CACHE_MAX` states,
-        `PLAN_CACHE_MAX` plans each): corpus growth and mode flips retire
-        the least-recently-queried states instead of accreting them."""
-        import jax.numpy as jnp
+    def _ref_side(self):
+        """Corpus-side sweep state, invariant between appends — the shared
+        `ReferenceCache` keyed by BOTH the append generation and distance
+        mode (generation, not length: a content change that preserves
+        length — a future trim or rescale — must never serve stale stats,
+        and a `normalize` flip after a query used to serve stale centered
+        windows)."""
+        from repro.core.resident import build_side
 
-        from repro.core.zstats import compute_stats_host
-
-        n = len(self._ts)
-        key = (self._gen, self.normalize)
-        cache = self._ref_cache.get(key)
-        if cache is None:
-            t = np.asarray(self._ts, np.float64)
-            cache = dict(n=n, normalize=self.normalize, plans=OrderedDict())
-            if self.normalize:
-                cache["stats"], cache["windows"] = compute_stats_host(
-                    t, self.m, min_subsequences=1,
-                    return_centered_windows=True)
-            else:
-                cache["ts"] = jnp.asarray(t, jnp.float32)
-            self._ref_cache[key] = cache
-            while len(self._ref_cache) > self.REF_CACHE_MAX:
-                self._ref_cache.popitem(last=False)
-        else:
-            self._ref_cache.move_to_end(key)
-        return cache
-
-    def _plan_for(self, cache: dict, lq: int):
-        """Per-query-shape plan off the state's LRU (evicting beyond
-        `PLAN_CACHE_MAX` distinct query lengths)."""
-        from repro.core import plan as plan_mod
-
-        plans = cache["plans"]
-        plan = plans.get(lq)
-        if plan is None:
-            l_ref = cache["n"] - self.m + 1
-            plan = plan_mod.plan_sweep(self.m, lq, l_ref, exclusion=0,
-                                       normalize=self.normalize,
-                                       harvest="row")
-            plans[lq] = plan
-            while len(plans) > self.PLAN_CACHE_MAX:
-                plans.popitem(last=False)
-        else:
-            plans.move_to_end(lq)
-        return plan
+        norm = self.normalize
+        return self._refs.side(
+            (self._gen, norm),
+            lambda: build_side(np.asarray(self._ts, np.float64), self.m,
+                               normalize=norm))
 
     def query(self, values):
         """Score a query stream against the FIXED reference corpus — the
@@ -245,11 +206,8 @@ class StreamingProfile:
         start index. No exclusion zone — query and reference are different
         series.
         """
-        import jax.numpy as jnp
-
         from repro.core import plan as plan_mod
         from repro.core.result import ProfileResult
-        from repro.core.zstats import compute_stats_host, cross_stats_from_parts
 
         q = np.atleast_1d(np.asarray(values, np.float64))
         if q.ndim != 1 or q.shape[0] < self.m:
@@ -258,19 +216,9 @@ class StreamingProfile:
         if len(self._ts) < self.m:
             raise ValueError("reference corpus has no complete window yet")
         lq = q.shape[0] - self.m + 1
-        cache = self._ref_state()
-        plan = self._plan_for(cache, lq)
-        if self.normalize:
-            s_q, w_q = compute_stats_host(q, self.m, min_subsequences=1,
-                                          return_centered_windows=True)
-            if plan.swap_ab:       # corpus shorter than the query: B on rows
-                stats = cross_stats_from_parts(cache["stats"],
-                                               cache["windows"], s_q, w_q)
-            else:
-                stats = cross_stats_from_parts(s_q, w_q, cache["stats"],
-                                               cache["windows"])
-        else:
-            stats = (jnp.asarray(q, jnp.float32), cache["ts"])
+        side = self._ref_side()
+        plan = self._refs.plan_for(side, lq)
+        stats = plan_mod.resident_stats(plan, q, side)
         res = plan_mod.execute(plan, stats)
         return ProfileResult(p=np.asarray(res.dist, np.float64),
                              i=np.asarray(res.index, np.int64),

@@ -1,7 +1,15 @@
-"""Serving driver: batched prefill + decode with a fixed-capacity KV cache.
+"""Profile-service driver: a resident sharded corpus answering AB queries.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-      --batch 4 --prompt-len 16 --gen 24
+  PYTHONPATH=src python -m repro.launch.serve --series 16 --n 4000 \
+      --window 64 --queries 32 --k 1
+
+Loads `--series` synthetic reference series ONCE into a `ShardedCorpus`
+(z-stats + centered windows resident, shards device-placed across the
+worker mesh when more than one device is visible), then pushes `--queries`
+concurrent AB-join queries through the batched `ProfileService` front-end
+and reports throughput. Run with
+`XLA_FLAGS=--xla_force_host_platform_device_count=N` to shard across N
+host devices.
 """
 
 from __future__ import annotations
@@ -9,68 +17,79 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.models import steps as steps_lib
-from repro.models import transformer
-from repro.models.common import init_params
 
+def run_service(n_series: int, n: int, window: int, n_queries: int,
+                query_n: int, k: int, *, seed: int = 0,
+                use_mesh: bool = True):
+    """Build corpus + service, answer the query load, return a report."""
+    import jax
 
-def serve_batch(cfg, params, prompts, gen: int, *, ctx=None, frames=None):
-    """prompts: (B, P) int32. Returns (B, gen) generated ids (greedy)."""
-    b, p = prompts.shape
-    capacity = p + gen
-    cache = transformer.init_cache(cfg, params, b, capacity, frames=frames,
-                                   ctx=ctx)
-    decode = jax.jit(steps_lib.make_decode_step(cfg, ctx))
-    # teacher-forced prefill via the decode path keeps one compiled program
-    # (prompt lengths vary per request in serving; capacity is fixed)
-    out = []
-    tok = prompts[:, :1]
-    for t in range(capacity - 1):
-        logits, cache = decode(params, cache,
-                               {"tokens": tok, "cache_len": jnp.int32(t)})
-        nxt = steps_lib.greedy_next(logits)
-        tok = prompts[:, t + 1:t + 2] if t + 1 < p else nxt
-        if t + 1 >= p:
-            out.append(nxt)
-        if len(out) >= gen:
-            break
-    return jnp.concatenate(out, axis=1)
+    from repro.launch.mesh import make_worker_mesh
+    from repro.serve import ProfileService, ShardedCorpus
+
+    rng = np.random.default_rng(seed)
+    series = [rng.normal(size=n) for _ in range(n_series)]
+    mesh = None
+    if use_mesh and len(jax.devices()) > 1:
+        mesh = make_worker_mesh()
+
+    t0 = time.monotonic()
+    corpus = ShardedCorpus(series, window, mesh=mesh)
+    t_load = time.monotonic() - t0
+
+    svc = ProfileService(corpus, max_pending=max(64, n_queries),
+                         max_batch=n_queries)
+    queries = [rng.normal(size=query_n) for _ in range(n_queries)]
+    svc.serve(queries[:1], k=k)               # warm the compiled variants
+
+    t0 = time.monotonic()
+    answers = svc.serve(queries, k=k)
+    t_serve = time.monotonic() - t0
+    return {
+        "mesh_devices": 1 if mesh is None else mesh.devices.size,
+        "shards": corpus.n_shards,
+        "load_s": t_load,
+        "serve_s": t_serve,
+        "qps": n_queries / t_serve,
+        "answers": answers,
+        "stats": svc.stats,
+    }
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.list_archs())
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--series", type=int, default=16,
+                    help="reference series resident in the corpus")
+    ap.add_argument("--n", type=int, default=4000,
+                    help="points per reference series")
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=32,
+                    help="concurrent queries pushed through the front-end")
+    ap.add_argument("--query-n", type=int, default=512,
+                    help="points per query")
+    ap.add_argument("--k", type=int, default=1,
+                    help="neighbors per profile position")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="skip device sharding even when devices > 1")
     args = ap.parse_args(argv)
 
-    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
-    params = init_params(jax.random.key(args.seed), transformer.model_spec(cfg))
-    rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
-                                       size=(args.batch, args.prompt_len)),
-                          jnp.int32)
-    frames = None
-    if cfg.is_encdec:
-        frames = jnp.asarray(rng.normal(
-            size=(args.batch, cfg.encoder_seq, cfg.d_model)) * 0.02, cfg.dtype)
-
-    t0 = time.time()
-    out = serve_batch(cfg, params, prompts, args.gen, frames=frames)
-    dt = time.time() - t0
-    toks = args.batch * (args.prompt_len + args.gen)
-    print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. prefill+compile)")
-    print("[serve] sample ids:", np.asarray(out[0])[:16])
-    return out
+    rep = run_service(args.series, args.n, args.window, args.queries,
+                      args.query_n, args.k, seed=args.seed,
+                      use_mesh=not args.no_mesh)
+    print(f"[serve] corpus: {args.series} series x {args.n} pts, "
+          f"{rep['shards']} shards on {rep['mesh_devices']} device(s), "
+          f"resident in {rep['load_s']:.2f}s")
+    print(f"[serve] {args.queries} queries (m={args.window}, k={args.k}) in "
+          f"{rep['serve_s']:.2f}s -> {rep['qps']:.1f} queries/s")
+    a = rep["answers"][0]
+    print(f"[serve] sample answer: status={a.status} coverage={a.coverage:.2f}"
+          f" best d={float(np.min(a.result.p)):.4f} "
+          f"(series {int(a.series[int(np.argmin(a.result.p))])})")
+    print(f"[serve] queue: {rep['stats']}")
+    return rep
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Always-on matrix-profile serving tier.
+
+NATSA's thesis is keeping time-series data resident next to the compute and
+streaming queries past it. This package is that tier for the repro:
+
+  * `corpus`   — `ShardedCorpus`: N series loaded ONCE, per-series z-stats +
+    centered windows computed host-side in f64 and kept resident (stats
+    device-placed per shard across the mesh), so a query never recomputes
+    corpus-side state;
+  * `frontend` — `ProfileService`: accepts concurrent AB-join queries,
+    batches compatible geometries into ONE vmapped engine sweep against all
+    shards, union-merges per-shard top-k sets into one `ProfileResult` per
+    query;
+  * `queue`    — admission control: bounded queue, per-query deadlines,
+    geometry-bucketing batcher, rejection/backpressure accounting;
+  * `rounds`   — the async round loop: double-buffered dispatch, host
+    assembly of batch k+1 overlapping device execution of batch k,
+    `block_until_ready` only at result delivery.
+"""
+
+from repro.serve.corpus import ShardedCorpus
+from repro.serve.frontend import ProfileService, ServeAnswer
+from repro.serve.queue import AdmissionQueue, QueryRejected, QueueStats
+from repro.serve.rounds import RoundLoop
+
+__all__ = [
+    "AdmissionQueue",
+    "ProfileService",
+    "QueryRejected",
+    "QueueStats",
+    "RoundLoop",
+    "ServeAnswer",
+    "ShardedCorpus",
+]

@@ -253,7 +253,7 @@ def test_streaming_ref_cache_keyed_by_generation():
     sp = StreamingProfile(m, 2)
     sp.append(a)
     d_a = sp.query(q).p.copy()
-    assert len(sp._ref_cache) == 1          # state cached for the corpus
+    assert len(sp._refs._sides) == 1        # side cached for the corpus
     # same-length content change, the way a trim/rescale would do it:
     # mutate the series and bump the generation WITHOUT changing n
     b = rng.normal(size=60)
@@ -265,5 +265,39 @@ def test_streaming_ref_cache_keyed_by_generation():
     np.testing.assert_array_equal(d_b, fresh.query(q).p)
     assert not np.array_equal(d_a, d_b), "stale cached stats served"
     # and repeated queries still HIT the cache (no rebuild per call)
-    state = sp._ref_state()
-    assert sp._ref_state() is state
+    side = sp._ref_side()
+    assert sp._ref_side() is side
+
+
+def test_reference_cache_shared_helper_staleness():
+    """The factored-out `core.resident.ReferenceCache` (now behind BOTH
+    `StreamingProfile.query` and `serve.ShardedCorpus`) enforces the same
+    generation-keyed staleness contract directly: same generation hits,
+    bumped generation rebuilds, plans are per-side."""
+    from repro.core.resident import ReferenceCache, build_side
+
+    rng = np.random.default_rng(7)
+    m = 8
+    a, b = rng.normal(size=60), rng.normal(size=60)
+    cache = ReferenceCache(m, side_max=2, plan_max=2)
+    built = []
+
+    def builder(ts):
+        def build():
+            built.append(1)
+            return build_side(ts, m)
+        return build
+
+    s0 = cache.side((0, True), builder(a))
+    assert cache.side((0, True), builder(a)) is s0 and len(built) == 1
+    # same length, new generation: must rebuild, and the stats must differ
+    s1 = cache.side((1, True), builder(b))
+    assert s1 is not s0 and len(built) == 2
+    assert not np.array_equal(np.asarray(s0.stats.mu),
+                              np.asarray(s1.stats.mu))
+    # plans are GEOMETRY-keyed: equal-length sides share one entry (a
+    # 64-series equal-length corpus plans once), distinct query shapes miss
+    p = cache.plan_for(s1, 23)
+    assert cache.plan_for(s1, 23) is p
+    assert cache.plan_for(s0, 23) is p
+    assert cache.plan_for(s1, 17) is not p

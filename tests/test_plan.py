@@ -304,18 +304,19 @@ def test_streaming_query_cache_and_plan_reuse():
     gen = sp._gen
     q = rng.normal(size=30)
     sp.query(q)
-    state = sp._ref_cache[(gen, True)]
-    assert state["normalize"] is True and 23 in state["plans"]
+    side = sp._refs._sides[(gen, True)]
+    assert side.normalize is True
+    assert (side.l, True, 23, 1, None) in sp._refs._plans
     sp.query(q)
-    assert sp._ref_cache[(gen, True)] is state       # state + plan reused
+    assert sp._refs._sides[(gen, True)] is side      # side + plan reused
     d_norm = sp.query(q).p
     sp.normalize = False                 # mode flip must miss the z-norm key
     d_raw = sp.query(q).p
-    assert sp._ref_cache[(gen, False)]["normalize"] is False
+    assert sp._refs._sides[(gen, False)].normalize is False
     assert not np.allclose(d_norm, d_raw)    # raw vs z-norm really differ
     sp.normalize = True
     np.testing.assert_array_equal(sp.query(q).p, d_norm)
-    assert sp._ref_cache[(gen, True)] is state       # LRU kept both modes
+    assert sp._refs._sides[(gen, True)] is side      # LRU kept both modes
 
 
 # -- guard rails --------------------------------------------------------------

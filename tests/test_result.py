@@ -402,22 +402,24 @@ def test_streaming_ref_cache_lru_eviction():
     q = rng.normal(size=30)
     # distinct corpus shapes: each append+query makes a new (n, normalize)
     # key; the LRU must hold the bound, evicting oldest-first
+    first_gen = sp._gen
     for _ in range(StreamingProfile.REF_CACHE_MAX + 3):
         sp.query(q)
         sp.append(rng.normal(size=4))
-    assert len(sp._ref_cache) <= StreamingProfile.REF_CACHE_MAX
-    assert (60, True) not in sp._ref_cache        # the first shape retired
-    # distinct query shapes: the per-state plan cache holds its bound too
+    assert len(sp._refs._sides) <= StreamingProfile.REF_CACHE_MAX
+    assert (first_gen, True) not in sp._refs._sides  # first corpus retired
+    # distinct query shapes: the geometry-keyed plan cache holds its bound
     sp.query(q)
-    state = next(reversed(sp._ref_cache.values()))
+    plans = sp._refs._plans
     for extra in range(StreamingProfile.PLAN_CACHE_MAX + 4):
         sp.query(rng.normal(size=20 + extra))
-    assert len(state["plans"]) <= StreamingProfile.PLAN_CACHE_MAX
+    assert len(plans) <= StreamingProfile.PLAN_CACHE_MAX
     # eviction is LRU, not FIFO: re-touching a plan keeps it resident
-    lqs = list(state["plans"])
+    lqs = [k[2] for k in plans]               # key = (l, norm, lq, k, batch)
     sp.query(rng.normal(size=lqs[0] + sp.m - 1))  # touch oldest
     sp.query(rng.normal(size=199))                # force one eviction
-    assert lqs[0] in state["plans"] and lqs[1] not in state["plans"]
+    keys = [k[2] for k in plans]
+    assert lqs[0] in keys and lqs[1] not in keys
 
 
 def test_streaming_query_result_object():
